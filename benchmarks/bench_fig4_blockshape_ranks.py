@@ -1,0 +1,32 @@
+"""Paper Fig. 4: thread-count (block-shape) distributions per rank.
+
+The paper observes atax/BiCG prefer small thread counts and matVec2D
+prefers large ones; the TPU analogue is the primary block-size
+histogram per rank (kernel-dependent preference visible the same way).
+"""
+from __future__ import annotations
+
+from collections import Counter
+
+from benchmarks.common import rank_split
+from benchmarks.bench_table5_rank_stats import _block_metric
+
+
+def fig4(sweeps) -> dict:
+    out = {}
+    for name, pts in sweeps.items():
+        r1, r2 = rank_split(pts)
+        out[name] = {
+            "rank1": dict(Counter(int(_block_metric(p)) for p in r1)),
+            "rank2": dict(Counter(int(_block_metric(p)) for p in r2)),
+        }
+    return out
+
+
+def run(sweeps) -> list:
+    lines = []
+    for name, hists in fig4(sweeps).items():
+        for rank, hist in hists.items():
+            body = " ".join(f"{k}:{v}" for k, v in sorted(hist.items()))
+            lines.append(f"fig4/{name}/{rank},0,{body}")
+    return lines

@@ -1,0 +1,43 @@
+"""Paper Fig. 5: execution time predicted from static instruction mixes.
+
+Normalized measured vs predicted times per kernel, mean absolute error
+(the paper reports MAE ~= 1.0 on the worst kernel) and Spearman rank
+correlation (the property autotuning actually needs).
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core import spearman
+
+
+def fig5(sweeps) -> list:
+    rows = []
+    for name, pts in sweeps.items():
+        meas = np.array([p.measured_s for p in pts])
+        pred = np.array([p.predicted_s for p in pts])
+        if len(pts) < 3 or meas.std() == 0:
+            continue
+        # paper protocol: normalize, sort ascending by measured
+        mn = meas / meas.max()
+        pn = pred / pred.max()
+        order = np.argsort(mn)
+        mae = float(np.abs(mn[order] - pn[order]).mean())
+        rho = spearman(meas, pred)
+        top1_pred = int(np.argmin(pred))
+        top_decile = set(np.argsort(meas)[:max(1, len(pts) // 4)])
+        rows.append({"kernel": name, "n": len(pts), "mae": mae,
+                     "spearman": rho,
+                     "static_pick_in_top_quartile":
+                         top1_pred in top_decile})
+    return rows
+
+
+def run(sweeps) -> list:
+    return [
+        ("fig5/{kernel},{n},mae={mae:.3f} spearman={sp:.3f} "
+         "static_pick_top25%={hit}").format(
+            kernel=r["kernel"], n=r["n"], mae=r["mae"],
+            sp=r["spearman"], hit=r["static_pick_in_top_quartile"])
+        for r in fig5(sweeps)
+    ]

@@ -1,0 +1,41 @@
+"""Paper Fig. 7: the occupancy-calculator display — thread / register /
+shared-memory impact curves for the current kernel (top) and the
+potential optimization (bottom).
+
+For the atax kernel on Kepler (the paper's Fig. 7 subject): occupancy
+as a function of threads-per-block at the kernel's current register
+usage (R^u=27) vs the optimized target (R^u + R* headroom), emitted as
+CSV curve points.
+"""
+from __future__ import annotations
+
+from repro.core import GPU_TABLE, cuda_occupancy, suggest_cuda_params
+
+
+def fig7(kernel: str = "atax", gpu_name: str = "kepler",
+         r_current: int = 27) -> dict:
+    gpu = GPU_TABLE[gpu_name]
+    sugg = suggest_cuda_params(r_current, 0, gpu)
+    r_opt = r_current + sugg["reg_headroom"]
+    threads = list(range(32, gpu.threads_per_block + 1, 64))
+    return {
+        "kernel": kernel, "gpu": gpu_name,
+        "r_current": r_current, "r_optimized": r_opt,
+        "current": [(t, cuda_occupancy(t, r_current, 0, gpu).occupancy)
+                    for t in threads],
+        "potential": [(t, cuda_occupancy(t, r_opt, 0, gpu).occupancy)
+                      for t in threads],
+    }
+
+
+def run(_sweeps=None) -> list:
+    out = []
+    for kernel, gpu, ru in (("atax", "kepler", 27),
+                            ("matVec2D", "maxwell", 13)):
+        d = fig7(kernel, gpu, ru)
+        cur = " ".join(f"{t}:{o:.2f}" for t, o in d["current"][::2])
+        pot = " ".join(f"{t}:{o:.2f}" for t, o in d["potential"][::2])
+        out.append(f"fig7/{kernel}/{gpu}/current[R={d['r_current']}],0,{cur}")
+        out.append(f"fig7/{kernel}/{gpu}/potential[R={d['r_optimized']}],0,"
+                   f"{pot}")
+    return out

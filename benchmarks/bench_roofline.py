@@ -1,0 +1,92 @@
+"""Roofline table (deliverable g): reads the dry-run artifacts under
+``experiments/dryrun/`` and prints the three terms per (arch x shape x
+mesh) cell, dominant bottleneck, MODEL_FLOPS ratio, and a note on what
+would move the dominant term.
+"""
+from __future__ import annotations
+
+import glob
+import json
+import os
+from typing import Dict, List, Optional
+
+from repro.core.hw import TPU_V5E
+from repro.core.roofline import RooflineTerms
+
+NOTES = {
+    ("compute", "train"): "raise MXU efficiency: fewer microbatches / "
+                          "fused attention kernel",
+    ("memory", "train"): "cut HBM traffic: fewer microbatches (weight "
+                         "re-gathers), selective remat",
+    ("collective", "train"): "reduce-scatter grads instead of "
+                             "all-reduce; overlap layer all-gathers",
+    ("compute", "prefill"): "bigger attention chunks; bf16 logits",
+    ("memory", "prefill"): "fuse attention (flash kernel); shrink f32 "
+                           "intermediates",
+    ("collective", "prefill"): "shard KV cache writes; avoid "
+                               "re-gathering weights per chunk",
+    ("compute", "decode"): "batch decode steps; speculative decoding",
+    ("memory", "decode"): "decode is weight/KV-bandwidth bound: "
+                          "quantize KV or shard cache seq (split-KV)",
+    ("collective", "decode"): "split-KV sharding moves logits "
+                              "all-reduce to tiny partial-softmax sums",
+}
+
+
+def load_records(dirpath: str = "experiments/dryrun") -> List[Dict]:
+    recs = []
+    for path in sorted(glob.glob(os.path.join(dirpath, "*.json"))):
+        with open(path) as f:
+            recs.append(json.load(f))
+    return recs
+
+
+def terms_from_record(r: Dict) -> Optional[RooflineTerms]:
+    if r.get("status") != "ok":
+        return None
+    s = TPU_V5E
+    t_c = (r["flops"] / s.peak_flops_bf16
+           + r.get("vpu_flops", 0.0) / s.vpu_flops
+           + r.get("transcendentals", 0.0) / s.transcendental_flops)
+    t_m = r["bytes_accessed"] / s.hbm_bw
+    t_x = r["collective_bytes"] / (s.ici_bw_per_link * r["ici_links"])
+    terms = {"compute": t_c, "memory": t_m, "collective": t_x}
+    dom = max(terms, key=terms.get)
+    useful = r["model_flops"] / max(r["flops"] * r["chips"], 1.0)
+    t_useful = (r["model_flops"] / r["chips"]) / s.peak_flops_bf16
+    frac = t_useful / max(t_c, t_m, t_x, 1e-30)
+    return RooflineTerms(
+        name=f"{r['arch']}/{r['shape']}/{r['mesh']}",
+        chips=r["chips"], hlo_flops=r["flops"],
+        hlo_bytes=r["bytes_accessed"],
+        collective_bytes=r["collective_bytes"],
+        model_flops=r["model_flops"], t_compute=t_c, t_memory=t_m,
+        t_collective=t_x, dominant=dom, useful_ratio=useful,
+        roofline_frac=frac,
+        note=NOTES.get((dom, r.get("kind", "train")), ""),
+        collectives_by_kind=r.get("collectives_by_kind"),
+    )
+
+
+def run(dirpath: str = "experiments/dryrun") -> List[str]:
+    out = []
+    for r in load_records(dirpath):
+        name = f"roofline/{r['arch']}/{r['shape']}/{r['mesh']}"
+        variant = r.get("variant", "baseline")
+        if variant != "baseline":
+            name += f"[{variant}]"
+        if r.get("status") == "skipped":
+            out.append(f"{name},0,SKIP {r.get('reason','')}")
+            continue
+        if r.get("status") != "ok":
+            out.append(f"{name},0,ERROR {r.get('error','')[:100]}")
+            continue
+        t = terms_from_record(r)
+        bound = max(t.t_compute, t.t_memory, t.t_collective)
+        out.append(
+            ("{n},{us:.0f},t_c={tc:.3e} t_m={tm:.3e} t_x={tx:.3e} "
+             "dom={d} useful={u:.3f} roofline={f:.3f} note={note}")
+            .format(n=name, us=bound * 1e6, tc=t.t_compute,
+                    tm=t.t_memory, tx=t.t_collective, d=t.dominant,
+                    u=t.useful_ratio, f=t.roofline_frac, note=t.note))
+    return out

@@ -1,0 +1,57 @@
+"""Paper Table V: statistics for autotuned kernels, top performers
+(Rank 1) vs poor performers (Rank 2).
+
+The paper reports occupancy / register-instruction / thread statistics
+per rank; the TPU columns are pipeline occupancy / VMEM bytes (the
+register-file analogue) / primary block size.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks.common import SweepPoint, rank_split
+
+
+def _block_metric(p) -> float:
+    for key in ("bm", "bq", "bz"):
+        if key in p.params:
+            return float(p.params[key])
+    return float(np.prod([v for v in p.params.values()
+                          if isinstance(v, int)]))
+
+
+def table5(sweeps) -> list:
+    rows = []
+    for name, pts in sweeps.items():
+        for rank_name, rank in zip(("rank1", "rank2"), rank_split(pts)):
+            if not rank:
+                continue
+            occ = np.array([p.occupancy for p in rank])
+            vmem = np.array([p.vmem_bytes for p in rank], float)
+            blocks = np.array([_block_metric(p) for p in rank])
+            rows.append({
+                "kernel": name, "rank": rank_name, "n": len(rank),
+                "occ_mean": float(occ.mean()),
+                "occ_std": float(occ.std()),
+                "vmem_mean": float(vmem.mean()),
+                "vmem_std": float(vmem.std()),
+                "block_p25": float(np.percentile(blocks, 25)),
+                "block_p50": float(np.percentile(blocks, 50)),
+                "block_p75": float(np.percentile(blocks, 75)),
+            })
+    return rows
+
+
+def run(sweeps) -> list:
+    rows = table5(sweeps)
+    out = []
+    for r in rows:
+        out.append(
+            "table5/{kernel}/{rank},{n},occ={om:.3f}±{os:.3f} "
+            "vmem={vm:.2e}±{vs:.2e} blockP25/50/75={b25:.0f}/{b50:.0f}/"
+            "{b75:.0f}".format(
+                kernel=r["kernel"], rank=r["rank"], n=r["n"],
+                om=r["occ_mean"], os=r["occ_std"], vm=r["vmem_mean"],
+                vs=r["vmem_std"], b25=r["block_p25"], b50=r["block_p50"],
+                b75=r["block_p75"]))
+    return out

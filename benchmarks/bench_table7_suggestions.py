@@ -1,0 +1,94 @@
+"""Paper Table VII: suggested parameters to reach theoretical occupancy.
+
+Two parts:
+
+1. **Faithful reproduction** — the exact CUDA occupancy equations
+   (Eqs. 1-5, Table I constants) evaluated at the paper's own register
+   pressures for atax/BiCG/ex14FJ/matVec2D on Fermi/Kepler/Maxwell.
+   Where the paper prints occ* (e.g. BiCG/Fermi 0.75 at R^u=27), our
+   implementation must agree — this validates the math.
+
+2. **TPU adaptation** — block-shape suggestions ranked by the static
+   pipeline-occupancy model (suggest_block_shapes).
+"""
+from __future__ import annotations
+
+from repro.core import (GPU_TABLE, cuda_occupancy, suggest_block_shapes,
+                        suggest_cuda_params)
+
+# (kernel, gpu) -> R^u from the paper's Table VII "[R^u : R*]" column.
+PAPER_RU = {
+    ("atax", "fermi"): 21, ("atax", "kepler"): 27, ("atax", "maxwell"): 30,
+    ("bicg", "fermi"): 27, ("bicg", "kepler"): 28, ("bicg", "maxwell"): 32,
+    ("ex14FJ", "fermi"): 30, ("ex14FJ", "kepler"): 31,
+    ("ex14FJ", "maxwell"): 28,
+    ("matVec2D", "fermi"): 20, ("matVec2D", "kepler"): 20,
+    ("matVec2D", "maxwell"): 13,
+}
+
+# paper's printed occ* for the same rows (Table VII).
+PAPER_OCC = {
+    ("atax", "fermi"): 1.0, ("atax", "kepler"): 1.0,
+    ("atax", "maxwell"): 1.0,
+    ("bicg", "fermi"): 0.75, ("bicg", "kepler"): 1.0,
+    ("bicg", "maxwell"): 0.71,
+    ("ex14FJ", "fermi"): 0.71, ("ex14FJ", "kepler"): 1.0,
+    ("ex14FJ", "maxwell"): 1.0,
+    ("matVec2D", "fermi"): 0.92, ("matVec2D", "kepler"): 1.0,
+    ("matVec2D", "maxwell"): 1.0,
+}
+
+# Rows whose occ* is fully determined by the published R^u (register-
+# limited on Fermi) or unconstrained (occ*=1.0): exactly reproducible.
+# The remaining two rows (matVec2D/fermi 0.92, bicg/maxwell 0.71)
+# embed the kernels' *unpublished* shared-memory usage S^u; with
+# S^u unknown our calculator upper-bounds them (occ* >= paper).
+EXACT_ROWS = {k for k, v in PAPER_OCC.items() if v == 1.0} | {
+    ("bicg", "fermi"), ("ex14FJ", "fermi")}
+
+
+def table7_cuda() -> list:
+    rows = []
+    for (kernel, gpu_name), ru in PAPER_RU.items():
+        gpu = GPU_TABLE[gpu_name]
+        sugg = suggest_cuda_params(ru, 0, gpu)
+        rows.append({
+            "kernel": kernel, "gpu": gpu_name, "r_u": ru,
+            "occ_star": sugg["occ_star"],
+            "paper_occ_star": PAPER_OCC[(kernel, gpu_name)],
+            "threads": sugg["threads"][-5:],
+            "reg_headroom": sugg["reg_headroom"],
+            "shmem_star": sugg["shmem_star"],
+        })
+    return rows
+
+
+def table7_tpu() -> list:
+    rows = []
+    for (m, n, k) in ((2048, 2048, 2048), (4096, 4096, 4096)):
+        best = suggest_block_shapes(m, n, k)[:3]
+        rows.append({
+            "problem": f"matmul_{m}",
+            "suggestions": [(bm_bn_bk, round(occ.occupancy, 3))
+                            for bm_bn_bk, occ in best],
+        })
+    return rows
+
+
+def run(_sweeps=None) -> list:
+    out = []
+    for r in table7_cuda():
+        exact = (r["kernel"], r["gpu"]) in EXACT_ROWS
+        match = (abs(r["occ_star"] - r["paper_occ_star"]) < 0.05
+                 if exact else
+                 r["occ_star"] >= r["paper_occ_star"] - 0.05)
+        out.append(
+            "table7/cuda/{k}/{g},0,occ*={o:.2f} paper={p:.2f} "
+            "match={m} T*={t} R+={rh} S*={s}".format(
+                k=r["kernel"], g=r["gpu"], o=r["occ_star"],
+                p=r["paper_occ_star"], m=match, t=r["threads"],
+                rh=r["reg_headroom"], s=r["shmem_star"]))
+    for r in table7_tpu():
+        out.append("table7/tpu/{p},0,{s}".format(p=r["problem"],
+                                                 s=r["suggestions"]))
+    return out

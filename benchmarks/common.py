@@ -1,0 +1,105 @@
+"""Shared benchmark harness.
+
+One empirical sweep per kernel feeds every paper-table benchmark
+(Table V / VI / VII, Fig. 4 / 5 / 6) so the suite times each variant
+exactly once.  The empirical arm on this CPU box times the
+interpret-mode Pallas execution (grid-step overhead varies with block
+shape, the same knob the static model ranks); absolute TPU wall-times
+are out of reach here — DESIGN.md §3 records the substitution — but
+rank order, the quantity the paper's claims live on, is measured.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Dict, List, Optional
+
+import jax
+import numpy as np
+
+from repro.core import (KernelTuner, TunableKernel, default_tpu_model,
+                        intensity)
+
+__all__ = ["SweepPoint", "sweep_kernel", "paper_kernels", "median_time",
+           "rank_split"]
+
+
+@dataclasses.dataclass
+class SweepPoint:
+    params: Dict
+    measured_s: float
+    predicted_s: float
+    occupancy: float
+    vmem_bytes: int
+    grid_steps: int
+    intensity: float
+    fits: bool
+
+
+def median_time(fn, inputs, repeats: int = 3) -> float:
+    out = fn(*inputs)
+    jax.block_until_ready(out)
+    ts = []
+    for _ in range(repeats):
+        t0 = time.perf_counter()
+        out = fn(*inputs)
+        jax.block_until_ready(out)
+        ts.append(time.perf_counter() - t0)
+    return float(np.median(ts))
+
+
+def sweep_kernel(tk: TunableKernel, repeats: int = 3,
+                 max_points: Optional[int] = None) -> List[SweepPoint]:
+    model = default_tpu_model(mode="max")
+    inputs = tk.make_inputs()
+    pts = []
+    space = tk.space.enumerate()
+    if max_points:
+        space = space[:max_points]
+    for p in space:
+        info = tk.static_info(p)
+        fn = tk.build(p)
+        t = median_time(fn, inputs, repeats)
+        occ = info.occupancy
+        pts.append(SweepPoint(
+            params=p, measured_s=t,
+            predicted_s=info.static_time(model),
+            occupancy=occ.occupancy if occ else 1.0,
+            vmem_bytes=occ.vmem_bytes if occ else 0,
+            grid_steps=occ.grid_steps if occ else 1,
+            intensity=intensity(info.mix),
+            fits=occ.fits_vmem if occ else True,
+        ))
+    return pts
+
+
+def rank_split(points: List[SweepPoint]):
+    """Paper protocol: sort by measured time, split at the median.
+    Rank 1 = good performers (fast half), Rank 2 = poor performers."""
+    srt = sorted(points, key=lambda p: p.measured_s)
+    half = len(srt) // 2
+    return srt[:half], srt[half:]
+
+
+def paper_kernels(small: bool = False) -> Dict[str, TunableKernel]:
+    """The Table IV kernel suite (+ the LM hot-spots)."""
+    from repro.kernels import (make_tunable_atax, make_tunable_bicg,
+                               make_tunable_flash, make_tunable_jacobi3d,
+                               make_tunable_matmul, make_tunable_matvec)
+    if small:
+        return {
+            "atax": make_tunable_atax(512, 512),
+            "bicg": make_tunable_bicg(512, 512),
+            "ex14FJ": make_tunable_jacobi3d(32, 32, 64),
+            "matVec2D": make_tunable_matvec(1024, 512),
+            "matmul": make_tunable_matmul(256, 256, 256),
+            "flash": make_tunable_flash(1, 2, 256, 64),
+        }
+    return {
+        "atax": make_tunable_atax(2048, 1024),
+        "bicg": make_tunable_bicg(2048, 1024),
+        "ex14FJ": make_tunable_jacobi3d(64, 64, 128),
+        "matVec2D": make_tunable_matvec(2048, 2048),
+        "matmul": make_tunable_matmul(512, 512, 512),
+        "flash": make_tunable_flash(1, 4, 512, 64),
+    }

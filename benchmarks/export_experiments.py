@@ -1,0 +1,88 @@
+"""Render the §Dry-run / §Roofline markdown tables for EXPERIMENTS.md
+from the artifacts in experiments/dryrun/.
+
+    PYTHONPATH=src python -m benchmarks.export_experiments [--variants]
+"""
+from __future__ import annotations
+
+import argparse
+import glob
+import json
+import os
+
+from benchmarks.bench_roofline import load_records, terms_from_record
+
+
+def fmt(x, digits=3):
+    if x == 0:
+        return "0"
+    return f"{x:.{digits}e}"
+
+
+def roofline_markdown(records) -> str:
+    lines = [
+        "| cell | chips | mb | t_c (s) | t_m (s) | t_x (s) | dominant | "
+        "useful | roofline |",
+        "|---|---|---|---|---|---|---|---|---|",
+    ]
+    for r in sorted(records, key=lambda r: (r["arch"], r["shape"],
+                                            r["mesh"])):
+        name = f"{r['arch']}/{r['shape']}/{r['mesh']}"
+        if r.get("status") == "skipped":
+            lines.append(f"| {name} | — | — | — | — | — | SKIP | — | — |")
+            continue
+        if r.get("status") != "ok":
+            lines.append(f"| {name} | — | — | — | — | — | ERROR | — | — |")
+            continue
+        t = terms_from_record(r)
+        lines.append(
+            "| {n} | {c} | {mb} | {tc} | {tm} | {tx} | {d} | {u:.3f} | "
+            "{f:.3f} |".format(
+                n=name, c=r["chips"], mb=r.get("microbatches", 1),
+                tc=fmt(t.t_compute), tm=fmt(t.t_memory),
+                tx=fmt(t.t_collective), d=t.dominant,
+                u=t.useful_ratio, f=t.roofline_frac))
+    return "\n".join(lines)
+
+
+def dryrun_markdown(records) -> str:
+    lines = [
+        "| cell | status | FLOPs/dev | HBM B/dev | coll B/dev | "
+        "args B/dev | compile (s) |",
+        "|---|---|---|---|---|---|---|",
+    ]
+    for r in sorted(records, key=lambda r: (r["arch"], r["shape"],
+                                            r["mesh"])):
+        name = f"{r['arch']}/{r['shape']}/{r['mesh']}"
+        if r.get("status") != "ok":
+            lines.append(f"| {name} | {r.get('status')} | — | — | — | — "
+                         f"| — |")
+            continue
+        lines.append(
+            "| {n} | ok | {f} | {b} | {x} | {a} | {c} |".format(
+                n=name, f=fmt(r["flops"]), b=fmt(r["bytes_accessed"]),
+                x=fmt(r["collective_bytes"]),
+                a=fmt(r["arg_bytes_per_device"]),
+                c=r.get("compile_s", "")))
+    return "\n".join(lines)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--dir", default="experiments/dryrun")
+    ap.add_argument("--section", choices=["roofline", "dryrun", "both"],
+                    default="both")
+    args = ap.parse_args()
+    recs = [r for r in load_records(args.dir)
+            if r.get("variant", "baseline") == "baseline"]
+    if args.section in ("dryrun", "both"):
+        print("### Dry-run artifacts (per-device, loop-aware)\n")
+        print(dryrun_markdown(recs))
+        print()
+    if args.section in ("roofline", "both"):
+        print("### Roofline table\n")
+        print(roofline_markdown(recs))
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,73 @@
+"""Benchmark driver: one function per paper table/figure.
+
+    PYTHONPATH=src python -m benchmarks.run [--small] [--skip-roofline]
+
+Prints ``name,us_per_call,derived`` CSV lines:
+  table5/*  rank statistics (occupancy / VMEM / block percentiles)
+  fig4/*    block-shape histograms per rank
+  fig5/*    predicted-vs-measured MAE + Spearman
+  table6/*  static-vs-dynamic instruction-mix error + intensity
+  table7/*  CUDA occ* (validated against the paper) + TPU suggestions
+  fig6/*    search-space reduction (static / static+rule)
+  roofline/* three-term roofline per (arch x shape x mesh) dry-run cell
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--small", action="store_true",
+                    help="small kernel sizes (fast CI mode)")
+    ap.add_argument("--repeats", type=int, default=3)
+    ap.add_argument("--skip-roofline", action="store_true")
+    ap.add_argument("--skip-sweeps", action="store_true",
+                    help="only table7 + roofline (no kernel timing)")
+    args = ap.parse_args()
+
+    from benchmarks import (bench_fig4_blockshape_ranks as fig4,
+                            bench_fig5_predicted_time as fig5,
+                            bench_fig6_search_reduction as fig6,
+                            bench_fig7_occupancy_calc as fig7,
+                            bench_roofline as roofline,
+                            bench_table5_rank_stats as table5,
+                            bench_table6_mix_error as table6,
+                            bench_table7_suggestions as table7)
+    from benchmarks.common import paper_kernels, sweep_kernel
+
+    lines = []
+    t0 = time.time()
+
+    # Table VII / Fig. 7 first: pure arithmetic, validates the faithful
+    # occupancy equations against the paper's own numbers.
+    lines += table7.run()
+    lines += fig7.run()
+
+    if not args.skip_sweeps:
+        kernels = paper_kernels(small=args.small)
+        sweeps = {}
+        for name, tk in kernels.items():
+            t1 = time.time()
+            sweeps[name] = sweep_kernel(tk, repeats=args.repeats)
+            print(f"# swept {name}: {len(sweeps[name])} variants in "
+                  f"{time.time()-t1:.1f}s", file=sys.stderr)
+        lines += table5.run(sweeps)
+        lines += fig4.run(sweeps)
+        lines += fig5.run(sweeps)
+        lines += table6.run(kernels)
+        lines += fig6.run(kernels, sweeps)
+
+    if not args.skip_roofline:
+        lines += roofline.run()
+
+    for line in lines:
+        print(line)
+    print(f"# total {time.time()-t0:.1f}s, {len(lines)} rows",
+          file=sys.stderr)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,9 @@
+"""Root conftest: make `benchmarks` (and `src/repro` as fallback)
+importable regardless of how pytest is invoked."""
+import os
+import sys
+
+_ROOT = os.path.dirname(os.path.abspath(__file__))
+for p in (_ROOT, os.path.join(_ROOT, "src")):
+    if p not in sys.path:
+        sys.path.insert(0, p)

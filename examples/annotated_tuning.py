@@ -1,0 +1,51 @@
+"""Orio-style annotated tuning (paper Fig. 3 workflow).
+
+    PYTHONPATH=src python examples/annotated_tuning.py
+
+Declare the tuning space as a PerfTuning annotation (the paper's
+syntax), bind it to a Pallas kernel, and let the static analyzer pick
+the launch configuration without running anything.
+"""
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import KernelTuner, annotate
+from repro.kernels.matmul import matmul_pallas, matmul_static_info
+
+M = N = K = 1024
+
+SPEC = """
+/*@ begin PerfTuning (
+ def performance_params {
+ param bm[] = [128, 256, 512];
+ param bn[] = [128, 256, 512];
+ param bk[] = [128, 256, 512];
+ }
+) @*/
+"""
+
+
+def main():
+    kernel = annotate(
+        "matmul_annotated", SPEC,
+        build=lambda p: functools.partial(
+            matmul_pallas, bm=p["bm"], bn=p["bn"], bk=p["bk"]),
+        static_info=lambda p: matmul_static_info(M, N, K, jnp.float32, p),
+        make_inputs=lambda: (
+            jax.random.normal(jax.random.PRNGKey(0), (M, K)),
+            jax.random.normal(jax.random.PRNGKey(1), (K, N))),
+    )
+    print(f"annotation parsed: {kernel.space.size} variants "
+          f"over axes {list(kernel.space.axes)}")
+    tuner = KernelTuner(kernel, repeats=2)
+    rep = tuner.tune(mode="static")
+    print(rep.summary())
+    print(f"suggested launch: {rep.best_params} "
+          f"(predicted {rep.best_predicted_s*1e6:.1f} us, "
+          f"0 kernels executed)")
+
+
+if __name__ == "__main__":
+    main()

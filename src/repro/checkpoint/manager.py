@@ -1,0 +1,181 @@
+"""Checkpoint manager: async save, atomic commit, retention, elastic
+restore onto a different mesh.
+
+Layout (one directory per step)::
+
+    <dir>/step_000042/
+        arrays.npz        flattened leaves, keys = tree paths
+        treedef.pkl       pickled treedef (Param aux dims ride along)
+        meta.json         {"step": 42, "data_step": ..., "complete": true}
+
+Atomicity: saves write to ``step_XXXX.tmp`` and ``os.rename`` to commit;
+an interrupted save never shadows the previous good checkpoint (crash-
+consistent restart, the fault-tolerance contract).  Async: a single
+background worker thread; ``wait()`` joins outstanding saves, and a new
+save blocks until the previous finishes (bounded memory).
+
+Elastic resharding: arrays are stored unsharded (single-process box;
+multi-host deployment would write per-host shards keyed by
+process_index with the same manifest).  ``restore(..., mesh=, rules=)``
+device_puts every leaf with shardings resolved against the *target*
+mesh — restoring a 256-chip checkpoint onto 512 chips (or vice versa)
+is the same call with a different mesh.
+"""
+from __future__ import annotations
+
+import json
+import os
+import pickle
+import queue
+import shutil
+import threading
+import time
+from typing import Any, Dict, Optional
+
+import jax
+import numpy as np
+
+from repro.distributed.sharding import Rules, WEIGHT_RULES
+from repro.models.params import Param, param_shardings
+
+__all__ = ["CheckpointManager"]
+
+
+def _flatten_with_names(tree):
+    flat, treedef = jax.tree_util.tree_flatten_with_path(tree)
+    names, leaves = [], []
+    for path, leaf in flat:
+        names.append(jax.tree_util.keystr(path))
+        leaves.append(leaf)
+    return names, leaves, treedef
+
+
+class CheckpointManager:
+    def __init__(self, directory: str, keep: int = 3,
+                 async_save: bool = True):
+        self.directory = directory
+        self.keep = keep
+        self.async_save = async_save
+        os.makedirs(directory, exist_ok=True)
+        self._q: "queue.Queue" = queue.Queue(maxsize=1)
+        self._worker: Optional[threading.Thread] = None
+        self._error: Optional[BaseException] = None
+        if async_save:
+            self._worker = threading.Thread(target=self._run, daemon=True)
+            self._worker.start()
+
+    # -- paths ---------------------------------------------------------------
+    def _step_dir(self, step: int) -> str:
+        return os.path.join(self.directory, f"step_{step:08d}")
+
+    def all_steps(self):
+        out = []
+        for name in os.listdir(self.directory):
+            if name.startswith("step_") and not name.endswith(".tmp"):
+                meta = os.path.join(self.directory, name, "meta.json")
+                if os.path.exists(meta):
+                    out.append(int(name.split("_")[1]))
+        return sorted(out)
+
+    def latest_step(self) -> Optional[int]:
+        steps = self.all_steps()
+        return steps[-1] if steps else None
+
+    # -- save ----------------------------------------------------------------
+    def save(self, step: int, tree: Dict[str, Any],
+             extra_meta: Optional[Dict] = None) -> None:
+        """tree: e.g. {"params": ..., "opt": ..., "data_step": int}."""
+        names, leaves, treedef = _flatten_with_names(tree)
+        host_leaves = [np.asarray(l) for l in leaves]
+        payload = (step, names, host_leaves, treedef, extra_meta or {})
+        if self.async_save:
+            if self._error:
+                raise RuntimeError("previous async save failed") \
+                    from self._error
+            self._q.put(payload)      # blocks if a save is in flight
+        else:
+            self._write(*payload)
+
+    def _run(self):
+        while True:
+            payload = self._q.get()
+            if payload is None:
+                return
+            try:
+                self._write(*payload)
+            except BaseException as e:   # surfaced on next save/wait
+                self._error = e
+            finally:
+                self._q.task_done()
+
+    def _write(self, step, names, host_leaves, treedef, extra_meta):
+        final = self._step_dir(step)
+        tmp = final + ".tmp"
+        if os.path.exists(tmp):
+            shutil.rmtree(tmp)
+        os.makedirs(tmp)
+        np.savez(os.path.join(tmp, "arrays.npz"),
+                 **{n: l for n, l in zip(names, host_leaves)})
+        with open(os.path.join(tmp, "treedef.pkl"), "wb") as f:
+            pickle.dump(treedef, f)
+        meta = {"step": int(step), "time": time.time(),
+                "complete": True, **extra_meta}
+        with open(os.path.join(tmp, "meta.json"), "w") as f:
+            json.dump(meta, f)
+        if os.path.exists(final):
+            shutil.rmtree(final)
+        os.rename(tmp, final)          # atomic commit
+        self._gc()
+
+    def wait(self):
+        if self.async_save:
+            self._q.join()
+            if self._error:
+                raise RuntimeError("async save failed") from self._error
+
+    def _gc(self):
+        steps = self.all_steps()
+        for s in steps[:-self.keep] if self.keep > 0 else []:
+            shutil.rmtree(self._step_dir(s), ignore_errors=True)
+
+    # -- restore ---------------------------------------------------------------
+    def restore(self, step: Optional[int] = None, mesh=None,
+                rules: Rules = WEIGHT_RULES) -> Dict[str, Any]:
+        """Load a checkpoint; with ``mesh`` the params/opt leaves are
+        device_put with shardings resolved against that mesh (elastic)."""
+        if step is None:
+            step = self.latest_step()
+        if step is None:
+            raise FileNotFoundError(f"no checkpoints in {self.directory}")
+        d = self._step_dir(step)
+        with open(os.path.join(d, "treedef.pkl"), "rb") as f:
+            treedef = pickle.load(f)
+        npz = np.load(os.path.join(d, "arrays.npz"))
+        names, _, _ = None, None, None
+        # rebuild leaves in treedef order
+        dummy = jax.tree_util.tree_unflatten(
+            treedef, list(range(treedef.num_leaves)))
+        flat, _ = jax.tree_util.tree_flatten_with_path(dummy)
+        leaves = [None] * treedef.num_leaves
+        for path, idx in flat:
+            leaves[idx] = npz[jax.tree_util.keystr(path)]
+        tree = jax.tree_util.tree_unflatten(treedef, leaves)
+        if mesh is not None:
+            def put(p):
+                if isinstance(p, Param):
+                    from repro.distributed.sharding import named_sharding
+                    s = named_sharding(p.dims, p.value.shape, rules, mesh)
+                    return Param(jax.device_put(p.value, s), p.dims)
+                return p
+            tree = jax.tree.map(put, tree,
+                                is_leaf=lambda x: isinstance(x, Param))
+        return tree
+
+    def meta(self, step: int) -> Dict:
+        with open(os.path.join(self._step_dir(step), "meta.json")) as f:
+            return json.load(f)
+
+    def close(self):
+        if self.async_save and self._worker is not None:
+            self._q.put(None)
+            self._worker.join(timeout=5)

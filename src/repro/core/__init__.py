@@ -1,0 +1,37 @@
+"""repro.core — the paper's contribution: static & predictive autotuning.
+
+Layers (paper §III):
+  hw         Table I / Table II constants (faithful) + TPU v5e specs
+  mix        instruction-mix extraction (jaxpr + HLO text)
+  occupancy  CUDA Eqs. 1-5 (faithful) + TPU pipeline occupancy
+  predict    Eq. 6 time model, calibration, rank metrics
+  search     exhaustive/random/SA/genetic/Nelder-Mead/static-pruned
+  autotuner  KernelTuner (Pallas) + GraphTuner (sharding/remat, AOT)
+  hlo        collective bytes, op census, remat-duplication
+  roofline   3-term roofline from compiled artifacts
+"""
+from repro.core.hw import (GPU_TABLE, FERMI_M2050, KEPLER_K20, MAXWELL_M40,
+                           GpuSpec, TpuSpec, TPU_V5E, IPC_TABLE, cpi,
+                           tpu_rate_table, dtype_bytes)
+from repro.core.mix import (InstructionMix, mix_from_jaxpr, mix_of_fn,
+                            mix_from_hlo_text, mix_from_cost_analysis,
+                            intensity, classify_boundedness)
+from repro.core.occupancy import (CudaOccupancy, cuda_occupancy,
+                                  suggest_cuda_params, TpuOccupancy,
+                                  tpu_occupancy, suggest_block_shapes)
+from repro.core.predict import (CostModel, default_tpu_model, predict_time,
+                                cuda_eq6_time, calibrate, spearman,
+                                rank_candidates)
+from repro.core.search import (SearchSpace, SearchResult, ExhaustiveSearch,
+                               RandomSearch, SimulatedAnnealing,
+                               GeneticSearch, NelderMeadSearch,
+                               StaticPrunedSearch)
+from repro.core.autotuner import (KernelStaticInfo, TunableKernel,
+                                  TuningReport, KernelTuner, GraphTuner,
+                                  make_intensity_rule)
+from repro.core.annotations import annotate, parse_tuning_spec
+from repro.core.hlo import (collective_stats, op_census, remat_duplication,
+                            analyze_hlo, HloReport, CollectiveStats,
+                            parse_hlo, module_mix, HloModule)
+from repro.core.roofline import (RooflineTerms, roofline_from_artifacts,
+                                 format_roofline_row)

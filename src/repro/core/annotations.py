@@ -1,0 +1,84 @@
+"""Orio-style annotation front-end (paper Fig. 3).
+
+The paper's Orio integration annotates existing loops with a tuning
+spec::
+
+    /*@ begin PerfTuning (
+      def performance_params {
+        param TC[] = range(32,1025,32);
+        param BC[] = range(24,193,24);
+        param UIF[] = range(1,6);
+        param CFLAGS[] = ['', '-use_fast_math'];
+      }
+      ...
+    ) @*/
+
+This module parses that syntax into a :class:`SearchSpace` and binds it
+to a kernel builder, producing a :class:`TunableKernel` the autotuner
+consumes — the same declarative workflow, with Pallas launch parameters
+in place of CUDA thread/block counts.
+"""
+from __future__ import annotations
+
+import ast
+import re
+from typing import Callable, Dict, Optional
+
+from repro.core.autotuner import KernelStaticInfo, TunableKernel
+from repro.core.search import SearchSpace
+
+__all__ = ["parse_tuning_spec", "annotate"]
+
+_BLOCK_RE = re.compile(
+    r"def\s+performance_params\s*\{(.*?)\}", re.DOTALL)
+_PARAM_RE = re.compile(
+    r"param\s+(\w+)\s*\[\s*\]\s*=\s*([^;]+);")
+_RANGE_RE = re.compile(
+    r"range\(\s*(-?\d+)\s*,\s*(-?\d+)\s*(?:,\s*(-?\d+)\s*)?\)")
+
+
+def parse_tuning_spec(spec: str) -> SearchSpace:
+    """Parse a PerfTuning annotation body into a SearchSpace.
+
+    Accepts the paper's forms: ``range(a, b[, step])`` (Python range
+    semantics, upper-exclusive) and bracketed literal lists (numbers or
+    quoted strings).  The ``/*@ begin PerfTuning(...) @*/`` wrapper is
+    optional.
+    """
+    body = spec
+    m = _BLOCK_RE.search(spec)
+    if m:
+        body = m.group(1)
+    axes: Dict[str, tuple] = {}
+    for name, expr in _PARAM_RE.findall(body):
+        expr = expr.strip()
+        rm = _RANGE_RE.fullmatch(expr)
+        if rm:
+            a, b = int(rm.group(1)), int(rm.group(2))
+            step = int(rm.group(3)) if rm.group(3) else 1
+            axes[name] = tuple(range(a, b, step))
+            continue
+        # literal list: reuse Python's literal parser
+        try:
+            vals = ast.literal_eval(expr)
+        except (ValueError, SyntaxError) as e:
+            raise ValueError(f"cannot parse param {name!r}: {expr!r}") \
+                from e
+        if not isinstance(vals, (list, tuple)):
+            vals = (vals,)
+        axes[name] = tuple(vals)
+    if not axes:
+        raise ValueError("no performance_params found in spec")
+    return SearchSpace(axes)
+
+
+def annotate(name: str,
+             spec: str,
+             build: Callable[[Dict], Callable],
+             static_info: Callable[[Dict], KernelStaticInfo],
+             make_inputs: Callable[[], tuple],
+             reference: Optional[Callable] = None) -> TunableKernel:
+    """Bind a PerfTuning annotation to a kernel builder."""
+    return TunableKernel(name=name, space=parse_tuning_spec(spec),
+                         build=build, static_info=static_info,
+                         make_inputs=make_inputs, reference=reference)

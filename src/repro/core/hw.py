@@ -1,0 +1,208 @@
+"""Hardware descriptors.
+
+Two families live here:
+
+1. The *faithful* reproduction of the paper's Table I (GPU hardware
+   constants for Fermi M2050 / Kepler K20 / Maxwell M40) and Table II
+   (instruction throughput in instructions-per-cycle per compute
+   capability).  These feed the faithful CUDA occupancy equations
+   (Eqs. 1-5) and the CPI weights of Eq. 6.
+
+2. The TPU adaptation: chip-level specs for the TPU v5e target (the
+   mesh the dry-run compiles for) and a throughput table playing the
+   role of Table II for the TPU pipelines (MXU / VPU / transcendental /
+   HBM / ICI).
+
+Everything is a frozen dataclass so specs can be hashed into tuning
+cache keys.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict
+
+
+# ---------------------------------------------------------------------------
+# Paper Table I -- GPU hardware constants (faithful).
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class GpuSpec:
+    """One column of the paper's Table I.
+
+    Naming follows the paper's symbols: superscript ``cc`` (compute
+    capability provided) is dropped; subscripts become suffixes.
+    """
+
+    name: str
+    family: str
+    cc: float                     # compute capability
+    multiprocessors: int          # mp
+    cores_per_mp: int
+    gpu_clock_mhz: float
+    mem_clock_mhz: float
+    global_mem_mb: int
+    l2_cache_mb: float
+    constant_mem_b: int
+    shmem_per_block: int          # S_B^cc   (bytes)
+    regs_per_block: int           # R_fs^cc  (register file size per MP)
+    warp_size: int                # W_B
+    threads_per_mp: int           # T_mp^cc
+    threads_per_block: int        # T_B^cc
+    blocks_per_mp: int            # B_mp^cc
+    threads_per_warp: int         # T_W^cc
+    warps_per_mp: int             # W_mp^cc
+    reg_alloc_size: int           # R_B^cc   (register allocation granularity)
+    regs_per_thread: int          # R_T^cc   (max registers per thread)
+
+    @property
+    def shmem_per_mp(self) -> int:
+        """S_mp^cc — shared memory per SM (== per-block limit on these parts)."""
+        return self.shmem_per_block
+
+
+FERMI_M2050 = GpuSpec(
+    name="m2050", family="Fermi", cc=2.0,
+    multiprocessors=14, cores_per_mp=32, gpu_clock_mhz=1147.0,
+    mem_clock_mhz=1546.0, global_mem_mb=3072, l2_cache_mb=0.786,
+    constant_mem_b=65536, shmem_per_block=49152, regs_per_block=32768,
+    warp_size=32, threads_per_mp=1536, threads_per_block=1024,
+    blocks_per_mp=8, threads_per_warp=32, warps_per_mp=48,
+    reg_alloc_size=64, regs_per_thread=63,
+)
+
+KEPLER_K20 = GpuSpec(
+    name="k20", family="Kepler", cc=3.5,
+    multiprocessors=13, cores_per_mp=192, gpu_clock_mhz=824.0,
+    mem_clock_mhz=2505.0, global_mem_mb=11520, l2_cache_mb=1.572,
+    constant_mem_b=65536, shmem_per_block=49152, regs_per_block=65536,
+    warp_size=32, threads_per_mp=2048, threads_per_block=1024,
+    blocks_per_mp=16, threads_per_warp=32, warps_per_mp=64,
+    reg_alloc_size=256, regs_per_thread=255,
+)
+
+MAXWELL_M40 = GpuSpec(
+    name="m40", family="Maxwell", cc=5.2,
+    multiprocessors=24, cores_per_mp=128, gpu_clock_mhz=1140.0,
+    mem_clock_mhz=5000.0, global_mem_mb=12288, l2_cache_mb=3.146,
+    constant_mem_b=65536, shmem_per_block=49152, regs_per_block=65536,
+    warp_size=32, threads_per_mp=2048, threads_per_block=1024,
+    blocks_per_mp=32, threads_per_warp=32, warps_per_mp=64,
+    reg_alloc_size=256, regs_per_thread=255,
+)
+
+GPU_TABLE: Dict[str, GpuSpec] = {
+    "m2050": FERMI_M2050, "fermi": FERMI_M2050,
+    "k20": KEPLER_K20, "kepler": KEPLER_K20,
+    "m40": MAXWELL_M40, "maxwell": MAXWELL_M40,
+}
+
+
+# ---------------------------------------------------------------------------
+# Paper Table II -- instruction throughput (IPC) per compute capability.
+# ---------------------------------------------------------------------------
+
+# category -> {sm20, sm35, sm52} instructions-per-cycle, faithful to Table II.
+IPC_TABLE: Dict[str, Dict[str, int]] = {
+    "FPIns32":     {"sm20": 32, "sm35": 192, "sm52": 128},
+    "FPIns64":     {"sm20": 16, "sm35": 64,  "sm52": 4},
+    "CompMinMax":  {"sm20": 32, "sm35": 160, "sm52": 64},
+    "ShiftShuffle": {"sm20": 16, "sm35": 32, "sm52": 64},
+    "Conv64":      {"sm20": 16, "sm35": 8,   "sm52": 4},
+    "Conv32":      {"sm20": 16, "sm35": 128, "sm52": 32},
+    "LogSinCos":   {"sm20": 4,  "sm35": 32,  "sm52": 32},
+    "IntAdd32":    {"sm20": 32, "sm35": 160, "sm52": 64},
+    "LdStIns":     {"sm20": 16, "sm35": 32,  "sm52": 64},   # Tex/LdSt/Surf
+    "CtrlIns":     {"sm20": 16, "sm35": 32,  "sm52": 64},   # Pred/Ctrl
+    "MoveIns":     {"sm20": 32, "sm35": 32,  "sm52": 32},
+    "Regs":        {"sm20": 16, "sm35": 32,  "sm52": 32},
+}
+
+# Paper category -> coarse class used by Eq. 6 (O_fl, O_mem, O_ctrl, O_reg).
+CATEGORY_CLASS: Dict[str, str] = {
+    "FPIns32": "flops", "FPIns64": "flops", "CompMinMax": "flops",
+    "ShiftShuffle": "flops", "Conv64": "flops", "Conv32": "flops",
+    "LogSinCos": "flops", "IntAdd32": "flops",
+    "LdStIns": "mem",
+    "CtrlIns": "ctrl", "MoveIns": "ctrl",
+    "Regs": "reg",
+}
+
+
+def sm_key(gpu: GpuSpec) -> str:
+    return {2.0: "sm20", 3.5: "sm35", 5.2: "sm52"}[gpu.cc]
+
+
+def cpi(category: str, gpu: GpuSpec) -> float:
+    """Cycles-per-instruction = reciprocal of Table II IPC (paper §III-B)."""
+    return 1.0 / float(IPC_TABLE[category][sm_key(gpu)])
+
+
+# ---------------------------------------------------------------------------
+# TPU adaptation -- the paper's Table I/II for the v5e target.
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class TpuSpec:
+    """TPU chip + interconnect model used by occupancy/predict/roofline.
+
+    The three roofline constants (peak bf16 FLOP/s, HBM bandwidth, ICI
+    link bandwidth) are the grading constants given in the assignment;
+    the VMEM/VPU numbers model the on-core memory hierarchy for the
+    Pallas occupancy model.
+    """
+
+    name: str = "tpu-v5e"
+    # Roofline constants (per chip).
+    peak_flops_bf16: float = 197e12        # MXU, bf16
+    peak_flops_f32: float = 49.25e12       # MXU f32 ~= bf16/4
+    hbm_bw: float = 819e9                  # bytes/s
+    ici_bw_per_link: float = 50e9          # bytes/s per link (uni)
+    hbm_bytes: int = 16 * 1024**3          # 16 GiB
+    # On-core hierarchy (Pallas model).
+    vmem_bytes: int = 16 * 1024**2         # usable VMEM scratchpad budget / core (conservative)
+    vmem_bw: float = 11e12                 # bytes/s VMEM<->VREG streaming (approx 8x128 lanes)
+    vpu_flops: float = 3.2e12              # vector unit f32 FLOP/s (8x128 lanes x ~2 ALUs x clock)
+    transcendental_flops: float = 0.4e12   # exp/log/tanh effective rate
+    mxu_tile: tuple = (128, 128)           # systolic array facing dims
+    sublane: int = 8                       # (8, 128) native vreg tile
+    lane: int = 128
+    cores_per_chip: int = 1                # v5e: 1 TensorCore per chip
+    # Control overhead charged per grid step / scalar-unit op (seconds).
+    ctrl_overhead_s: float = 120e-9
+
+
+TPU_V5E = TpuSpec()
+
+
+# Instruction-class peak rates for Eq. 6 on TPU (the Table II analogue).
+# Keys are the InstructionMix categories defined in repro.core.mix.
+def tpu_rate_table(spec: TpuSpec = TPU_V5E) -> Dict[str, float]:
+    return {
+        # FLOP-like categories: events/sec.
+        "mxu_flops": spec.peak_flops_bf16,
+        "vpu_flops": spec.vpu_flops,
+        "trans_flops": spec.transcendental_flops,
+        # byte categories: bytes/sec.
+        "hbm_bytes": spec.hbm_bw,
+        "vmem_bytes": spec.vmem_bw,
+        # control / bookkeeping: events/sec (reciprocal of per-event cost).
+        "ctrl_ops": 1.0 / spec.ctrl_overhead_s,
+        "reg_ops": spec.vpu_flops,  # move/copy at vector-lane rate
+    }
+
+
+# dtype -> bytes (used all over the analyzers).
+DTYPE_BYTES: Dict[str, int] = {
+    "bool": 1, "int8": 1, "uint8": 1, "float8_e4m3fn": 1, "float8_e5m2": 1,
+    "int16": 2, "uint16": 2, "bfloat16": 2, "float16": 2,
+    "int32": 4, "uint32": 4, "float32": 4,
+    "int64": 8, "uint64": 8, "float64": 8, "complex64": 8,
+    "complex128": 16,
+}
+
+
+def dtype_bytes(dtype) -> int:
+    return DTYPE_BYTES.get(str(getattr(dtype, "name", dtype)), 4)

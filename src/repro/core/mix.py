@@ -1,0 +1,484 @@
+"""Instruction-mix extraction (paper §III-B, adapted to the XLA stack).
+
+The paper disassembles the CUDA binary (``nvdisasm``) and classifies
+instructions into FLOPS / MEM / CTRL / REG, weighting each class by its
+reciprocal throughput (Table II).  On the JAX/TPU stack the two
+compilation levels are:
+
+* **jaxpr** — the pre-XLA program (the "PTX-level" view): cheap, purely
+  structural, available without any compilation.
+* **HLO text** — the post-XLA-optimization module from
+  ``jax.jit(f).lower(...).compile().as_text()`` (the "SASS-level"
+  view): reflects fusion, remat, and the collective schedule.
+
+Both extractors return an :class:`InstructionMix`; comparing them is the
+paper's Table VI experiment (static-vs-dynamic mix error).
+
+Categories (the TPU Table II analogue):
+
+=============  ===========================================================
+mxu_flops      systolic-array FLOPs (dot_general / conv), 2*M*N*K counting
+vpu_flops      elementwise/reduction vector ALU ops (one per output elem)
+trans_flops    transcendental elementwise ops (exp/log/tanh/...)
+hbm_bytes      bytes moved by memory-shaping ops + matmul operand streams
+vmem_bytes     bytes streamed lane<->scratchpad by elementwise chains
+mem_ops        count of memory *operations* (paper's O_mem, for intensity)
+ctrl_ops       predication/select/control-flow events (paper's O_ctrl)
+reg_ops        moves: broadcast/transpose/reshape/convert (paper's O_reg)
+=============  ===========================================================
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+import re
+from typing import Any, Dict, Iterable, Optional
+
+import numpy as np
+
+from repro.core.hw import dtype_bytes
+
+__all__ = [
+    "InstructionMix",
+    "mix_from_jaxpr",
+    "mix_of_fn",
+    "mix_from_hlo_text",
+    "mix_from_cost_analysis",
+    "intensity",
+    "classify_boundedness",
+]
+
+
+@dataclasses.dataclass
+class InstructionMix:
+    mxu_flops: float = 0.0
+    vpu_flops: float = 0.0
+    trans_flops: float = 0.0
+    hbm_bytes: float = 0.0
+    vmem_bytes: float = 0.0
+    mem_ops: float = 0.0
+    ctrl_ops: float = 0.0
+    reg_ops: float = 0.0
+    # bookkeeping
+    unknown_ops: int = 0
+    unknown_trip_loops: int = 0
+
+    # -- algebra ------------------------------------------------------------
+    def __add__(self, other: "InstructionMix") -> "InstructionMix":
+        return InstructionMix(**{
+            f.name: getattr(self, f.name) + getattr(other, f.name)
+            for f in dataclasses.fields(self)
+        })
+
+    def scaled(self, k: float) -> "InstructionMix":
+        out = InstructionMix(**{
+            f.name: getattr(self, f.name) * k for f in dataclasses.fields(self)
+        })
+        out.unknown_ops = int(self.unknown_ops * k)
+        out.unknown_trip_loops = int(self.unknown_trip_loops * k)
+        return out
+
+    # -- views --------------------------------------------------------------
+    @property
+    def flops_total(self) -> float:
+        return self.mxu_flops + self.vpu_flops + self.trans_flops
+
+    @property
+    def o_fl(self) -> float:          # paper O_fl
+        return self.flops_total
+
+    @property
+    def o_mem(self) -> float:         # paper O_mem
+        return self.mem_ops
+
+    @property
+    def o_ctrl(self) -> float:        # paper O_ctrl
+        return self.ctrl_ops
+
+    @property
+    def o_reg(self) -> float:         # paper O_reg
+        return self.reg_ops
+
+    def as_dict(self) -> Dict[str, float]:
+        return {f.name: float(getattr(self, f.name))
+                for f in dataclasses.fields(self)}
+
+    def __repr__(self) -> str:  # compact for logs
+        return ("Mix(mxu={:.3g}, vpu={:.3g}, trans={:.3g}, hbm_B={:.3g}, "
+                "mem_ops={:.3g}, ctrl={:.3g}, reg={:.3g}, I={:.2f})").format(
+                    self.mxu_flops, self.vpu_flops, self.trans_flops,
+                    self.hbm_bytes, self.mem_ops, self.ctrl_ops, self.reg_ops,
+                    intensity(self))
+
+
+def intensity(mix: InstructionMix) -> float:
+    """Paper's computational intensity: FLOPs per memory operation."""
+    return mix.flops_total / max(1.0, mix.mem_ops)
+
+
+def classify_boundedness(mix: InstructionMix, threshold: float = 4.0) -> str:
+    """Rule-based classification; threshold 4.0 is the paper's §III-C value."""
+    i = intensity(mix)
+    if i > threshold:
+        return "compute_bound"
+    if i > threshold / 2:
+        return "balanced"
+    return "memory_bound"
+
+
+# ---------------------------------------------------------------------------
+# jaxpr-level extraction
+# ---------------------------------------------------------------------------
+
+_TRANS_PRIMS = {
+    "exp", "exp2", "expm1", "log", "log1p", "logistic", "tanh", "tan",
+    "sin", "cos", "asin", "acos", "atan", "atan2", "sinh", "cosh",
+    "asinh", "acosh", "atanh", "erf", "erfc", "erf_inv", "rsqrt", "sqrt",
+    "cbrt", "pow", "integer_pow", "digamma", "lgamma", "regularized_incomplete_beta",
+}
+
+_VPU_PRIMS = {
+    "add", "sub", "mul", "div", "rem", "max", "min", "neg", "abs", "sign",
+    "floor", "ceil", "round", "nextafter", "clamp", "square",
+    "and", "or", "xor", "not", "shift_left", "shift_right_logical",
+    "shift_right_arithmetic", "population_count", "clz",
+    "add_any", "real", "imag", "conj", "complex", "is_finite",
+    "random_bits", "random_seed", "random_wrap", "random_fold_in",
+    "threefry2x32",
+}
+
+_CMP_PRIMS = {"eq", "ne", "lt", "le", "gt", "ge", "eq_to", "le_to", "lt_to"}
+
+_CTRL_PRIMS = {"select_n", "stop_gradient", "when"}
+
+_REG_PRIMS = {
+    "broadcast_in_dim", "broadcast", "reshape", "transpose", "squeeze",
+    "expand_dims", "convert_element_type", "bitcast_convert_type", "copy",
+    "device_put", "sharding_constraint", "rev",
+}
+
+_MEM_PRIMS = {
+    "gather", "scatter", "scatter_add", "scatter_mul", "scatter_min",
+    "scatter_max", "dynamic_slice", "dynamic_update_slice", "slice",
+    "concatenate", "pad", "iota", "argmax", "argmin", "sort", "top_k",
+}
+
+_REDUCE_PRIMS = {
+    "reduce_sum", "reduce_max", "reduce_min", "reduce_prod", "reduce_and",
+    "reduce_or", "reduce_xor", "argmax", "argmin", "reduce_precision",
+    "cumsum", "cumprod", "cummax", "cummin", "cumlogsumexp",
+}
+
+_CALL_PRIMS = {
+    "pjit", "closed_call", "core_call", "custom_jvp_call", "custom_vjp_call",
+    "custom_vjp_call_jaxpr", "remat", "checkpoint", "remat2", "custom_lin",
+    "shard_map", "custom_partitioning",
+}
+
+_COLLECTIVE_PRIMS = {
+    "psum", "pmax", "pmin", "ppermute", "all_gather", "all_to_all",
+    "reduce_scatter", "psum_scatter", "pbroadcast",
+}
+
+
+def _aval_elems(aval) -> float:
+    shape = getattr(aval, "shape", ())
+    return float(np.prod(shape)) if shape else 1.0
+
+
+def _aval_bytes(aval) -> float:
+    return _aval_elems(aval) * dtype_bytes(getattr(aval, "dtype", "float32"))
+
+
+def _out_elems(eqn) -> float:
+    return sum(_aval_elems(v.aval) for v in eqn.outvars)
+
+
+def _out_bytes(eqn) -> float:
+    return sum(_aval_bytes(v.aval) for v in eqn.outvars)
+
+
+def _in_bytes(eqn) -> float:
+    tot = 0.0
+    for v in eqn.invars:
+        aval = getattr(v, "aval", None)
+        if aval is not None and getattr(aval, "shape", None) is not None:
+            tot += _aval_bytes(aval)
+    return tot
+
+
+def _dot_flops(eqn) -> float:
+    """2 * batch * M * N * K for a dot_general eqn."""
+    (lhs, rhs) = eqn.invars[0].aval, eqn.invars[1].aval
+    dnums = eqn.params["dimension_numbers"]
+    ((lc, rc), (lb, rb)) = dnums
+    batch = np.prod([lhs.shape[d] for d in lb]) if lb else 1.0
+    contract = np.prod([lhs.shape[d] for d in lc]) if lc else 1.0
+    m = np.prod([lhs.shape[d] for d in range(len(lhs.shape))
+                 if d not in set(lc) | set(lb)]) or 1.0
+    n = np.prod([rhs.shape[d] for d in range(len(rhs.shape))
+                 if d not in set(rc) | set(rb)]) or 1.0
+    return 2.0 * float(batch) * float(m) * float(n) * float(contract)
+
+
+def _conv_flops(eqn) -> float:
+    lhs, rhs = eqn.invars[0].aval, eqn.invars[1].aval
+    out = eqn.outvars[0].aval
+    # FLOPs = 2 * out_elems * (kernel spatial elems * in_channels / groups)
+    dn = eqn.params.get("dimension_numbers")
+    groups = eqn.params.get("feature_group_count", 1)
+    k_elems = float(np.prod(rhs.shape))  # includes in*out channels
+    out_spatial_batch = _aval_elems(out)
+    # per output element: k_spatial * cin/groups MACs; derive from rhs:
+    # rhs has (cout, cin/groups, *spatial) in some layout; total rhs elems =
+    # cout * cin/groups * k_spatial, so MACs per out elem = rhs_elems / cout.
+    cout = out.shape[dn.out_spec[1]] if dn is not None else rhs.shape[0]
+    macs_per_out = k_elems / max(1.0, float(cout))  # = k_spatial * cin/groups
+    del lhs, groups
+    return 2.0 * out_spatial_batch * macs_per_out
+
+
+def mix_from_jaxpr(jaxpr, *, while_trip_count: int = 1) -> InstructionMix:
+    """Walk a (Closed)Jaxpr and accumulate the static instruction mix.
+
+    ``while_trip_count`` is the assumed trip count for ``while`` loops
+    whose bound is not statically known (``scan`` lengths *are* known and
+    used exactly).
+    """
+    closed = jaxpr
+    inner = getattr(closed, "jaxpr", closed)
+    mix = InstructionMix()
+
+    for eqn in inner.eqns:
+        name = eqn.primitive.name
+        if name == "dot_general":
+            f = _dot_flops(eqn)
+            mix.mxu_flops += f
+            b = _in_bytes(eqn) + _out_bytes(eqn)
+            mix.hbm_bytes += b
+            mix.mem_ops += sum(_aval_elems(v.aval) for v in eqn.invars) + _out_elems(eqn)
+        elif name == "conv_general_dilated":
+            mix.mxu_flops += _conv_flops(eqn)
+            b = _in_bytes(eqn) + _out_bytes(eqn)
+            mix.hbm_bytes += b
+            mix.mem_ops += sum(_aval_elems(v.aval) for v in eqn.invars) + _out_elems(eqn)
+        elif name in _TRANS_PRIMS:
+            n = _out_elems(eqn)
+            mix.trans_flops += n
+            mix.vmem_bytes += _out_bytes(eqn) * 2
+        elif name in _VPU_PRIMS or name in _CMP_PRIMS:
+            n = _out_elems(eqn)
+            mix.vpu_flops += n
+            mix.vmem_bytes += (_in_bytes(eqn) + _out_bytes(eqn))
+        elif name in _REDUCE_PRIMS:
+            n = sum(_aval_elems(v.aval) for v in eqn.invars)
+            mix.vpu_flops += n
+            mix.vmem_bytes += _in_bytes(eqn) + _out_bytes(eqn)
+        elif name in _CTRL_PRIMS:
+            mix.ctrl_ops += _out_elems(eqn)
+        elif name in _REG_PRIMS:
+            mix.reg_ops += _out_elems(eqn)
+            mix.vmem_bytes += _out_bytes(eqn)
+        elif name in _MEM_PRIMS:
+            b = _out_bytes(eqn)
+            if name.startswith("scatter"):
+                b += _in_bytes(eqn)
+            mix.hbm_bytes += b
+            mix.mem_ops += _out_elems(eqn)
+        elif name in _COLLECTIVE_PRIMS:
+            mix.hbm_bytes += _out_bytes(eqn)
+            mix.mem_ops += _out_elems(eqn)
+            mix.ctrl_ops += 1
+        elif name == "scan":
+            body = eqn.params["jaxpr"]
+            length = eqn.params.get("length", 1)
+            sub = mix_from_jaxpr(body, while_trip_count=while_trip_count)
+            mix = mix + sub.scaled(float(length))
+            mix.ctrl_ops += float(length)
+        elif name == "while":
+            body = eqn.params["body_jaxpr"]
+            cond = eqn.params["cond_jaxpr"]
+            sub = (mix_from_jaxpr(body, while_trip_count=while_trip_count)
+                   + mix_from_jaxpr(cond, while_trip_count=while_trip_count))
+            mix = mix + sub.scaled(float(while_trip_count))
+            mix.ctrl_ops += float(while_trip_count)
+            mix.unknown_trip_loops += 1
+        elif name == "cond":
+            branches = eqn.params["branches"]
+            subs = [mix_from_jaxpr(b, while_trip_count=while_trip_count)
+                    for b in branches]
+            # Static worst case: take the max per category over branches.
+            worst = InstructionMix()
+            for f in dataclasses.fields(InstructionMix):
+                setattr(worst, f.name,
+                        max(getattr(s, f.name) for s in subs) if subs else 0)
+            mix = mix + worst
+            mix.ctrl_ops += 1
+        elif name in _CALL_PRIMS or "call" in name:
+            sub_jaxpr = eqn.params.get("jaxpr") or eqn.params.get("call_jaxpr")
+            if sub_jaxpr is not None:
+                mix = mix + mix_from_jaxpr(sub_jaxpr,
+                                           while_trip_count=while_trip_count)
+            else:
+                mix.unknown_ops += 1
+        elif name in ("pallas_call",):
+            # Treat the kernel body as a sub-jaxpr scaled by grid size.
+            body = eqn.params.get("jaxpr")
+            grid = eqn.params.get("grid", ())
+            steps = float(np.prod([g for g in grid if isinstance(g, int)]) or 1)
+            if body is not None:
+                mix = mix + mix_from_jaxpr(body).scaled(steps)
+            mix.hbm_bytes += _in_bytes(eqn) + _out_bytes(eqn)
+            mix.mem_ops += _out_elems(eqn)
+        elif name in ("custom_jvp_call_jaxpr",):
+            mix.unknown_ops += 1
+        else:
+            # Unknown primitive: look for a sub-jaxpr, else count control.
+            sub = eqn.params.get("jaxpr") or eqn.params.get("call_jaxpr")
+            if sub is not None and hasattr(sub, "eqns") or hasattr(sub, "jaxpr"):
+                try:
+                    mix = mix + mix_from_jaxpr(sub, while_trip_count=while_trip_count)
+                    continue
+                except Exception:
+                    pass
+            mix.ctrl_ops += 1
+            mix.unknown_ops += 1
+    return mix
+
+
+def mix_of_fn(fn, *args, while_trip_count: int = 1, **kwargs) -> InstructionMix:
+    """Static mix of ``fn(*args, **kwargs)`` via jax.make_jaxpr (no execution)."""
+    import jax
+    jaxpr = jax.make_jaxpr(fn)(*args, **kwargs)
+    return mix_from_jaxpr(jaxpr, while_trip_count=while_trip_count)
+
+
+# ---------------------------------------------------------------------------
+# HLO-text-level extraction (the "disassembly" view)
+# ---------------------------------------------------------------------------
+
+# %name = bf16[128,256]{1,0} opcode(...)
+_HLO_INSTR_RE = re.compile(
+    r"=\s*(?:\()?([a-z0-9]+)\[([0-9,]*)\][^\s]*\s+([a-z][a-z0-9\-]*)\(")
+_HLO_SHAPE_RE = re.compile(r"([a-z0-9]+)\[([0-9,]*)\]")
+_CONTRACT_RE = re.compile(r"lhs_contracting_dims=\{([0-9,]*)\}")
+
+_HLO_TRANS = {"exponential", "exponential-minus-one", "log", "log-plus-one",
+              "tanh", "sine", "cosine", "rsqrt", "sqrt", "power", "logistic",
+              "erf", "atan2", "cbrt", "tan"}
+_HLO_VPU = {"add", "subtract", "multiply", "divide", "maximum", "minimum",
+            "negate", "abs", "floor", "ceil", "round-nearest-afz",
+            "round-nearest-even", "sign", "and", "or", "xor", "not",
+            "shift-left", "shift-right-logical", "shift-right-arithmetic",
+            "clamp", "remainder", "compare", "is-finite", "popcnt",
+            "count-leading-zeros", "rng", "rng-bit-generator", "map",
+            "clz", "complex", "real", "imag", "reduce-precision", "atan",
+            "stochastic-convert"}
+_HLO_REDUCE = {"reduce", "reduce-window"}
+_HLO_CTRL = {"select", "select-and-scatter", "conditional", "while",
+             "call", "after-all", "add-dependency", "partition-id",
+             "replica-id", "opt-barrier"}
+_HLO_REG = {"broadcast", "reshape", "transpose", "convert", "bitcast",
+            "bitcast-convert", "copy", "copy-start", "copy-done", "tuple",
+            "get-tuple-element"}
+_HLO_MEM = {"gather", "scatter", "dynamic-slice", "dynamic-update-slice",
+            "slice", "concatenate", "pad", "iota", "sort", "reverse",
+            "dot-as-gather"}
+_HLO_COLLECTIVE = {"all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+                   "collective-permute", "all-gather-start", "all-reduce-start",
+                   "collective-permute-start", "all-gather-done",
+                   "all-reduce-done", "collective-permute-done",
+                   "ragged-all-to-all", "collective-broadcast"}
+_HLO_SKIP = {"parameter", "constant", "fusion", "custom-call",
+             "get-dimension-size", "domain", "send", "recv", "send-done",
+             "recv-done", "infeed", "outfeed"}
+
+
+def _shape_elems(dims: str) -> float:
+    if not dims:
+        return 1.0
+    return float(np.prod([int(d) for d in dims.split(",") if d]))
+
+
+def mix_from_hlo_text(text: str) -> InstructionMix:
+    """Census over every instruction line in an HLO module dump.
+
+    Fused computations appear as their own blocks in the dump, so ops
+    inside fusions are counted (the ``fusion`` caller line is skipped as
+    a container).  This is the post-optimization "SASS-level" mix.
+    """
+    mix = InstructionMix()
+    for line in text.splitlines():
+        m = _HLO_INSTR_RE.search(line)
+        if not m:
+            continue
+        dtype, dims, opcode = m.group(1), m.group(2), m.group(3)
+        out_elems = _shape_elems(dims)
+        out_bytes = out_elems * dtype_bytes(dtype)
+
+        if opcode in _HLO_SKIP:
+            continue
+        if opcode == "dot":
+            cm = _CONTRACT_RE.search(line)
+            # contraction size: product of lhs dims listed
+            shapes = _HLO_SHAPE_RE.findall(line[m.end() - 1:])
+            k = 1.0
+            if cm and shapes:
+                lhs_dims = [int(x) for x in shapes[0][1].split(",") if x]
+                idxs = [int(x) for x in cm.group(1).split(",") if x]
+                for i in idxs:
+                    if i < len(lhs_dims):
+                        k *= lhs_dims[i]
+            mix.mxu_flops += 2.0 * out_elems * k
+            for dt, ds in shapes[:2]:
+                mix.hbm_bytes += _shape_elems(ds) * dtype_bytes(dt)
+                mix.mem_ops += _shape_elems(ds)
+            mix.hbm_bytes += out_bytes
+            mix.mem_ops += out_elems
+        elif opcode == "convolution":
+            shapes = _HLO_SHAPE_RE.findall(line[m.end() - 1:])
+            k_elems = _shape_elems(shapes[1][1]) if len(shapes) > 1 else 1.0
+            mix.mxu_flops += 2.0 * out_elems * max(1.0, k_elems / max(out_elems, 1.0))
+            mix.hbm_bytes += out_bytes + sum(
+                _shape_elems(ds) * dtype_bytes(dt) for dt, ds in shapes[:2])
+            mix.mem_ops += out_elems
+        elif opcode in _HLO_TRANS:
+            mix.trans_flops += out_elems
+            mix.vmem_bytes += out_bytes * 2
+        elif opcode in _HLO_VPU:
+            mix.vpu_flops += out_elems
+            mix.vmem_bytes += out_bytes * 2
+        elif opcode in _HLO_REDUCE:
+            shapes = _HLO_SHAPE_RE.findall(line[m.end() - 1:])
+            in_elems = _shape_elems(shapes[0][1]) if shapes else out_elems
+            mix.vpu_flops += in_elems
+            mix.vmem_bytes += in_elems * dtype_bytes(dtype)
+        elif opcode in _HLO_CTRL:
+            mix.ctrl_ops += out_elems if opcode == "select" else 1.0
+        elif opcode in _HLO_REG:
+            if opcode in ("tuple", "get-tuple-element"):
+                continue
+            mix.reg_ops += out_elems
+            mix.vmem_bytes += out_bytes
+        elif opcode in _HLO_MEM:
+            mix.hbm_bytes += out_bytes
+            mix.mem_ops += out_elems
+        elif opcode in _HLO_COLLECTIVE:
+            mix.hbm_bytes += out_bytes
+            mix.mem_ops += out_elems
+            mix.ctrl_ops += 1.0
+        else:
+            mix.unknown_ops += 1
+    return mix
+
+
+def mix_from_cost_analysis(cost: Optional[Dict[str, Any]]) -> InstructionMix:
+    """Coarse mix from ``compiled.cost_analysis()`` (flops + bytes accessed)."""
+    mix = InstructionMix()
+    if not cost:
+        return mix
+    mix.mxu_flops = float(cost.get("flops", 0.0) or 0.0)
+    mix.trans_flops = float(cost.get("transcendentals", 0.0) or 0.0)
+    mix.hbm_bytes = float(cost.get("bytes accessed", 0.0) or 0.0)
+    mix.mem_ops = mix.hbm_bytes / 4.0
+    return mix

@@ -1,0 +1,264 @@
+"""Occupancy models (paper §III-A).
+
+Two models:
+
+1. :func:`cuda_occupancy` — the *faithful* reproduction of the paper's
+   Eqs. 1-5 over Table I hardware constants.  Used to validate our math
+   against the paper's own Table VII and as the baseline model in the
+   benchmarks.
+
+2. :func:`tpu_occupancy` — the TPU adaptation.  A TPU core has no warp
+   scheduler; latency is hidden by the Pallas software pipeline
+   overlapping the next tile's DMA with the current tile's compute.
+   The occupancy analogue is therefore the steady-state MXU/VPU busy
+   fraction ``t_compute / max(t_compute, t_dma)`` with the hard
+   constraint that the pipelined working set fits VMEM.  "Registers"
+   map to accumulator/scratch words per lane; "shared memory" maps to
+   VMEM tile bytes.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Dict, Iterable, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+from repro.core.hw import GpuSpec, TpuSpec, TPU_V5E, dtype_bytes
+from repro.core.mix import InstructionMix
+
+__all__ = [
+    "CudaOccupancy", "cuda_occupancy", "suggest_cuda_params",
+    "TpuOccupancy", "tpu_occupancy", "suggest_block_shapes",
+]
+
+
+# ---------------------------------------------------------------------------
+# Faithful CUDA occupancy (Eqs. 1-5)
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class CudaOccupancy:
+    """Result of the paper's occupancy calculation."""
+
+    active_blocks: int          # B*_mp  (Eq. 1)
+    active_warps: int           # W*_mp
+    occupancy: float            # Eq. 2
+    limiter: str                # which G_psi bound B*_mp ('warps'|'regs'|'shmem')
+    g_warps: int
+    g_regs: int
+    g_shmem: int
+
+
+def _g_warps(threads_per_block: int, gpu: GpuSpec) -> int:
+    """Eq. 3: blocks limited by warp slots."""
+    if threads_per_block <= 0:
+        return gpu.blocks_per_mp
+    warps_per_block = math.ceil(threads_per_block / gpu.threads_per_warp)
+    return int(min(gpu.blocks_per_mp,
+                   math.floor(gpu.warps_per_mp / warps_per_block)))
+
+
+def _g_regs(regs_per_thread: int, threads_per_block: int, gpu: GpuSpec) -> int:
+    """Eq. 4: blocks limited by the register file."""
+    if regs_per_thread > gpu.regs_per_thread:
+        return 0  # illegal (case 1)
+    if regs_per_thread > 0:
+        warps_per_block = max(1, math.ceil(max(threads_per_block, 1)
+                                           / gpu.threads_per_warp))
+        # registers needed by one warp, rounded to allocation granularity
+        regs_per_warp = math.ceil(
+            regs_per_thread * gpu.threads_per_warp / gpu.reg_alloc_size
+        ) * gpu.reg_alloc_size
+        warps_limited = math.floor(gpu.regs_per_block / max(regs_per_warp, 1))
+        return int(max(0, math.floor(warps_limited / warps_per_block)))
+    return gpu.blocks_per_mp  # case 3: unspecified
+
+
+def _g_shmem(shmem_per_block: int, gpu: GpuSpec) -> int:
+    """Eq. 5: blocks limited by shared memory."""
+    if shmem_per_block > gpu.shmem_per_block:
+        return 0  # illegal
+    if shmem_per_block > 0:
+        return int(math.floor(gpu.shmem_per_mp / shmem_per_block))
+    return gpu.blocks_per_mp
+
+
+def cuda_occupancy(threads_per_block: int,
+                   regs_per_thread: int,
+                   shmem_per_block: int,
+                   gpu: GpuSpec) -> CudaOccupancy:
+    """Paper Eqs. 1-5 + Eq. 2 over one (T^u, R^u, S^u) configuration."""
+    gw = _g_warps(threads_per_block, gpu)
+    gr = _g_regs(regs_per_thread, threads_per_block, gpu)
+    gs = _g_shmem(shmem_per_block, gpu)
+    bounds = {"warps": gw, "regs": gr, "shmem": gs}
+    limiter = min(bounds, key=bounds.get)
+    active_blocks = max(0, min(bounds.values()))          # Eq. 1
+    warps_per_block = math.ceil(max(threads_per_block, 1)
+                                / gpu.threads_per_warp)
+    active_warps = min(active_blocks * warps_per_block, gpu.warps_per_mp)
+    occ = active_warps / gpu.warps_per_mp                 # Eq. 2
+    return CudaOccupancy(active_blocks=active_blocks,
+                         active_warps=active_warps,
+                         occupancy=occ, limiter=limiter,
+                         g_warps=gw, g_regs=gr, g_shmem=gs)
+
+
+def suggest_cuda_params(regs_per_thread: int,
+                        shmem_per_block: int,
+                        gpu: GpuSpec,
+                        thread_candidates: Optional[Sequence[int]] = None,
+                        ) -> Dict[str, object]:
+    """Table VII analogue: thread sizes achieving max occupancy, plus the
+    register headroom ``[R^u : R*]`` and shared-memory headroom ``S*``."""
+    if thread_candidates is None:
+        thread_candidates = range(32, gpu.threads_per_block + 1, 32)
+    best: Dict[int, float] = {}
+    for t in thread_candidates:
+        occ = cuda_occupancy(t, regs_per_thread, shmem_per_block, gpu).occupancy
+        best[t] = occ
+    occ_star = max(best.values()) if best else 0.0
+    t_star = sorted(t for t, o in best.items() if o >= occ_star - 1e-9)
+    # register increase potential at occ*: how many more regs/thread before
+    # the register limiter drops the block count at the best thread size.
+    r_star = 0
+    if t_star:
+        t0 = t_star[-1]
+        base = cuda_occupancy(t0, regs_per_thread, shmem_per_block, gpu)
+        r = regs_per_thread
+        while r < gpu.regs_per_thread:
+            if cuda_occupancy(t0, r + 1, shmem_per_block, gpu).active_blocks \
+                    < base.active_blocks:
+                break
+            r += 1
+        r_star = r - regs_per_thread
+    # shared-memory headroom: bytes per block before active blocks drop.
+    s_star = 0
+    if t_star:
+        t0 = t_star[-1]
+        base = cuda_occupancy(t0, regs_per_thread, shmem_per_block, gpu)
+        if base.active_blocks > 0:
+            s_star = gpu.shmem_per_mp // base.active_blocks
+    return {"threads": t_star, "occ_star": occ_star,
+            "reg_headroom": r_star, "shmem_star": s_star}
+
+
+# ---------------------------------------------------------------------------
+# TPU occupancy (the adaptation)
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class TpuOccupancy:
+    """Static pipeline model of one Pallas kernel configuration.
+
+    ``occupancy`` is the steady-state compute-unit busy fraction under
+    double-buffered DMA: compute / max(compute, dma).  ``fits_vmem`` is
+    the hard feasibility constraint (Eq. 1's min over resources becomes
+    a feasibility cut on TPU: 0 active tiles if over VMEM).
+    """
+
+    fits_vmem: bool
+    vmem_bytes: int             # pipelined working set (incl. buffering)
+    vmem_ratio: float           # vmem_bytes / budget
+    t_compute: float            # seconds per grid step
+    t_dma: float                # seconds per grid step (HBM <-> VMEM)
+    occupancy: float            # in [0, 1]
+    limiter: str                # 'vmem' | 'dma' | 'compute'
+    grid_steps: int
+    mxu_alignment: float        # fraction of tile dims aligned to (8,128)/(128,128)
+    predicted_step_time: float  # max(t_compute, t_dma) + ctrl overhead
+
+
+def _align_frac(shape: Sequence[int], spec: TpuSpec) -> float:
+    """Lane-padding waste model: fraction of the trailing-2D tile that is
+    real data after padding up to (sublane, lane) granularity."""
+    if not shape:
+        return 1.0
+    dims = list(shape)
+    last = dims[-1]
+    second = dims[-2] if len(dims) >= 2 else 1
+    pad_last = math.ceil(last / spec.lane) * spec.lane
+    pad_second = math.ceil(second / spec.sublane) * spec.sublane
+    real = last * second
+    padded = pad_last * pad_second
+    return real / padded if padded else 1.0
+
+
+def tpu_occupancy(block_in_bytes: Sequence[int],
+                  block_out_bytes: Sequence[int],
+                  flops_per_step: float,
+                  *,
+                  grid_steps: int = 1,
+                  scratch_bytes: int = 0,
+                  buffering: int = 2,
+                  block_shapes: Optional[Sequence[Sequence[int]]] = None,
+                  compute_unit: str = "mxu",
+                  spec: TpuSpec = TPU_V5E) -> TpuOccupancy:
+    """Static occupancy of one Pallas configuration.
+
+    Parameters
+    ----------
+    block_in_bytes / block_out_bytes:
+        bytes of each input/output tile per grid step (BlockSpec-sized).
+    flops_per_step:
+        useful FLOPs per grid step.
+    buffering:
+        pipeline depth (2 = double buffering, the Pallas default).
+    """
+    moved = float(sum(block_in_bytes) + sum(block_out_bytes))
+    vmem = int(moved * buffering + scratch_bytes)
+    budget = spec.vmem_bytes
+    fits = vmem <= budget
+    peak = spec.peak_flops_bf16 if compute_unit == "mxu" else spec.vpu_flops
+    align = 1.0
+    if block_shapes:
+        fr = [_align_frac(s, spec) for s in block_shapes if s]
+        align = float(np.mean(fr)) if fr else 1.0
+    eff_peak = peak * max(align, 1e-6)
+    t_c = flops_per_step / eff_peak if flops_per_step else 0.0
+    t_d = moved / spec.hbm_bw
+    if not fits:
+        occ, lim = 0.0, "vmem"
+    elif t_d > t_c:
+        occ, lim = (t_c / t_d if t_d > 0 else 0.0), "dma"
+    else:
+        occ, lim = 1.0, "compute"
+    step = max(t_c, t_d) + spec.ctrl_overhead_s
+    return TpuOccupancy(fits_vmem=fits, vmem_bytes=vmem,
+                        vmem_ratio=vmem / budget,
+                        t_compute=t_c, t_dma=t_d, occupancy=occ,
+                        limiter=lim, grid_steps=int(grid_steps),
+                        mxu_alignment=align,
+                        predicted_step_time=step)
+
+
+def suggest_block_shapes(m: int, n: int, k: int,
+                         dtype_size: int = 2,
+                         spec: TpuSpec = TPU_V5E,
+                         candidates: Optional[Iterable[Tuple[int, int, int]]] = None,
+                         ) -> List[Tuple[Tuple[int, int, int], TpuOccupancy]]:
+    """Table VII analogue for TPU matmul tiles: rank (bm, bn, bk)
+    candidates by static occupancy (no compilation, no execution)."""
+    if candidates is None:
+        sizes = [128, 256, 512, 1024]
+        candidates = [(bm, bn, bk) for bm in sizes for bn in sizes
+                      for bk in sizes]
+    out = []
+    for (bm, bn, bk) in candidates:
+        if bm > m or bn > n or bk > k:
+            continue
+        blocks_in = [bm * bk * dtype_size, bk * bn * dtype_size]
+        blocks_out = [bm * bn * 4]  # f32 accumulator tile
+        steps = math.ceil(m / bm) * math.ceil(n / bn) * math.ceil(k / bk)
+        occ = tpu_occupancy(blocks_in, blocks_out, 2.0 * bm * bn * bk,
+                            grid_steps=steps,
+                            scratch_bytes=bm * bn * 4,
+                            block_shapes=[(bm, bk), (bk, bn), (bm, bn)],
+                            spec=spec)
+        if occ.fits_vmem:
+            out.append(((bm, bn, bk), occ))
+    out.sort(key=lambda t: t[1].predicted_step_time * t[1].grid_steps)
+    return out

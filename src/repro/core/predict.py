@@ -1,0 +1,162 @@
+"""Predictive execution-time model (paper Eq. 6).
+
+The paper predicts kernel time as a linear function of the static
+instruction mix, with coefficients equal to CPI (reciprocal throughput,
+Table II):
+
+    f(N) = c_f * O_fl + c_m * O_mem + c_b * O_ctrl + c_r * O_reg      (6)
+
+On TPU the classes widen to the pipelines of the chip (MXU / VPU /
+transcendental / HBM / VMEM / control), and we provide two composition
+rules:
+
+* ``mode='sum'`` — the paper-faithful Eq. 6 (all pipelines serialize).
+* ``mode='max'`` — the roofline/overlap variant (pipelines overlap;
+  time = slowest pipeline).  This is the beyond-paper refinement and is
+  what the hillclimb optimizes against.
+
+Coefficients are the reciprocal rates from
+:func:`repro.core.hw.tpu_rate_table`, and can be *calibrated* from
+measured (mix, time) pairs by non-negative least squares — the paper's
+"static models informed by prior benchmarking" (§VII).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Optional, Sequence, Tuple
+
+import numpy as np
+
+from repro.core.hw import GpuSpec, TpuSpec, TPU_V5E, tpu_rate_table, cpi
+from repro.core.mix import InstructionMix
+
+__all__ = [
+    "CostModel", "default_tpu_model", "predict_time", "cuda_eq6_time",
+    "calibrate", "rank_candidates", "spearman",
+]
+
+_FEATURES = ("mxu_flops", "vpu_flops", "trans_flops", "hbm_bytes",
+             "vmem_bytes", "ctrl_ops", "reg_ops")
+
+
+@dataclasses.dataclass
+class CostModel:
+    """Linear-in-mix cost model: seconds = <coeffs, features(mix)>."""
+
+    coeffs: Dict[str, float]
+    mode: str = "sum"   # 'sum' (Eq. 6) | 'max' (roofline)
+    name: str = "tpu-eq6"
+
+    def features(self, mix: InstructionMix) -> np.ndarray:
+        return np.array([getattr(mix, f) for f in _FEATURES], dtype=np.float64)
+
+    def time(self, mix: InstructionMix) -> float:
+        terms = [self.coeffs.get(f, 0.0) * getattr(mix, f) for f in _FEATURES]
+        if self.mode == "max":
+            # overlap compute pipes vs memory pipes vs control
+            compute = (self.coeffs.get("mxu_flops", 0.0) * mix.mxu_flops
+                       + self.coeffs.get("vpu_flops", 0.0) * mix.vpu_flops
+                       + self.coeffs.get("trans_flops", 0.0) * mix.trans_flops)
+            memory = (self.coeffs.get("hbm_bytes", 0.0) * mix.hbm_bytes
+                      + self.coeffs.get("vmem_bytes", 0.0) * mix.vmem_bytes)
+            ctrl = (self.coeffs.get("ctrl_ops", 0.0) * mix.ctrl_ops
+                    + self.coeffs.get("reg_ops", 0.0) * mix.reg_ops)
+            return float(max(compute, memory) + ctrl)
+        return float(sum(terms))
+
+    def breakdown(self, mix: InstructionMix) -> Dict[str, float]:
+        return {f: self.coeffs.get(f, 0.0) * getattr(mix, f)
+                for f in _FEATURES}
+
+
+def default_tpu_model(spec: TpuSpec = TPU_V5E, mode: str = "sum") -> CostModel:
+    rates = tpu_rate_table(spec)
+    coeffs = {k: (1.0 / v if v else 0.0) for k, v in rates.items()
+              if k in _FEATURES}
+    # vmem traffic overlaps aggressively with compute; damp its serial cost
+    coeffs["vmem_bytes"] = coeffs.get("vmem_bytes", 0.0)
+    return CostModel(coeffs=coeffs, mode=mode,
+                     name=f"tpu-eq6-{mode}")
+
+
+def predict_time(mix: InstructionMix,
+                 model: Optional[CostModel] = None) -> float:
+    return (model or default_tpu_model()).time(mix)
+
+
+def cuda_eq6_time(o_fl: float, o_mem: float, o_ctrl: float, o_reg: float,
+                  gpu: GpuSpec) -> float:
+    """The faithful Eq. 6 in units of cycles, CPI weights from Table II.
+
+    Class CPIs use the paper's category representatives: FLOPS->FPIns32,
+    MEM->LdStIns, CTRL->CtrlIns, REG->Regs.
+    """
+    return (cpi("FPIns32", gpu) * o_fl + cpi("LdStIns", gpu) * o_mem
+            + cpi("CtrlIns", gpu) * o_ctrl + cpi("Regs", gpu) * o_reg)
+
+
+# ---------------------------------------------------------------------------
+# Calibration (NNLS on measured times) + rank metrics
+# ---------------------------------------------------------------------------
+
+
+def _nnls(A: np.ndarray, b: np.ndarray, iters: int = 3000,
+          lr: Optional[float] = None) -> np.ndarray:
+    """Tiny projected-gradient NNLS (no scipy on this box)."""
+    A = np.asarray(A, dtype=np.float64)
+    b = np.asarray(b, dtype=np.float64)
+    # column scaling for conditioning
+    scale = np.maximum(np.abs(A).max(axis=0), 1e-30)
+    As = A / scale
+    x = np.maximum(np.linalg.lstsq(As, b, rcond=None)[0], 0.0)
+    L = np.linalg.norm(As.T @ As, 2) + 1e-30
+    step = (lr or 1.0 / L)
+    for _ in range(iters):
+        g = As.T @ (As @ x - b)
+        x = np.maximum(x - step * g, 0.0)
+    return x / scale
+
+
+def calibrate(mixes: Sequence[InstructionMix],
+              times_s: Sequence[float],
+              base: Optional[CostModel] = None,
+              mode: str = "sum") -> CostModel:
+    """Fit non-negative Eq. 6 coefficients to measured times.
+
+    Rows are weighted by 1/t (relative least squares): the tuner cares
+    about rank order across variants that span decades of runtime, so
+    minimizing relative rather than absolute residuals is the right
+    objective.  Zero columns keep their default-model value so a kernel
+    family that never exercises a pipeline does not zero it out.
+    """
+    base = base or default_tpu_model(mode=mode)
+    A = np.stack([base.features(m) for m in mixes])
+    b = np.asarray(times_s, dtype=np.float64)
+    w = 1.0 / np.maximum(b, 1e-30)
+    active = A.max(axis=0) > 0
+    coeffs = dict(base.coeffs)
+    if active.any():
+        x = _nnls(A[:, active] * w[:, None], b * w)
+        for f, v in zip(np.array(_FEATURES)[active], x):
+            coeffs[str(f)] = float(v)
+    return CostModel(coeffs=coeffs, mode=mode, name=base.name + "-calibrated")
+
+
+def spearman(a: Sequence[float], b: Sequence[float]) -> float:
+    """Spearman rank correlation (used for Fig. 5-style validation)."""
+    a = np.asarray(a, dtype=np.float64)
+    b = np.asarray(b, dtype=np.float64)
+    ra = np.argsort(np.argsort(a)).astype(np.float64)
+    rb = np.argsort(np.argsort(b)).astype(np.float64)
+    ra -= ra.mean(); rb -= rb.mean()
+    denom = np.sqrt((ra ** 2).sum() * (rb ** 2).sum())
+    return float((ra * rb).sum() / denom) if denom else 0.0
+
+
+def rank_candidates(mixes: Sequence[InstructionMix],
+                    model: Optional[CostModel] = None
+                    ) -> Tuple[np.ndarray, np.ndarray]:
+    """Predicted times + ascending-rank order for a candidate set."""
+    model = model or default_tpu_model()
+    t = np.array([model.time(m) for m in mixes])
+    return t, np.argsort(t, kind="stable")

@@ -1,0 +1,127 @@
+"""Three-term roofline analysis from compiled (dry-run) artifacts.
+
+Per the assignment:
+
+    compute term    = HLO_FLOPs / (chips * peak_FLOP/s)
+    memory term     = HLO_bytes / (chips * HBM_bw)
+    collective term = collective_bytes / (chips * link_bw)
+
+``cost_analysis()`` supplies HLO_FLOPs / HLO_bytes; collective bytes
+come from :mod:`repro.core.hlo` text parsing.  ``model_flops``
+(6·N·D dense, 6·N_active·D MoE) is passed in by the caller so the
+useful-compute ratio is reported.
+
+Note on units: on a multi-device module XLA's cost_analysis reports the
+*per-device* program (SPMD), so we default ``flops_are_global=False``.
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+from typing import Dict, Optional
+
+from repro.core.hw import TpuSpec, TPU_V5E
+from repro.core.hlo import (CollectiveStats, collective_stats, module_mix,
+                            parse_hlo)
+from repro.core.mix import InstructionMix
+
+__all__ = ["RooflineTerms", "roofline_from_artifacts", "format_roofline_row"]
+
+
+@dataclasses.dataclass
+class RooflineTerms:
+    name: str
+    chips: int
+    # raw statics
+    hlo_flops: float            # per-device
+    hlo_bytes: float            # per-device
+    collective_bytes: float     # per-device
+    model_flops: float          # global useful FLOPs (6ND or 6·N_active·D)
+    # derived (seconds)
+    t_compute: float
+    t_memory: float
+    t_collective: float
+    dominant: str
+    useful_ratio: float         # model_flops / (hlo_flops * chips)
+    roofline_frac: float        # useful compute time / bound
+    note: str = ""
+    collectives_by_kind: Optional[Dict[str, float]] = None
+
+    def as_dict(self) -> Dict[str, object]:
+        d = dataclasses.asdict(self)
+        return d
+
+    def json(self) -> str:
+        return json.dumps(self.as_dict())
+
+
+def roofline_from_artifacts(name: str,
+                            cost: Dict[str, float],
+                            hlo_text: Optional[str],
+                            chips: int,
+                            model_flops: float,
+                            spec: TpuSpec = TPU_V5E,
+                            ici_links: int = 4,
+                            flops_are_global: bool = False,
+                            collectives: Optional[CollectiveStats] = None,
+                            mix: Optional[InstructionMix] = None,
+                            note: str = "") -> RooflineTerms:
+    """Build the three terms for one (arch x shape x mesh) cell.
+
+    Prefers the loop-aware module mix (``repro.core.hlo.module_mix``)
+    over ``cost_analysis`` — XLA's analysis counts while bodies once,
+    undercounting scan-over-layers / microbatch loops by their trip
+    counts.  ``ici_links`` — links per chip (v5e 2D torus: 4).
+    """
+    if mix is None and hlo_text is not None:
+        mod = parse_hlo(hlo_text)
+        mix = module_mix(mod)
+        if collectives is None:
+            collectives = collective_stats(mod)
+    if collectives is None:
+        collectives = CollectiveStats({}, {}, 0.0, [])
+    if mix is not None:
+        # per-device, loop-aware
+        flops = mix.mxu_flops
+        nbytes = mix.hbm_bytes
+        t_c = (mix.mxu_flops / spec.peak_flops_bf16
+               + mix.vpu_flops / spec.vpu_flops
+               + mix.trans_flops / spec.transcendental_flops)
+    else:
+        flops = float(cost.get("flops", 0.0) or 0.0)
+        nbytes = float(cost.get("bytes accessed", 0.0) or 0.0)
+        if flops_are_global:
+            flops /= chips
+            nbytes /= chips
+        t_c = flops / spec.peak_flops_bf16
+    cbytes = collectives.total_bytes
+
+    # Per-device terms (SPMD program: each chip runs the same per-device
+    # program, so per-device time IS the step time).
+    t_m = nbytes / spec.hbm_bw
+    t_x = cbytes / (spec.ici_bw_per_link * ici_links)
+    terms = {"compute": t_c, "memory": t_m, "collective": t_x}
+    dominant = max(terms, key=terms.get)
+
+    useful = model_flops / max(flops * chips, 1.0)
+    # roofline fraction: time the useful math alone would need at peak,
+    # over the statically-predicted bound (max of the three terms).
+    t_useful = (model_flops / chips) / spec.peak_flops_bf16
+    bound = max(t_c, t_m, t_x, 1e-30)
+    frac = t_useful / bound
+
+    return RooflineTerms(
+        name=name, chips=chips,
+        hlo_flops=flops, hlo_bytes=nbytes, collective_bytes=cbytes,
+        model_flops=model_flops,
+        t_compute=t_c, t_memory=t_m, t_collective=t_x,
+        dominant=dominant, useful_ratio=useful, roofline_frac=frac,
+        note=note, collectives_by_kind=dict(collectives.by_kind_bytes),
+    )
+
+
+def format_roofline_row(r: RooflineTerms) -> str:
+    return ("{:<42s} chips={:<4d} t_c={:.3e}s t_m={:.3e}s t_x={:.3e}s "
+            "dom={:<10s} useful={:.3f} roofline={:.3f} {}").format(
+        r.name, r.chips, r.t_compute, r.t_memory, r.t_collective,
+        r.dominant, r.useful_ratio, r.roofline_frac, r.note)

@@ -1,0 +1,6 @@
+from repro.distributed.sharding import (Rules, WEIGHT_RULES, ACT_RULES,
+                                        CACHE_RULES, CACHE_RULES_SEQSHARD,
+                                        logical_spec, named_sharding,
+                                        Sharder, tree_shardings)
+from repro.distributed.train import (TrainStepConfig, make_train_step,
+                                     make_serve_fns)

@@ -1,0 +1,22 @@
+"""Pallas TPU kernels: the paper's Table IV benchmark kernels (atax,
+BiCG, jacobi3d/ex14FJ, matVec2D) plus the LM hot-spots (matmul, flash
+attention).  Each module ships the pallas_call, an analytic static_info
+for the tuner, and a TunableKernel factory; oracles live in ref.py and
+jit'd wrappers in ops.py."""
+from repro.kernels import ops, ref
+from repro.kernels.matmul import matmul_pallas, make_tunable_matmul
+from repro.kernels.matvec import matvec_pallas, make_tunable_matvec
+from repro.kernels.atax import atax_pallas, make_tunable_atax
+from repro.kernels.bicg import bicg_pallas, make_tunable_bicg
+from repro.kernels.jacobi3d import jacobi3d_pallas, make_tunable_jacobi3d
+from repro.kernels.flash_attention import (flash_attention_pallas,
+                                           make_tunable_flash)
+
+TUNABLE_FACTORIES = {
+    "matmul": make_tunable_matmul,
+    "matvec": make_tunable_matvec,
+    "atax": make_tunable_atax,
+    "bicg": make_tunable_bicg,
+    "jacobi3d": make_tunable_jacobi3d,
+    "flash": make_tunable_flash,
+}

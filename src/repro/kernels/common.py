@@ -1,0 +1,90 @@
+"""Shared helpers for the Pallas kernel layer.
+
+Every kernel in this package follows the same contract:
+
+* ``<name>_pallas(...)`` — the ``pl.pallas_call`` with explicit
+  BlockSpec VMEM tiling, TPU as the lowering target; ``interpret=True``
+  executes the same kernel body on CPU for validation.
+* an analytic ``static_info`` builder that derives the instruction mix
+  and TPU occupancy of a given launch configuration **without running
+  or compiling anything** — the static-analyzer input for the tuner.
+* ``make_tunable(...)`` — packages the kernel as a
+  :class:`repro.core.autotuner.TunableKernel` with its Table-III-style
+  search space.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.hw import TPU_V5E, TpuSpec, dtype_bytes
+from repro.core.mix import InstructionMix
+from repro.core.occupancy import tpu_occupancy
+from repro.core.autotuner import KernelStaticInfo
+
+__all__ = ["cdiv", "default_interpret", "round_up", "block_info",
+           "pick_divisor_candidates"]
+
+
+def cdiv(a: int, b: int) -> int:
+    return -(-a // b)
+
+
+def round_up(x: int, m: int) -> int:
+    return cdiv(x, m) * m
+
+
+def default_interpret() -> bool:
+    """Interpret on anything that is not a real TPU backend."""
+    return jax.default_backend() != "tpu"
+
+
+def pick_divisor_candidates(n: int, candidates: Sequence[int]) -> tuple:
+    """Keep candidates that divide n (BlockSpec-exact tiling)."""
+    vals = tuple(c for c in candidates if c <= n and n % c == 0)
+    return vals or (n,)
+
+
+def block_info(*,
+               in_blocks: Sequence[tuple],
+               out_blocks: Sequence[tuple],
+               in_dtypes: Sequence,
+               out_dtypes: Sequence,
+               flops_per_step: float,
+               vpu_per_step: float = 0.0,
+               trans_per_step: float = 0.0,
+               grid_steps: int = 1,
+               scratch_bytes: int = 0,
+               mix_scale: float | None = None,
+               spec: TpuSpec = TPU_V5E) -> KernelStaticInfo:
+    """Analytic KernelStaticInfo from block shapes + per-step op counts.
+
+    ``mix_scale`` defaults to ``grid_steps`` (total work = per-step work
+    times the number of grid steps).
+    """
+    in_bytes = [int(np.prod(b)) * dtype_bytes(d)
+                for b, d in zip(in_blocks, in_dtypes)]
+    out_bytes = [int(np.prod(b)) * dtype_bytes(d)
+                 for b, d in zip(out_blocks, out_dtypes)]
+    occ = tpu_occupancy(in_bytes, out_bytes, flops_per_step,
+                        grid_steps=grid_steps,
+                        scratch_bytes=scratch_bytes,
+                        block_shapes=list(in_blocks) + list(out_blocks),
+                        spec=spec)
+    scale = grid_steps if mix_scale is None else mix_scale
+    per_step_bytes = float(sum(in_bytes) + sum(out_bytes))
+    mix = InstructionMix(
+        mxu_flops=flops_per_step * scale,
+        vpu_flops=vpu_per_step * scale,
+        trans_flops=trans_per_step * scale,
+        hbm_bytes=per_step_bytes * scale,
+        vmem_bytes=per_step_bytes * scale,
+        mem_ops=(per_step_bytes / 4.0) * scale,
+        ctrl_ops=float(grid_steps),
+        reg_ops=0.0,
+    )
+    return KernelStaticInfo(mix=mix, occupancy=occ)

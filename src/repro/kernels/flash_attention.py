@@ -1,0 +1,157 @@
+"""Flash attention (online-softmax) Pallas kernel.
+
+The LM hot-spot kernel the framework's models lean on.  Grid
+(B*H, Sq/bq, Skv/bkv) with the KV axis innermost/sequential; running
+max/denominator/accumulator live in VMEM scratch across KV steps
+(FlashAttention-2 schedule, adapted to the TPU pipeline: blocks are
+(8,128)-aligned, accumulation in f32 on the MXU).
+
+Tunables: bq, bkv.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Dict
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.core.autotuner import KernelStaticInfo, TunableKernel
+from repro.core.search import SearchSpace
+from repro.kernels.common import (block_info, cdiv, default_interpret,
+                                  pick_divisor_candidates)
+
+__all__ = ["flash_attention_pallas", "flash_static_info",
+           "make_tunable_flash"]
+
+_NEG_INF = -1e30
+
+
+def _flash_kernel(q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref,
+                  *, causal, scale, bq, bkv):
+    kv_i = pl.program_id(2)
+    q_i = pl.program_id(1)
+
+    @pl.when(kv_i == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, _NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    q = q_ref[0].astype(jnp.float32)           # (bq, d)
+    k = k_ref[0].astype(jnp.float32)           # (bkv, d)
+    v = v_ref[0].astype(jnp.float32)           # (bkv, d)
+    s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                            preferred_element_type=jnp.float32) * scale
+
+    if causal:
+        rows = q_i * bq + jax.lax.broadcasted_iota(jnp.int32, s.shape, 0)
+        cols = kv_i * bkv + jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
+        s = jnp.where(rows >= cols, s, _NEG_INF)
+
+    m_prev = m_ref[...]                         # (bq, 1)
+    m_cur = jnp.max(s, axis=1, keepdims=True)
+    m_new = jnp.maximum(m_prev, m_cur)
+    p = jnp.exp(s - m_new)                      # (bq, bkv)
+    alpha = jnp.exp(m_prev - m_new)             # (bq, 1)
+    l_ref[...] = l_ref[...] * alpha + p.sum(axis=1, keepdims=True)
+    acc_ref[...] = acc_ref[...] * alpha + jax.lax.dot_general(
+        p, v, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32)
+    m_ref[...] = m_new
+
+    @pl.when(kv_i == pl.num_programs(2) - 1)
+    def _flush():
+        denom = jnp.maximum(l_ref[...], 1e-30)
+        o_ref[0] = (acc_ref[...] / denom).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("causal", "bq", "bkv", "interpret"))
+def flash_attention_pallas(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                           causal: bool = True, bq: int = 128,
+                           bkv: int = 128,
+                           interpret: bool | None = None) -> jax.Array:
+    """q, k, v: (B, H, S, D) -> (B, H, S, D).  GQA callers broadcast KV."""
+    if interpret is None:
+        interpret = default_interpret()
+    b, h, sq, d = q.shape
+    skv = k.shape[2]
+    assert k.shape == (b, h, skv, d) and v.shape == (b, h, skv, d)
+    bq = min(bq, sq)
+    bkv = min(bkv, skv)
+    assert sq % bq == 0 and skv % bkv == 0
+    scale = 1.0 / (d ** 0.5)
+    qr = q.reshape(b * h, sq, d)
+    kr = k.reshape(b * h, skv, d)
+    vr = v.reshape(b * h, skv, d)
+    kern = functools.partial(_flash_kernel, causal=causal, scale=scale,
+                             bq=bq, bkv=bkv)
+    out = pl.pallas_call(
+        kern,
+        grid=(b * h, sq // bq, skv // bkv),
+        in_specs=[
+            pl.BlockSpec((1, bq, d), lambda g, i, j: (g, i, 0)),
+            pl.BlockSpec((1, bkv, d), lambda g, i, j: (g, j, 0)),
+            pl.BlockSpec((1, bkv, d), lambda g, i, j: (g, j, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, bq, d), lambda g, i, j: (g, i, 0)),
+        out_shape=jax.ShapeDtypeStruct((b * h, sq, d), q.dtype),
+        scratch_shapes=[pltpu.VMEM((bq, 1), jnp.float32),
+                        pltpu.VMEM((bq, 1), jnp.float32),
+                        pltpu.VMEM((bq, d), jnp.float32)],
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("parallel", "parallel", "arbitrary")),
+        interpret=interpret,
+    )(qr, kr, vr)
+    return out.reshape(b, h, sq, d)
+
+
+def flash_static_info(b: int, h: int, sq: int, skv: int, d: int, dtype,
+                      params: Dict, causal: bool = True) -> KernelStaticInfo:
+    bq = min(params["bq"], sq)
+    bkv = min(params["bkv"], skv)
+    steps = (b * h) * cdiv(sq, bq) * cdiv(skv, bkv)
+    # causal masking skips ~half the logits -> effective FLOP discount.
+    eff = 0.5 if causal and sq == skv else 1.0
+    return block_info(
+        in_blocks=[(bq, d), (bkv, d), (bkv, d)],
+        out_blocks=[(bq, d)],
+        in_dtypes=[dtype] * 3,
+        out_dtypes=[dtype],
+        flops_per_step=4.0 * bq * bkv * d * eff,   # QK^T + PV
+        vpu_per_step=6.0 * bq * bkv * eff,         # mask/max/sum/scale
+        trans_per_step=(bq * bkv + bq) * eff,      # exp
+        grid_steps=steps,
+        scratch_bytes=(bq * 2 + bq * d) * 4,
+    )
+
+
+def make_tunable_flash(b: int = 2, h: int = 4, s: int = 1024, d: int = 128,
+                       causal: bool = True, dtype=jnp.float32,
+                       seed: int = 0) -> TunableKernel:
+    space = SearchSpace({
+        "bq": pick_divisor_candidates(s, (128, 256, 512)),
+        "bkv": pick_divisor_candidates(s, (128, 256, 512)),
+    })
+
+    def build(p):
+        return functools.partial(flash_attention_pallas, causal=causal,
+                                 bq=p["bq"], bkv=p["bkv"])
+
+    def static_info(p):
+        return flash_static_info(b, h, s, s, d, dtype, p, causal=causal)
+
+    def make_inputs():
+        kk = jax.random.PRNGKey(seed)
+        kq, kkey, kv = jax.random.split(kk, 3)
+        shp = (b, h, s, d)
+        return (jax.random.normal(kq, shp, dtype),
+                jax.random.normal(kkey, shp, dtype),
+                jax.random.normal(kv, shp, dtype))
+
+    from repro.kernels.ref import attention_ref
+    return TunableKernel(name=f"flash_{b}x{h}x{s}x{d}", space=space,
+                         build=build, static_info=static_info,
+                         make_inputs=make_inputs, reference=attention_ref)

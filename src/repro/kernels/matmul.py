@@ -1,0 +1,110 @@
+"""Blocked matmul Pallas kernel (the MXU workhorse).
+
+Grid (M/bm, N/bn, K/bk) with an f32 VMEM accumulator tile; the K axis
+is the innermost, ``arbitrary`` (sequential) grid dimension so the
+accumulator carries across K steps — the canonical TPU tiling.
+
+Tunables (the Table III analogue): bm, bn, bk.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Dict
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.core.autotuner import KernelStaticInfo, TunableKernel
+from repro.core.search import SearchSpace
+from repro.kernels.common import (block_info, cdiv, default_interpret,
+                                  pick_divisor_candidates)
+
+__all__ = ["matmul_pallas", "matmul_static_info", "make_tunable_matmul"]
+
+
+def _mm_kernel(a_ref, b_ref, o_ref, acc_ref):
+    k = pl.program_id(2)
+
+    @pl.when(k == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    acc_ref[...] += jnp.dot(a_ref[...], b_ref[...],
+                            preferred_element_type=jnp.float32)
+
+    @pl.when(k == pl.num_programs(2) - 1)
+    def _flush():
+        o_ref[...] = acc_ref[...].astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("bm", "bn", "bk", "interpret"))
+def matmul_pallas(a: jax.Array, b: jax.Array, *,
+                  bm: int = 256, bn: int = 256, bk: int = 256,
+                  interpret: bool | None = None) -> jax.Array:
+    if interpret is None:
+        interpret = default_interpret()
+    m, k = a.shape
+    k2, n = b.shape
+    assert k == k2, (a.shape, b.shape)
+    bm, bn, bk = min(bm, m), min(bn, n), min(bk, k)
+    assert m % bm == 0 and n % bn == 0 and k % bk == 0, (m, n, k, bm, bn, bk)
+    grid = (m // bm, n // bn, k // bk)
+    return pl.pallas_call(
+        _mm_kernel,
+        grid=grid,
+        in_specs=[pl.BlockSpec((bm, bk), lambda i, j, kk: (i, kk)),
+                  pl.BlockSpec((bk, bn), lambda i, j, kk: (kk, j))],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, kk: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, n), a.dtype),
+        scratch_shapes=[pltpu.VMEM((bm, bn), jnp.float32)],
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("parallel", "parallel", "arbitrary")),
+        interpret=interpret,
+    )(a, b)
+
+
+def matmul_static_info(m: int, n: int, k: int, dtype,
+                       params: Dict) -> KernelStaticInfo:
+    bm = min(params["bm"], m)
+    bn = min(params["bn"], n)
+    bk = min(params["bk"], k)
+    steps = cdiv(m, bm) * cdiv(n, bn) * cdiv(k, bk)
+    return block_info(
+        in_blocks=[(bm, bk), (bk, bn)],
+        out_blocks=[(bm, bn)],
+        in_dtypes=[dtype, dtype],
+        out_dtypes=[dtype],
+        flops_per_step=2.0 * bm * bn * bk,
+        grid_steps=steps,
+        scratch_bytes=bm * bn * 4,
+    )
+
+
+def make_tunable_matmul(m: int = 1024, n: int = 1024, k: int = 1024,
+                        dtype=jnp.float32, seed: int = 0) -> TunableKernel:
+    sizes = (128, 256, 512)
+    space = SearchSpace({
+        "bm": pick_divisor_candidates(m, sizes),
+        "bn": pick_divisor_candidates(n, sizes),
+        "bk": pick_divisor_candidates(k, sizes),
+    })
+
+    def build(p):
+        return functools.partial(matmul_pallas, bm=p["bm"], bn=p["bn"],
+                                 bk=p["bk"])
+
+    def static_info(p):
+        return matmul_static_info(m, n, k, dtype, p)
+
+    def make_inputs():
+        kk = jax.random.PRNGKey(seed)
+        ka, kb = jax.random.split(kk)
+        return (jax.random.normal(ka, (m, k), dtype),
+                jax.random.normal(kb, (k, n), dtype))
+
+    from repro.kernels.ref import matmul_ref
+    return TunableKernel(name=f"matmul_{m}x{n}x{k}", space=space,
+                         build=build, static_info=static_info,
+                         make_inputs=make_inputs, reference=matmul_ref)

@@ -1,0 +1,104 @@
+"""MatVec2D (paper Table IV): y = A x as a Pallas kernel.
+
+Grid (M/bm, N/bk): row blocks parallel, column blocks sequential with an
+f32 accumulator column.  The vector is carried as (N, 1); the static
+analyzer's MXU-alignment model shows the n=1 lane-padding waste that
+makes mat-vec memory-bound — the paper's "matVec2D prefers higher thread
+settings" observation maps to wider row blocks here.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Dict
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.core.autotuner import KernelStaticInfo, TunableKernel
+from repro.core.search import SearchSpace
+from repro.kernels.common import (block_info, cdiv, default_interpret,
+                                  pick_divisor_candidates)
+
+__all__ = ["matvec_pallas", "matvec_static_info", "make_tunable_matvec"]
+
+
+def _mv_kernel(a_ref, x_ref, y_ref, acc_ref):
+    j = pl.program_id(1)
+
+    @pl.when(j == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    acc_ref[...] += jnp.dot(a_ref[...], x_ref[...],
+                            preferred_element_type=jnp.float32)
+
+    @pl.when(j == pl.num_programs(1) - 1)
+    def _flush():
+        y_ref[...] = acc_ref[...].astype(y_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("bm", "bk", "interpret"))
+def matvec_pallas(a: jax.Array, x: jax.Array, *,
+                  bm: int = 256, bk: int = 512,
+                  interpret: bool | None = None) -> jax.Array:
+    if interpret is None:
+        interpret = default_interpret()
+    m, n = a.shape
+    assert x.shape == (n, 1), x.shape
+    bm, bk = min(bm, m), min(bk, n)
+    assert m % bm == 0 and n % bk == 0
+    grid = (m // bm, n // bk)
+    return pl.pallas_call(
+        _mv_kernel,
+        grid=grid,
+        in_specs=[pl.BlockSpec((bm, bk), lambda i, j: (i, j)),
+                  pl.BlockSpec((bk, 1), lambda i, j: (j, 0))],
+        out_specs=pl.BlockSpec((bm, 1), lambda i, j: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((m, 1), a.dtype),
+        scratch_shapes=[pltpu.VMEM((bm, 1), jnp.float32)],
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("parallel", "arbitrary")),
+        interpret=interpret,
+    )(a, x)
+
+
+def matvec_static_info(m: int, n: int, dtype, params: Dict
+                       ) -> KernelStaticInfo:
+    bm, bk = min(params["bm"], m), min(params["bk"], n)
+    steps = cdiv(m, bm) * cdiv(n, bk)
+    return block_info(
+        in_blocks=[(bm, bk), (bk, 1)],
+        out_blocks=[(bm, 1)],
+        in_dtypes=[dtype, dtype],
+        out_dtypes=[dtype],
+        flops_per_step=2.0 * bm * bk,
+        grid_steps=steps,
+        scratch_bytes=bm * 4,
+    )
+
+
+def make_tunable_matvec(m: int = 2048, n: int = 2048,
+                        dtype=jnp.float32, seed: int = 0) -> TunableKernel:
+    space = SearchSpace({
+        "bm": pick_divisor_candidates(m, (64, 128, 256, 512, 1024)),
+        "bk": pick_divisor_candidates(n, (128, 256, 512, 1024)),
+    })
+
+    def build(p):
+        return functools.partial(matvec_pallas, bm=p["bm"], bk=p["bk"])
+
+    def static_info(p):
+        return matvec_static_info(m, n, dtype, p)
+
+    def make_inputs():
+        kk = jax.random.PRNGKey(seed)
+        ka, kx = jax.random.split(kk)
+        return (jax.random.normal(ka, (m, n), dtype),
+                jax.random.normal(kx, (n, 1), dtype))
+
+    from repro.kernels.ref import matvec_ref
+    return TunableKernel(name=f"matvec_{m}x{n}", space=space, build=build,
+                         static_info=static_info, make_inputs=make_inputs,
+                         reference=matvec_ref)

@@ -1,0 +1,89 @@
+"""Public jit'd entry points for the kernel layer.
+
+Each op dispatches to the Pallas kernel with tuned-by-default launch
+parameters (the static tuner's suggestions for mid-size problems) and
+falls back to interpret mode off-TPU.  ``tuned_params`` lets a caller
+inject a :class:`~repro.core.autotuner.TuningReport`'s best_params.
+"""
+from __future__ import annotations
+
+from typing import Dict, Optional
+
+import jax
+
+from repro.kernels.matmul import matmul_pallas
+from repro.kernels.matvec import matvec_pallas
+from repro.kernels.atax import atax_pallas
+from repro.kernels.bicg import bicg_pallas
+from repro.kernels.jacobi3d import jacobi3d_pallas
+from repro.kernels.flash_attention import flash_attention_pallas
+
+__all__ = ["matmul", "matvec", "atax", "bicg", "jacobi3d",
+           "flash_attention"]
+
+_P = Optional[Dict]
+
+
+def _largest_divisor(n: int, candidates) -> int:
+    for c in sorted(candidates, reverse=True):
+        if c <= n and n % c == 0:
+            return c
+    return n
+
+
+def matmul(a, b, tuned_params: _P = None, **kw):
+    p = tuned_params or {}
+    m, k = a.shape
+    n = b.shape[1]
+    return matmul_pallas(
+        a, b,
+        bm=p.get("bm", _largest_divisor(m, (256, 128, 64, 32, 16, 8))),
+        bn=p.get("bn", _largest_divisor(n, (256, 128, 64, 32, 16, 8))),
+        bk=p.get("bk", _largest_divisor(k, (256, 128, 64, 32, 16, 8))),
+        **kw)
+
+
+def matvec(a, x, tuned_params: _P = None, **kw):
+    p = tuned_params or {}
+    m, n = a.shape
+    return matvec_pallas(
+        a, x,
+        bm=p.get("bm", _largest_divisor(m, (512, 256, 128, 64, 32))),
+        bk=p.get("bk", _largest_divisor(n, (512, 256, 128, 64, 32))),
+        **kw)
+
+
+def atax(a, x, tuned_params: _P = None, **kw):
+    p = tuned_params or {}
+    m = a.shape[0]
+    return atax_pallas(
+        a, x, bm=p.get("bm", _largest_divisor(m, (256, 128, 64, 32, 16))),
+        **kw)
+
+
+def bicg(a, p_vec, r, tuned_params: _P = None, **kw):
+    p = tuned_params or {}
+    m = a.shape[0]
+    return bicg_pallas(
+        a, p_vec, r,
+        bm=p.get("bm", _largest_divisor(m, (256, 128, 64, 32, 16))),
+        **kw)
+
+
+def jacobi3d(u, tuned_params: _P = None, **kw):
+    p = tuned_params or {}
+    z = u.shape[0]
+    return jacobi3d_pallas(
+        u, bz=p.get("bz", _largest_divisor(z, (8, 4, 2, 1))), **kw)
+
+
+def flash_attention(q, k, v, causal: bool = True, tuned_params: _P = None,
+                    **kw):
+    p = tuned_params or {}
+    s = q.shape[2]
+    skv = k.shape[2]
+    return flash_attention_pallas(
+        q, k, v, causal=causal,
+        bq=p.get("bq", _largest_divisor(s, (256, 128, 64, 32, 16, 8))),
+        bkv=p.get("bkv", _largest_divisor(skv, (256, 128, 64, 32, 16, 8))),
+        **kw)

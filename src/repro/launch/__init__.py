@@ -1,0 +1,6 @@
+"""Launchers: mesh factory, multi-pod dry-run, train, serve.
+
+NOTE: import ``repro.launch.dryrun`` only as __main__ (it sets
+XLA_FLAGS=--xla_force_host_platform_device_count=512 at import time).
+"""
+from repro.launch.mesh import make_production_mesh, mesh_num_chips, ici_links

@@ -1,0 +1,30 @@
+"""Production mesh factory.
+
+Single pod: (data=16, model=16) = 256 chips (one v5e pod).
+Multi-pod:  (pod=2, data=16, model=16) = 512 chips; the ``pod`` axis is
+pure data parallelism over the slower inter-pod tier.
+
+A FUNCTION, not a module constant: importing this module never touches
+jax device state (the dry-run sets XLA_FLAGS before any jax import).
+"""
+from __future__ import annotations
+
+import jax
+
+__all__ = ["make_production_mesh", "mesh_num_chips", "ici_links"]
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def mesh_num_chips(mesh) -> int:
+    import numpy as np
+    return int(np.prod(mesh.devices.shape))
+
+
+def ici_links(mesh) -> int:
+    """Links per chip for the collective roofline term: v5e 2D torus -> 4."""
+    return 4

@@ -1,0 +1,78 @@
+"""Serving launcher: batched prefill + token-by-token decode.
+
+    PYTHONPATH=src python -m repro.launch.serve --arch hymba-1.5b \
+        --smoke --batch 4 --prompt-len 64 --gen 32
+
+Implements the production decode loop (prefill -> jit'd decode_step
+with donated cache; greedy or temperature sampling) against any arch in
+the registry.
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--smoke", action="store_true")
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--prompt-len", type=int, default=64)
+    ap.add_argument("--gen", type=int, default=32)
+    ap.add_argument("--temperature", type=float, default=0.0)
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args()
+
+    from repro.configs import get_config, get_smoke
+    from repro.distributed import make_serve_fns
+    from repro.models import build_model
+
+    cfg = get_smoke(args.arch) if args.smoke else get_config(args.arch)
+    model = build_model(cfg)
+    key = jax.random.PRNGKey(args.seed)
+    params = model.init(key)
+    prefill, decode_step = make_serve_fns(model)
+    prefill = jax.jit(prefill)
+    decode_step = jax.jit(decode_step, donate_argnums=(1,))
+
+    batch = {"tokens": jax.random.randint(
+        key, (args.batch, args.prompt_len), 0, cfg.vocab)}
+    if cfg.frontend == "frames":
+        batch["frames"] = jax.random.normal(
+            key, (args.batch, cfg.enc_seq, cfg.d_model), jnp.bfloat16)
+
+    t0 = time.perf_counter()
+    logits, cache = prefill(params, batch)
+    jax.block_until_ready(logits)
+    t_prefill = time.perf_counter() - t0
+    print(f"[serve] prefill {args.batch}x{args.prompt_len}: "
+          f"{t_prefill*1e3:.1f} ms")
+
+    tok = jnp.argmax(logits[:, -1:], axis=-1).astype(jnp.int32)
+    out_tokens = [tok]
+    t0 = time.perf_counter()
+    for i in range(args.gen):
+        logits, cache = decode_step(params, cache, tok)
+        if args.temperature > 0:
+            key, sub = jax.random.split(key)
+            tok = jax.random.categorical(
+                sub, logits[:, -1] / args.temperature)[:, None]
+            tok = tok.astype(jnp.int32)
+        else:
+            tok = jnp.argmax(logits[:, -1:], axis=-1).astype(jnp.int32)
+        out_tokens.append(tok)
+    jax.block_until_ready(tok)
+    dt = (time.perf_counter() - t0) / args.gen
+    toks = np.concatenate([np.asarray(t) for t in out_tokens], axis=1)
+    print(f"[serve] decode: {dt*1e3:.1f} ms/token "
+          f"({args.batch} sequences x {args.gen} tokens)")
+    print(f"[serve] sample tokens[0]: {toks[0][:16].tolist()}")
+
+
+if __name__ == "__main__":
+    main()

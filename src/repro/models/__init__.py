@@ -1,0 +1,8 @@
+"""Model zoo: dense / MoE / SSD (Mamba-2) / hybrid (Hymba) / enc-dec
+(Whisper) families in pure JAX (scan-over-layers, remat-aware,
+logical-axis sharded)."""
+from repro.models.config import LM_SHAPES, ModelConfig, ShapeSpec
+from repro.models.model import Model, build_model, batch_shapes
+from repro.models.params import (Param, param, param_shardings,
+                                 tree_param_count, tree_param_bytes,
+                                 map_params, stack_dims)

@@ -1,0 +1,301 @@
+"""Shared neural layers (pure functions over Param trees).
+
+Everything computes in ``compute_dtype`` (bf16 by default) with f32
+norms/softmax and f32 residual-safe accumulations, matching the mixed-
+precision recipe the assigned checkpoints train with.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.distributed.sharding import Sharder
+from repro.models.params import Param, param
+
+__all__ = ["rms_norm", "make_rope", "apply_rope", "init_attention",
+           "attention", "attention_decode", "init_mlp", "mlp",
+           "causal_mask_bias", "AttnConfig"]
+
+
+# ---------------------------------------------------------------------------
+# norms / rope
+# ---------------------------------------------------------------------------
+
+
+def rms_norm(x: jax.Array, w: Param, eps: float = 1e-6) -> jax.Array:
+    """RMSNorm with gamma stored directly (init ones); f32 math."""
+    return _rms(x, w.value, eps)
+
+
+def _rms(x, w, eps=1e-6):
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    return (xf * jax.lax.rsqrt(var + eps) * w.astype(jnp.float32)).astype(x.dtype)
+
+
+def make_rope(head_dim: int, theta: float = 1e4):
+    inv = 1.0 / (theta ** (jnp.arange(0, head_dim, 2, dtype=jnp.float32)
+                           / head_dim))
+    return inv  # (head_dim/2,)
+
+
+def apply_rope(x: jax.Array, positions: jax.Array, inv_freq: jax.Array
+               ) -> jax.Array:
+    """x: (..., S, head_dim); positions: (..., S) int32 (broadcastable)."""
+    ang = positions[..., None].astype(jnp.float32) * inv_freq  # (...,S,hd/2)
+    sin, cos = jnp.sin(ang), jnp.cos(ang)
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# attention
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class AttnConfig:
+    d_model: int
+    n_heads: int
+    n_kv: int
+    head_dim: int
+    qkv_bias: bool = False
+    qk_norm: bool = False
+    rope_theta: float = 1e4
+    window: int = 0              # 0 = full attention
+    causal: bool = True          # False: bidirectional (encoder)
+    chunk_q: int = 1024          # chunked path q-block for long seqs
+    dense_below: int = 4096      # use dense logits for S < this
+    kv_repeat: int = 1           # replicate KV heads in the decode cache
+                                 # so kv*r divides the TP axis (vLLM-
+                                 # style; exact GQA semantics preserved)
+
+
+def init_attention(key, cfg: AttnConfig) -> Dict:
+    ks = jax.random.split(key, 6)
+    d, h, kv, hd = cfg.d_model, cfg.n_heads, cfg.n_kv, cfg.head_dim
+    p = {
+        "wq": param(ks[0], (d, h, hd), ("embed", "heads", "head_dim")),
+        "wk": param(ks[1], (d, kv, hd), ("embed", "kv_heads", "head_dim")),
+        "wv": param(ks[2], (d, kv, hd), ("embed", "kv_heads", "head_dim")),
+        "wo": param(ks[3], (h, hd, d), ("heads", "head_dim", "embed"),
+                    scale=1.0 / math.sqrt(h * hd)),
+    }
+    if cfg.qkv_bias:
+        p["bq"] = param(ks[4], (h, hd), ("heads", "head_dim"), init="zeros")
+        p["bk"] = param(ks[5], (kv, hd), ("kv_heads", "head_dim"),
+                        init="zeros")
+        p["bv"] = param(ks[5], (kv, hd), ("kv_heads", "head_dim"),
+                        init="zeros")
+    if cfg.qk_norm:
+        p["q_norm"] = param(key, (hd,), ("head_dim",), init="ones")
+        p["k_norm"] = param(key, (hd,), ("head_dim",), init="ones")
+    return p
+
+
+def _project_qkv(p: Dict, x: jax.Array, cfg: AttnConfig, positions):
+    q = jnp.einsum("bsd,dhk->bshk", x, p["wq"].value.astype(x.dtype))
+    k = jnp.einsum("bsd,dhk->bshk", x, p["wk"].value.astype(x.dtype))
+    v = jnp.einsum("bsd,dhk->bshk", x, p["wv"].value.astype(x.dtype))
+    if cfg.qkv_bias:
+        q = q + p["bq"].value.astype(x.dtype)
+        k = k + p["bk"].value.astype(x.dtype)
+        v = v + p["bv"].value.astype(x.dtype)
+    if cfg.qk_norm:
+        q = _rms(q, p["q_norm"].value)
+        k = _rms(k, p["k_norm"].value)
+    inv = make_rope(cfg.head_dim, cfg.rope_theta)
+    q = apply_rope(q, positions[:, :, None], inv)
+    k = apply_rope(k, positions[:, :, None], inv)
+    return q, k, v
+
+
+def causal_mask_bias(q_pos: jax.Array, k_pos: jax.Array, window=0
+                     ) -> jax.Array:
+    """Additive bias (0 / -inf) of shape broadcastable to (..., Sq, Sk).
+
+    ``window`` may be a static int (0 = full causal) or a traced scalar
+    (per-layer sliding windows in the hybrid family; window >= seq acts
+    as full attention)."""
+    ok = k_pos[None, :] <= q_pos[:, None]
+    static = isinstance(window, int)
+    if not static or window > 0:
+        ok &= (q_pos[:, None] - k_pos[None, :]) < window
+    return jnp.where(ok, 0.0, -1e30).astype(jnp.float32)
+
+
+def _sdpa(q, k, v, bias, scale):
+    """q: (B,S,H,hd), k/v: (B,Sk,KV,hd) — GQA dense attention.
+
+    KV heads are broadcast up to H before the einsum so the head axis
+    stays cleanly TP-sharded (the Megatron GQA recipe); XLA fuses the
+    broadcast into the matmul.  Softmax in f32, PV in the value dtype.
+    """
+    b, s, h, hd = q.shape
+    kvh = k.shape[2]
+    if kvh != h:
+        rep = h // kvh
+        k = jnp.broadcast_to(k[:, :, :, None, :],
+                             (b, k.shape[1], kvh, rep, hd)
+                             ).reshape(b, k.shape[1], h, hd)
+        v = jnp.broadcast_to(v[:, :, :, None, :],
+                             (b, v.shape[1], kvh, rep, hd)
+                             ).reshape(b, v.shape[1], h, hd)
+    logits = jnp.einsum("bqhd,bshd->bhqs", q.astype(jnp.float32),
+                        k.astype(jnp.float32)) * scale
+    logits = logits + bias  # bias: (q, s) broadcast
+    probs = jax.nn.softmax(logits, axis=-1).astype(v.dtype)
+    out = jnp.einsum("bhqs,bshd->bqhd", probs, v)
+    return out.astype(q.dtype)
+
+
+def _sdpa_chunked(q, k, v, q_positions, k_positions, window, scale,
+                  chunk: int):
+    """Streaming over query chunks: O(S * chunk) logits memory.
+
+    q length is padded up to a chunk multiple (pad rows sliced off)."""
+    b, s, h, hd = q.shape
+    pad = (-s) % chunk
+    if pad:
+        q = jnp.pad(q, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        q_positions = jnp.pad(q_positions, ((0, 0), (0, pad)))
+    sp = s + pad
+    nchunk = sp // chunk
+    qc = q.reshape(b, nchunk, chunk, h, hd).transpose(1, 0, 2, 3, 4)
+    qp = q_positions.reshape(b, nchunk, chunk).transpose(1, 0, 2)
+
+    def body(_, qq):
+        qi, qpi = qq
+        bias = causal_mask_bias(qpi[0], k_positions[0], window)
+        return None, _sdpa(qi, k, v, bias, scale)
+
+    _, out = jax.lax.scan(body, None, (qc, qp))
+    out = out.transpose(1, 0, 2, 3, 4).reshape(b, sp, h, hd)
+    return out[:, :s]
+
+
+def attention(p: Dict, x: jax.Array, cfg: AttnConfig, shd: Sharder,
+              positions: Optional[jax.Array] = None,
+              return_kv: bool = False, window_override=None):
+    """Full-sequence (training / prefill) attention.  x: (B, S, D)."""
+    b, s, d = x.shape
+    window = cfg.window if window_override is None else window_override
+    if positions is None:
+        positions = jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32), (b, s))
+    q, k, v = _project_qkv(p, x, cfg, positions)
+    q = shd.act(q, ("batch", "seq", "heads", "head_dim"))
+    k = shd.act(k, ("batch", "seq", "kv_heads", "head_dim"))
+    v = shd.act(v, ("batch", "seq", "kv_heads", "head_dim"))
+    scale = 1.0 / math.sqrt(cfg.head_dim)
+    if not cfg.causal:
+        out = _sdpa(q, k, v, jnp.zeros((), jnp.float32), scale)
+    elif s < cfg.dense_below:
+        bias = causal_mask_bias(positions[0], positions[0], window)
+        out = _sdpa(q, k, v, bias, scale)
+    else:
+        out = _sdpa_chunked(q, k, v, positions, positions, window,
+                            scale, cfg.chunk_q)
+    out = out.astype(x.dtype)
+    y = jnp.einsum("bshk,hkd->bsd", out, p["wo"].value.astype(x.dtype))
+    y = shd.act(y, ("batch", "residual_seq", "embed"))
+    if return_kv:
+        # the cache copy lives in the decode-cache layout (kv-head /
+        # head_dim sharded), not the activation layout; kv_repeat
+        # replicates heads so kv*r divides the TP axis.
+        if cfg.kv_repeat > 1:
+            k = jnp.repeat(k, cfg.kv_repeat, axis=2)
+            v = jnp.repeat(v, cfg.kv_repeat, axis=2)
+        kc = shd.cache(k, ("batch", "cache_seq", "kv_heads", "head_dim"))
+        vc = shd.cache(v, ("batch", "cache_seq", "kv_heads", "head_dim"))
+        return y, (kc, vc)
+    return y
+
+
+def attention_decode(p: Dict, x: jax.Array, cache_k: jax.Array,
+                     cache_v: jax.Array, pos: jax.Array, cfg: AttnConfig,
+                     shd: Sharder, window_override=None,
+                     rolling: bool = False):
+    """One-token decode.  x: (B, 1, D); cache_k/v: (B, S_cache, KV, hd);
+    ``pos``: scalar int32 current position.
+
+    ``rolling=True`` treats the cache as a mod-S_cache ring buffer
+    (windowed layers / capped long-context decode); the effective
+    attention span is ``min(window, S_cache)``.  ``window_override`` may
+    be traced (per-layer windows in the hybrid family)."""
+    b = x.shape[0]
+    s_cache = cache_k.shape[1]
+    window = cfg.window if window_override is None else window_override
+    positions = jnp.full((b, 1), pos, dtype=jnp.int32)
+    q, k_new, v_new = _project_qkv(p, x, cfg, positions)
+    if cfg.kv_repeat > 1:
+        k_new = jnp.repeat(k_new, cfg.kv_repeat, axis=2)
+        v_new = jnp.repeat(v_new, cfg.kv_repeat, axis=2)
+    slot = (pos % s_cache) if rolling else pos
+    cache_k = jax.lax.dynamic_update_slice(
+        cache_k, k_new.astype(cache_k.dtype), (0, slot, 0, 0))
+    cache_v = jax.lax.dynamic_update_slice(
+        cache_v, v_new.astype(cache_v.dtype), (0, slot, 0, 0))
+    cache_k = shd.cache(cache_k, ("batch", "cache_seq", "kv_heads",
+                                  "head_dim"))
+    cache_v = shd.cache(cache_v, ("batch", "cache_seq", "kv_heads",
+                                  "head_dim"))
+    idx = jnp.arange(s_cache, dtype=jnp.int32)
+    if rolling:
+        # ring buffer: entry i holds absolute position p ≡ i (mod S_c),
+        # valid if it was written (p <= pos) and inside the window.
+        age = (pos - idx) % s_cache
+        span = jnp.minimum(jnp.asarray(window if not isinstance(window, int)
+                                       or window > 0 else s_cache,
+                                       jnp.int32), s_cache)
+        valid = (age < span) & (age <= pos)
+        bias = jnp.where(valid, 0.0, -1e30).astype(jnp.float32)[None, :]
+    else:
+        ok = idx <= pos
+        static = isinstance(window, int)
+        if not static or window > 0:
+            ok &= (pos - idx) < window
+        bias = jnp.where(ok, 0.0, -1e30).astype(jnp.float32)[None, :]
+    scale = 1.0 / math.sqrt(cfg.head_dim)
+    out = _sdpa(q, cache_k, cache_v, bias, scale).astype(x.dtype)
+    y = jnp.einsum("bshk,hkd->bsd", out, p["wo"].value.astype(x.dtype))
+    return y, (cache_k, cache_v)
+
+
+# ---------------------------------------------------------------------------
+# mlp
+# ---------------------------------------------------------------------------
+
+_ACTS = {
+    "silu": jax.nn.silu,
+    "gelu": lambda x: jax.nn.gelu(x, approximate=True),
+    "relu": jax.nn.relu,
+}
+
+
+def init_mlp(key, d_model: int, d_ff: int, act: str = "silu_glu") -> Dict:
+    ks = jax.random.split(key, 3)
+    gated = act.endswith("_glu")
+    p = {"w_up": param(ks[0], (d_model, d_ff), ("embed", "mlp")),
+         "w_down": param(ks[1], (d_ff, d_model), ("mlp", "embed"))}
+    if gated:
+        p["w_gate"] = param(ks[2], (d_model, d_ff), ("embed", "mlp"))
+    return p
+
+
+def mlp(p: Dict, x: jax.Array, act: str, shd: Sharder) -> jax.Array:
+    a = _ACTS[act.replace("_glu", "")]
+    up = jnp.einsum("bsd,df->bsf", x, p["w_up"].value.astype(x.dtype))
+    if "w_gate" in p:
+        gate = jnp.einsum("bsd,df->bsf", x,
+                          p["w_gate"].value.astype(x.dtype))
+        h = a(gate) * up
+    else:
+        h = a(up)
+    h = shd.act(h, ("batch", "seq", "mlp"))
+    y = jnp.einsum("bsf,fd->bsd", h, p["w_down"].value.astype(x.dtype))
+    return shd.act(y, ("batch", "residual_seq", "embed"))

@@ -1,0 +1,107 @@
+"""Parameter pytree with logical-dimension metadata.
+
+A :class:`Param` wraps one array plus the tuple of logical dim names
+(``("embed", "heads", "head_dim")``) that the sharding resolver
+consumes.  Param is a pytree node whose aux data is the dims tuple, so
+it passes transparently through jit / grad / scan / optimizer updates,
+and ``param_shardings`` turns any Param-tree into a NamedSharding tree
+for ``in_shardings`` / ``eval_shape`` dry-runs.
+"""
+from __future__ import annotations
+
+from typing import Any, Callable, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.distributed.sharding import Rules, WEIGHT_RULES, logical_spec
+
+__all__ = ["Param", "param", "stack_dims", "param_shardings",
+           "tree_param_count", "tree_param_bytes", "map_params"]
+
+
+@jax.tree_util.register_pytree_node_class
+class Param:
+    """One parameter + its logical dims (aux data, static under tracing)."""
+
+    __slots__ = ("value", "dims")
+
+    def __init__(self, value, dims: Tuple[Optional[str], ...]):
+        self.value = value
+        self.dims = tuple(dims)
+
+    def tree_flatten(self):
+        return (self.value,), self.dims
+
+    @classmethod
+    def tree_unflatten(cls, dims, children):
+        return cls(children[0], dims)
+
+    @property
+    def shape(self):
+        return self.value.shape
+
+    @property
+    def dtype(self):
+        return self.value.dtype
+
+    def __repr__(self):
+        shp = getattr(self.value, "shape", None)
+        return f"Param({shp}, dims={self.dims})"
+
+
+def param(key, shape: Sequence[int], dims: Sequence[Optional[str]],
+          *, init: str = "normal", scale: Optional[float] = None,
+          dtype=jnp.float32) -> Param:
+    """Initialize one Param.  ``normal`` defaults to 1/sqrt(fan_in) with
+    fan_in = first dim (the convention for (in, out)-ordered weights)."""
+    shape = tuple(int(s) for s in shape)
+    if init == "zeros":
+        v = jnp.zeros(shape, dtype)
+    elif init == "ones":
+        v = jnp.ones(shape, dtype)
+    elif init == "normal":
+        if scale is None:
+            scale = 1.0 / np.sqrt(max(shape[0], 1))
+        v = jax.random.normal(key, shape, dtype) * scale
+    elif init == "embed":
+        v = jax.random.normal(key, shape, dtype) * (scale or 0.02)
+    else:
+        raise ValueError(init)
+    return Param(v, tuple(dims))
+
+
+def _is_param(x) -> bool:
+    return isinstance(x, Param)
+
+
+def map_params(fn: Callable[[Param], Any], tree):
+    """Map over Param nodes (not raw leaves)."""
+    return jax.tree.map(fn, tree, is_leaf=_is_param)
+
+
+def stack_dims(tree, axis_name: str = "layers"):
+    """After a vmap-ed per-layer init, prepend the stacking dim name."""
+    return map_params(
+        lambda p: Param(p.value, (axis_name,) + p.dims), tree)
+
+
+def param_shardings(tree, mesh: Mesh, rules: Rules = WEIGHT_RULES):
+    """Param-tree -> NamedSharding tree (prefix-compatible with jit)."""
+    def f(p: Param):
+        shape = getattr(p.value, "shape", ())
+        return NamedSharding(mesh, logical_spec(p.dims, shape, rules, mesh))
+    return map_params(f, tree)
+
+
+def tree_param_count(tree) -> int:
+    leaves = jax.tree.leaves(tree)
+    return int(sum(np.prod(l.shape) for l in leaves if hasattr(l, "shape")))
+
+
+def tree_param_bytes(tree) -> int:
+    leaves = jax.tree.leaves(tree)
+    return int(sum(np.prod(l.shape) * l.dtype.itemsize
+                   for l in leaves if hasattr(l, "shape")))

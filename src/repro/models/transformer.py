@@ -1,0 +1,450 @@
+"""Decoder-only LM covering the dense / moe / ssm / hybrid families.
+
+One scan-over-layers with stacked Params keeps the HLO size O(1 layer)
+for every assigned arch (80-layer qwen1.5-110b compiles in seconds);
+per-layer heterogeneity (hymba's sliding-vs-global windows, moonshot's
+leading dense layers) is expressed as scanned per-layer scalars or a
+small prefix stack, never as unrolled layers.
+"""
+from __future__ import annotations
+
+import functools
+import math
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.distributed.sharding import Sharder
+from repro.models.config import ModelConfig
+from repro.models.layers import (AttnConfig, attention, attention_decode,
+                                 init_attention, init_mlp, mlp, rms_norm)
+from repro.models.moe import init_moe, moe_layer
+from repro.models.params import Param, param, stack_dims
+from repro.models.ssd import (SsdConfig, init_ssd, init_ssd_state,
+                              ssd_block, ssd_decode)
+
+__all__ = ["attn_config", "ssd_config", "init_lm", "lm_logits", "lm_loss",
+           "lm_prefill", "lm_decode_step", "init_lm_cache",
+           "hybrid_windows"]
+
+
+def attn_config(cfg: ModelConfig) -> AttnConfig:
+    return AttnConfig(
+        d_model=cfg.d_model, n_heads=cfg.n_heads, n_kv=cfg.n_kv,
+        head_dim=cfg.hd, qkv_bias=cfg.qkv_bias, qk_norm=cfg.qk_norm,
+        rope_theta=cfg.rope_theta, kv_repeat=cfg.kv_repeat,
+        window=0,  # per-layer windows flow through window_override
+    )
+
+
+def ssd_config(cfg: ModelConfig) -> SsdConfig:
+    return SsdConfig(d_model=cfg.d_model, ssm_state=cfg.ssm_state,
+                     ssm_conv=cfg.ssm_conv, expand=cfg.ssm_expand,
+                     head_dim=cfg.ssm_head_dim, chunk=cfg.ssm_chunk)
+
+
+def hybrid_windows(cfg: ModelConfig, seq_len: int, n_layers: int
+                   ) -> jnp.ndarray:
+    """Per-layer attention window scalars (traced through the layer
+    scan).  A window >= seq_len acts as full causal attention — NOTE:
+    these are traced values, so the "0 means no window" static
+    convention does not apply; full attention is encoded as seq_len."""
+    full = max(int(seq_len), 1)
+    if cfg.family != "hybrid" or cfg.swa_window <= 0:
+        return jnp.full((n_layers,), full, jnp.int32)
+    glb = {0, n_layers // 2, n_layers - 1}
+    w = [full if i in glb else min(cfg.swa_window, full)
+         for i in range(n_layers)]
+    return jnp.asarray(w, jnp.int32)
+
+
+# ---------------------------------------------------------------------------
+# init
+# ---------------------------------------------------------------------------
+
+
+def _init_block(key, cfg: ModelConfig, moe: bool) -> Dict:
+    ks = jax.random.split(key, 8)
+    blk: Dict = {"ln1": param(ks[0], (cfg.d_model,), ("embed",),
+                              init="ones")}
+    fam = cfg.family
+    if fam in ("dense", "moe", "hybrid", "encdec"):
+        blk["attn"] = init_attention(ks[1], attn_config(cfg))
+        blk["ln2"] = param(ks[2], (cfg.d_model,), ("embed",), init="ones")
+        if moe:
+            blk["moe"] = init_moe(ks[3], cfg.d_model, cfg.d_ff_expert,
+                                  cfg.n_experts, cfg.n_shared, cfg.act,
+                                  pad_to=cfg.pad_experts_to)
+        else:
+            blk["mlp"] = init_mlp(ks[3], cfg.d_model, cfg.d_ff, cfg.act)
+    if fam == "ssm":
+        blk["ssd"] = init_ssd(ks[4], ssd_config(cfg))
+    if fam == "hybrid":
+        blk["ssd"] = init_ssd(ks[4], ssd_config(cfg))
+        blk["norm_a"] = param(ks[5], (cfg.d_model,), ("embed",),
+                              init="ones")
+        blk["norm_m"] = param(ks[6], (cfg.d_model,), ("embed",),
+                              init="ones")
+        blk["beta_a"] = param(ks[7], (cfg.d_model,), ("embed",),
+                              init="ones")
+        blk["beta_m"] = param(ks[7], (cfg.d_model,), ("embed",),
+                              init="ones")
+    return blk
+
+
+def _stacked_blocks(key, cfg: ModelConfig, n: int, moe: bool):
+    keys = jax.random.split(key, n)
+    blocks = jax.vmap(lambda k: _init_block(k, cfg, moe))(keys)
+    return stack_dims(blocks)
+
+
+def init_lm(key, cfg: ModelConfig) -> Dict:
+    """Parameters for a decoder-only LM (all non-encdec families)."""
+    ks = jax.random.split(key, 5)
+    p: Dict = {
+        "embed": param(ks[0], (cfg.vocab, cfg.d_model), ("vocab", "embed"),
+                       init="embed"),
+        "final_norm": param(ks[1], (cfg.d_model,), ("embed",), init="ones"),
+        "lm_head": param(ks[2], (cfg.d_model, cfg.vocab),
+                         ("embed", "vocab"),
+                         scale=1.0 / math.sqrt(cfg.d_model)),
+    }
+    n_moe = 0
+    if cfg.family == "moe":
+        n_moe = cfg.n_layers - cfg.first_dense_layers
+        if cfg.first_dense_layers:
+            p["prefix_blocks"] = _stacked_blocks(
+                ks[3], cfg, cfg.first_dense_layers, moe=False)
+        p["blocks"] = _stacked_blocks(ks[4], cfg, n_moe, moe=True)
+    else:
+        p["blocks"] = _stacked_blocks(ks[4], cfg, cfg.n_layers, moe=False)
+    return p
+
+
+# ---------------------------------------------------------------------------
+# blocks (train / prefill path)
+# ---------------------------------------------------------------------------
+
+
+def _block_apply(blk: Dict, h: jax.Array, window, cfg: ModelConfig,
+                 shd: Sharder, moe: bool, collect_kv: bool = False):
+    """One layer; returns (h, aux_loss, (kv, ssm_state)) — the last two
+    are None unless ``collect_kv`` (prefill handoff)."""
+    acfg = attn_config(cfg)
+    aux = jnp.zeros((), jnp.float32)
+    kv = sstate = None
+    fam = cfg.family
+    if fam == "ssm":
+        x = rms_norm(h, blk["ln1"])
+        if collect_kv:
+            y, sstate = ssd_block(blk["ssd"], x, ssd_config(cfg), shd,
+                                  return_state=True)
+        else:
+            y = ssd_block(blk["ssd"], x, ssd_config(cfg), shd)
+        return h + y, aux, (kv, sstate)
+    x = rms_norm(h, blk["ln1"])
+    if fam == "hybrid":
+        from repro.models.layers import _rms
+        if collect_kv:
+            a, kv = attention(blk["attn"], x, acfg, shd,
+                              window_override=window, return_kv=True)
+            m, sstate = ssd_block(blk["ssd"], x, ssd_config(cfg), shd,
+                                  return_state=True)
+        else:
+            a = attention(blk["attn"], x, acfg, shd,
+                          window_override=window)
+            m = ssd_block(blk["ssd"], x, ssd_config(cfg), shd)
+        mix = 0.5 * (_rms(a, blk["norm_a"].value)
+                     * blk["beta_a"].value.astype(h.dtype)
+                     + _rms(m, blk["norm_m"].value)
+                     * blk["beta_m"].value.astype(h.dtype))
+        h = h + mix
+    else:
+        if collect_kv:
+            a, kv = attention(blk["attn"], x, acfg, shd,
+                              window_override=window, return_kv=True)
+        else:
+            a = attention(blk["attn"], x, acfg, shd,
+                          window_override=window)
+        h = h + a
+    x2 = rms_norm(h, blk["ln2"])
+    if moe:
+        y, aux = moe_layer(blk["moe"], x2, n_experts=cfg.n_experts,
+                           top_k=cfg.top_k,
+                           capacity_factor=cfg.capacity_factor,
+                           act=cfg.act, shd=shd,
+                           pad_to=cfg.pad_experts_to,
+                           dispatch=cfg.moe_dispatch)
+    else:
+        y = mlp(blk["mlp"], x2, cfg.act, shd)
+    return h + y, aux, (kv, sstate)
+
+
+def _scan_blocks(blocks, h, windows, cfg: ModelConfig, shd: Sharder,
+                 moe: bool, collect_kv: bool = False):
+    """lax.scan over stacked layer params (+ per-layer window scalars)."""
+
+    def body(carry, xs):
+        hh, aux = carry
+        blk, win = xs
+        hh, aux_l, ys = _block_apply(blk, hh, win, cfg, shd, moe,
+                                     collect_kv)
+        return (hh, aux + aux_l), ys
+
+    if cfg.remat == "full":
+        body = jax.checkpoint(body, prevent_cse=False)
+    elif cfg.remat == "dots":
+        # selective: save matmul outputs, recompute only elementwise —
+        # trades activation memory for less backward recompute traffic.
+        body = jax.checkpoint(
+            body, prevent_cse=False,
+            policy=jax.checkpoint_policies.dots_saveable)
+    (h, aux), kvs = jax.lax.scan(body, (h, jnp.zeros((), jnp.float32)),
+                                 (blocks, windows))
+    return h, aux, kvs
+
+
+def _embed(params, tokens, cfg: ModelConfig, shd: Sharder,
+           dtype) -> jax.Array:
+    h = params["embed"].value.astype(dtype)[tokens]
+    return shd.act(h, ("batch", "residual_seq", "embed"))
+
+
+def lm_logits(params: Dict, tokens: jax.Array, cfg: ModelConfig,
+              shd: Sharder, collect_kv: bool = False,
+              inputs_embeds: Optional[jax.Array] = None):
+    """Forward pass.  tokens: (B, S) int32 -> logits (B, S, V)."""
+    dtype = jnp.dtype(cfg.dtype)
+    h = (inputs_embeds.astype(dtype) if inputs_embeds is not None
+         else _embed(params, tokens, cfg, shd, dtype))
+    b, s, _ = h.shape
+    aux_total = jnp.zeros((), jnp.float32)
+    kvs = None
+    if "prefix_blocks" in params:
+        nl = cfg.first_dense_layers
+        h, aux, kv_pre = _scan_blocks(
+            params["prefix_blocks"], h,
+            jnp.full((nl,), s, jnp.int32), cfg, shd, moe=False,
+            collect_kv=collect_kv)
+        aux_total += aux
+    else:
+        kv_pre = None
+    n_main = (cfg.n_layers - cfg.first_dense_layers
+              if cfg.family == "moe" else cfg.n_layers)
+    windows = hybrid_windows(cfg, s, n_main)
+    h, aux, kvs = _scan_blocks(params["blocks"], h, windows, cfg, shd,
+                               moe=(cfg.family == "moe"),
+                               collect_kv=collect_kv)
+    aux_total += aux
+    h = rms_norm(h, params["final_norm"])
+    logits = jnp.einsum("bsd,dv->bsv", h,
+                        params["lm_head"].value.astype(h.dtype))
+    logits = shd.act(logits, ("batch", "seq", "vocab"))
+    if collect_kv:
+        return logits, aux_total, (kv_pre, kvs)
+    return logits, aux_total
+
+
+def lm_loss(params: Dict, batch: Dict, cfg: ModelConfig, shd: Sharder
+            ) -> Tuple[jax.Array, Dict]:
+    """Next-token cross entropy (f32 logsumexp), plus MoE aux loss."""
+    tokens = batch["tokens"]
+    # forward the full sequence (keeps S a chunk multiple); the last
+    # position has no target and is sliced off the logits.
+    logits, aux = lm_logits(params, tokens, cfg, shd,
+                            inputs_embeds=batch.get("frames"))
+    targets = tokens[:, 1:]
+    lf = logits[:, :-1].astype(jnp.float32)
+    lse = jax.scipy.special.logsumexp(lf, axis=-1)
+    gold = jnp.take_along_axis(lf, targets[..., None], axis=-1)[..., 0]
+    nll = (lse - gold).mean()
+    loss = nll + 0.01 * aux
+    return loss, {"nll": nll, "aux": aux, "loss": loss}
+
+
+# ---------------------------------------------------------------------------
+# serving: prefill + decode
+# ---------------------------------------------------------------------------
+
+
+def _cache_len(cfg: ModelConfig, seq_len: int) -> int:
+    if cfg.family == "hybrid":
+        return min(seq_len, cfg.decode_cache_cap)
+    return seq_len
+
+
+def init_lm_cache(cfg: ModelConfig, batch: int, seq_len: int,
+                  dtype=None) -> Dict:
+    """Decode cache: ring/linear KV per attention layer + SSM states."""
+    dtype = dtype or jnp.dtype(cfg.dtype)
+    n_main = (cfg.n_layers - cfg.first_dense_layers
+              if cfg.family == "moe" else cfg.n_layers)
+    cache: Dict = {"pos": jnp.zeros((), jnp.int32)}
+    sc = _cache_len(cfg, seq_len)
+    kv, hd = cfg.n_kv * max(cfg.kv_repeat, 1), cfg.hd
+    if cfg.family in ("dense", "moe", "hybrid"):
+        cache["k"] = jnp.zeros((n_main, batch, sc, kv, hd), dtype)
+        cache["v"] = jnp.zeros((n_main, batch, sc, kv, hd), dtype)
+        if cfg.first_dense_layers:
+            cache["k_pre"] = jnp.zeros((cfg.first_dense_layers, batch, sc,
+                                        kv, hd), dtype)
+            cache["v_pre"] = jnp.zeros((cfg.first_dense_layers, batch, sc,
+                                        kv, hd), dtype)
+    if cfg.family in ("ssm", "hybrid"):
+        scfg = ssd_config(cfg)
+        st = init_ssd_state(batch, scfg, dtype)
+        n_l = cfg.n_layers
+        cache["ssm"] = jnp.tile(st["ssm"][None], (n_l, 1, 1, 1, 1))
+        cache["conv"] = jnp.tile(st["conv"][None], (n_l, 1, 1, 1))
+    return cache
+
+
+def _block_decode(blk, h, win, ck, cv, sstate, pos, cfg: ModelConfig,
+                  shd: Sharder, moe: bool):
+    acfg = attn_config(cfg)
+    fam = cfg.family
+    if fam == "ssm":
+        x = rms_norm(h, blk["ln1"])
+        y, sstate = ssd_decode(blk["ssd"], x, sstate, ssd_config(cfg), shd)
+        return h + y, (ck, cv, sstate)
+    x = rms_norm(h, blk["ln1"])
+    rolling = (fam == "hybrid")
+    if fam == "hybrid":
+        from repro.models.layers import _rms
+        a, (ck, cv) = attention_decode(blk["attn"], x, ck, cv, pos, acfg,
+                                       shd, window_override=win,
+                                       rolling=rolling)
+        m, sstate = ssd_decode(blk["ssd"], x, sstate, ssd_config(cfg), shd)
+        mix = 0.5 * (_rms(a, blk["norm_a"].value)
+                     * blk["beta_a"].value.astype(h.dtype)
+                     + _rms(m, blk["norm_m"].value)
+                     * blk["beta_m"].value.astype(h.dtype))
+        h = h + mix
+    else:
+        a, (ck, cv) = attention_decode(blk["attn"], x, ck, cv, pos, acfg,
+                                       shd, window_override=win)
+        h = h + a
+    x2 = rms_norm(h, blk["ln2"])
+    if moe:
+        y, _ = moe_layer(blk["moe"], x2, n_experts=cfg.n_experts,
+                         top_k=cfg.top_k,
+                         capacity_factor=cfg.capacity_factor,
+                         act=cfg.act, shd=shd,
+                         pad_to=cfg.pad_experts_to,
+                         dispatch=cfg.moe_dispatch)
+    else:
+        y = mlp(blk["mlp"], x2, cfg.act, shd)
+    return h + y, (ck, cv, sstate)
+
+
+def lm_decode_step(params: Dict, cache: Dict, token: jax.Array,
+                   cfg: ModelConfig, shd: Sharder):
+    """One decode step.  token: (B, 1) int32 -> (logits (B, 1, V), cache)."""
+    dtype = jnp.dtype(cfg.dtype)
+    pos = cache["pos"]
+    h = _embed(params, token, cfg, shd, dtype)
+    new_cache = dict(cache)
+    fam = cfg.family
+
+    def scan_stack(blocks, h, windows, k, v, ssm, conv, moe):
+        has_attn = k is not None
+        has_ssm = ssm is not None
+
+        def body(hh, xs):
+            blk, win, ck, cv, s_ssm, s_conv = xs
+            sstate = {"ssm": s_ssm, "conv": s_conv} if has_ssm else None
+            hh, (ck, cv, sstate) = _block_decode(
+                blk, hh, win, ck, cv, sstate, pos, cfg, shd, moe)
+            ys = (ck if has_attn else 0,
+                  cv if has_attn else 0,
+                  sstate["ssm"] if has_ssm else 0,
+                  sstate["conv"] if has_ssm else 0)
+            return hh, ys
+
+        n = windows.shape[0]
+        zeros = jnp.zeros((n,), jnp.int32)
+        xs = (blocks, windows,
+              k if has_attn else zeros, v if has_attn else zeros,
+              ssm if has_ssm else zeros, conv if has_ssm else zeros)
+        h, ys = jax.lax.scan(body, h, xs)
+        return h, ys
+
+    n_main = (cfg.n_layers - cfg.first_dense_layers
+              if fam == "moe" else cfg.n_layers)
+    sc = cache["k"].shape[2] if "k" in cache else 0
+    if "prefix_blocks" in params:
+        npre = cfg.first_dense_layers
+        h, ys = scan_stack(params["prefix_blocks"], h,
+                           jnp.full((npre,), max(sc, 1), jnp.int32),
+                           cache["k_pre"], cache["v_pre"], None, None,
+                           moe=False)
+        new_cache["k_pre"], new_cache["v_pre"] = ys[0], ys[1]
+    windows = hybrid_windows(cfg, max(sc, 1), n_main)
+    h, ys = scan_stack(params["blocks"], h, windows,
+                       cache.get("k"), cache.get("v"),
+                       cache.get("ssm"), cache.get("conv"),
+                       moe=(fam == "moe"))
+    if "k" in cache:
+        new_cache["k"], new_cache["v"] = ys[0], ys[1]
+    if "ssm" in cache:
+        new_cache["ssm"], new_cache["conv"] = ys[2], ys[3]
+    new_cache["pos"] = pos + 1
+
+    h = rms_norm(h, params["final_norm"])
+    logits = jnp.einsum("bsd,dv->bsv", h,
+                        params["lm_head"].value.astype(h.dtype))
+    return logits, new_cache
+
+
+def lm_prefill(params: Dict, tokens: jax.Array, cfg: ModelConfig,
+               shd: Sharder, max_len: Optional[int] = None,
+               inputs_embeds: Optional[jax.Array] = None):
+    """Prefill: full forward collecting per-layer KV + SSM states ->
+    (logits, cache) ready for ``lm_decode_step`` at position s.
+
+    ``max_len`` sizes the cache for subsequent decode steps (default:
+    exactly the prompt length — the dry-run decode-shape convention)."""
+    b, s = (tokens.shape if inputs_embeds is None
+            else inputs_embeds.shape[:2])
+    logits, _aux, (pre_ys, main_ys) = lm_logits(
+        params, tokens, cfg, shd, collect_kv=True,
+        inputs_embeds=inputs_embeds)
+    cache = init_lm_cache(cfg, b, max(s, max_len or 0))
+
+    def fill_kv(kvs, kname, vname):
+        k, v = kvs  # (L, B, S, KV, hd)
+        sc = cache[kname].shape[2]
+        if sc == s:
+            cache[kname] = k.astype(cache[kname].dtype)
+            cache[vname] = v.astype(cache[vname].dtype)
+        elif sc > s:
+            cache[kname] = cache[kname].at[:, :, :s].set(
+                k.astype(cache[kname].dtype))
+            cache[vname] = cache[vname].at[:, :, :s].set(
+                v.astype(cache[vname].dtype))
+        else:
+            # capped ring cache: position p lives at slot p % sc; the
+            # last sc positions land at roll(linear_tail, s % sc).
+            shift = s % sc
+            cache[kname] = jnp.roll(k[:, :, -sc:], shift, axis=2
+                                    ).astype(cache[kname].dtype)
+            cache[vname] = jnp.roll(v[:, :, -sc:], shift, axis=2
+                                    ).astype(cache[vname].dtype)
+
+    if main_ys is not None:
+        kvs, sstates = main_ys
+        if kvs is not None and "k" in cache:
+            fill_kv(kvs, "k", "v")
+        if sstates is not None and "ssm" in cache:
+            cache["ssm"] = sstates["ssm"].astype(cache["ssm"].dtype)
+            cache["conv"] = sstates["conv"].astype(cache["conv"].dtype)
+    if pre_ys is not None and "k_pre" in cache:
+        kvs_pre, _ = pre_ys
+        if kvs_pre is not None:
+            kp, vp = kvs_pre
+            cache["k_pre"] = kp.astype(cache["k_pre"].dtype)
+            cache["v_pre"] = vp.astype(cache["v_pre"].dtype)
+    cache["pos"] = jnp.asarray(s, jnp.int32)
+    return logits, cache

@@ -1,0 +1,2 @@
+from repro.optim.adamw import (AdamWConfig, init_adamw, adamw_update,
+                               global_norm, schedule)

@@ -1,0 +1,1 @@
+from repro.runtime.fault import FaultPolicy, StragglerDetected, TrainSupervisor

@@ -1,0 +1,96 @@
+"""Loop-aware HLO analyzer: trip counts, fusion internals, collectives."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.hlo import (analyze_hlo, collective_stats, module_mix,
+                            op_census, parse_hlo)
+
+
+def _compile(fn, *args):
+    return jax.jit(fn).lower(*args).compile().as_text()
+
+
+def test_scan_trip_count_exact():
+    def f(x, w):
+        def body(c, _):
+            return jnp.tanh(c @ w), None
+        out, _ = jax.lax.scan(body, x, None, length=7)
+        return out.sum()
+
+    text = _compile(f, jax.ShapeDtypeStruct((128, 128), jnp.float32),
+                    jax.ShapeDtypeStruct((128, 128), jnp.float32))
+    mix = module_mix(text)
+    assert mix.mxu_flops == pytest.approx(7 * 2 * 128 ** 3)
+    assert mix.trans_flops == pytest.approx(7 * 128 * 128)
+    assert mix.unknown_trip_loops == 0
+
+
+def test_nested_scan_multiplies():
+    def f(x):
+        def outer(c, _):
+            def inner(d, _):
+                return jnp.sin(d) * 1.5, None
+            d, _ = jax.lax.scan(inner, c, None, length=3)
+            return d, None
+        out, _ = jax.lax.scan(outer, x, None, length=5)
+        return out.sum()
+
+    text = _compile(f, jax.ShapeDtypeStruct((8, 128), jnp.float32))
+    mix = module_mix(text)
+    assert mix.trans_flops == pytest.approx(15 * 8 * 128)
+
+
+def test_unrolled_matches_scan_totals():
+    w = jax.ShapeDtypeStruct((128, 128), jnp.float32)
+
+    def scanned(x, w):
+        def body(c, _):
+            return c @ w, None
+        out, _ = jax.lax.scan(body, x, None, length=4)
+        return out.sum()
+
+    def unrolled(x, w):
+        for _ in range(4):
+            x = x @ w
+        return x.sum()
+
+    m1 = module_mix(_compile(scanned, w, w))
+    m2 = module_mix(_compile(unrolled, w, w))
+    assert m1.mxu_flops == pytest.approx(m2.mxu_flops)
+
+
+def test_dot_contraction_sized_from_operands():
+    def f(a, b):
+        return a @ b
+
+    text = _compile(f, jax.ShapeDtypeStruct((64, 512), jnp.float32),
+                    jax.ShapeDtypeStruct((512, 32), jnp.float32))
+    mix = module_mix(text)
+    assert mix.mxu_flops == pytest.approx(2 * 64 * 512 * 32)
+
+
+def test_parse_structure():
+    def f(x):
+        return jnp.where(x > 0, x, 0.0).sum()
+
+    text = _compile(f, jax.ShapeDtypeStruct((256,), jnp.float32))
+    mod = parse_hlo(text)
+    assert mod.entry is not None
+    assert mod.multipliers[mod.entry] == 1.0
+    census = op_census(mod, loop_aware=False)
+    assert census.get("parameter", 0) >= 1
+
+
+def test_analyze_report_fields():
+    def f(x, w):
+        h = jnp.dot(x, w)
+        return jax.nn.softmax(h).sum()
+
+    text = _compile(f, jax.ShapeDtypeStruct((32, 64), jnp.float32),
+                    jax.ShapeDtypeStruct((64, 128), jnp.float32))
+    rep = analyze_hlo(text)
+    assert rep.n_instructions > 0
+    assert rep.mix.mxu_flops > 0
+    assert rep.collectives.total_bytes == 0.0  # single device

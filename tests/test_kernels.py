@@ -1,0 +1,114 @@
+"""Per-kernel sweeps: shapes x dtypes x launch params vs the pure-jnp
+oracle in interpret mode (deliverable c)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels import ops, ref
+from repro.kernels.atax import atax_pallas
+from repro.kernels.bicg import bicg_pallas
+from repro.kernels.flash_attention import flash_attention_pallas
+from repro.kernels.jacobi3d import jacobi3d_pallas
+from repro.kernels.matmul import matmul_pallas
+from repro.kernels.matvec import matvec_pallas
+
+RNG = np.random.default_rng(0)
+
+
+def _tol(dtype):
+    return dict(rtol=2e-2, atol=2e-2) if dtype == jnp.bfloat16 \
+        else dict(rtol=2e-4, atol=2e-4)
+
+
+@pytest.mark.parametrize("m,n,k", [(128, 128, 128), (256, 512, 384),
+                                   (512, 128, 256)])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("bm,bn,bk", [(128, 128, 128), (256, 128, 128)])
+def test_matmul(m, n, k, dtype, bm, bn, bk):
+    if m % bm or n % bn or k % bk:
+        pytest.skip("non-dividing block")
+    a = jnp.asarray(RNG.standard_normal((m, k)), dtype)
+    b = jnp.asarray(RNG.standard_normal((k, n)), dtype)
+    out = matmul_pallas(a, b, bm=bm, bn=bn, bk=bk)
+    want = ref.matmul_ref(a, b)
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(want, np.float32), **_tol(dtype))
+
+
+@pytest.mark.parametrize("m,n", [(256, 128), (512, 512), (1024, 256)])
+@pytest.mark.parametrize("bm", [64, 128, 256])
+def test_matvec(m, n, bm):
+    a = jnp.asarray(RNG.standard_normal((m, n)), jnp.float32)
+    x = jnp.asarray(RNG.standard_normal((n, 1)), jnp.float32)
+    out = matvec_pallas(a, x, bm=bm, bk=min(n, 128))
+    np.testing.assert_allclose(out, ref.matvec_ref(a, x), rtol=2e-4,
+                               atol=2e-4)
+
+
+@pytest.mark.parametrize("m,n", [(256, 128), (512, 256), (1024, 512)])
+@pytest.mark.parametrize("bm", [32, 128, 256])
+def test_atax(m, n, bm):
+    a = jnp.asarray(RNG.standard_normal((m, n)) / np.sqrt(n), jnp.float32)
+    x = jnp.asarray(RNG.standard_normal((n, 1)), jnp.float32)
+    out = atax_pallas(a, x, bm=bm)
+    np.testing.assert_allclose(out, ref.atax_ref(a, x), rtol=1e-3,
+                               atol=1e-3)
+
+
+@pytest.mark.parametrize("m,n", [(256, 128), (512, 256)])
+@pytest.mark.parametrize("bm", [64, 256])
+def test_bicg(m, n, bm):
+    a = jnp.asarray(RNG.standard_normal((m, n)) / np.sqrt(n), jnp.float32)
+    p = jnp.asarray(RNG.standard_normal((n, 1)), jnp.float32)
+    r = jnp.asarray(RNG.standard_normal((m, 1)), jnp.float32)
+    q, s = bicg_pallas(a, p, r, bm=bm)
+    q2, s2 = ref.bicg_ref(a, p, r)
+    np.testing.assert_allclose(q, q2, rtol=1e-3, atol=1e-3)
+    np.testing.assert_allclose(s, s2, rtol=1e-3, atol=1e-3)
+
+
+@pytest.mark.parametrize("z,y,x", [(8, 16, 32), (16, 32, 64), (32, 8, 128)])
+@pytest.mark.parametrize("bz", [1, 2, 4, 8])
+def test_jacobi3d(z, y, x, bz):
+    if z % bz:
+        pytest.skip("non-dividing block")
+    u = jnp.asarray(RNG.standard_normal((z, y, x)), jnp.float32)
+    out = jacobi3d_pallas(u, bz=bz)
+    np.testing.assert_allclose(out, ref.jacobi3d_ref(u), rtol=1e-5,
+                               atol=1e-5)
+
+
+def test_jacobi3d_boundary_passthrough():
+    u = jnp.asarray(RNG.standard_normal((8, 8, 128)), jnp.float32)
+    out = np.asarray(jacobi3d_pallas(u, bz=2))
+    ua = np.asarray(u)
+    np.testing.assert_array_equal(out[0], ua[0])
+    np.testing.assert_array_equal(out[-1], ua[-1])
+    np.testing.assert_array_equal(out[:, 0, :], ua[:, 0, :])
+    np.testing.assert_array_equal(out[:, :, -1], ua[:, :, -1])
+
+
+@pytest.mark.parametrize("causal", [True, False])
+@pytest.mark.parametrize("s,bq,bkv", [(256, 128, 128), (512, 256, 128),
+                                      (256, 256, 256)])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_flash_attention(causal, s, bq, bkv, dtype):
+    b, h, d = 2, 3, 64
+    q = jnp.asarray(RNG.standard_normal((b, h, s, d)), dtype)
+    k = jnp.asarray(RNG.standard_normal((b, h, s, d)), dtype)
+    v = jnp.asarray(RNG.standard_normal((b, h, s, d)), dtype)
+    out = flash_attention_pallas(q, k, v, causal=causal, bq=bq, bkv=bkv)
+    want = ref.attention_ref(q, k, v, causal=causal)
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(want, np.float32), **_tol(dtype))
+
+
+def test_ops_defaults_dispatch():
+    a = jnp.asarray(RNG.standard_normal((192, 160)), jnp.float32)
+    x = jnp.asarray(RNG.standard_normal((160, 1)), jnp.float32)
+    np.testing.assert_allclose(ops.matvec(a, x), ref.matvec_ref(a, x),
+                               rtol=2e-4, atol=2e-4)
+    u = jnp.asarray(RNG.standard_normal((12, 16, 128)), jnp.float32)
+    np.testing.assert_allclose(ops.jacobi3d(u), ref.jacobi3d_ref(u),
+                               rtol=1e-5, atol=1e-5)
