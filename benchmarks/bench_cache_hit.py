@@ -1,0 +1,63 @@
+"""Cold-vs-warm dispatch latency for the tuning database.
+
+    PYTHONPATH=src python benchmarks/bench_cache_hit.py
+
+Measures, per kernel instance, the trace-time cost of
+`tuning_cache.lookup_or_tune`:
+
+* **cold** — first call: enumerate the launch space, build every
+  configuration's static info, score the whole batch with the cost
+  model, store the winner;
+* **warm** — every later call: key construction + one LRU probe.
+
+The ratio is the "tune once, serve millions" argument in one number —
+the warm path is what every production dispatch pays.
+"""
+import statistics
+import time
+
+from repro import tuning_cache
+from repro.tuning_cache import TuningDatabase
+import repro.kernels  # noqa: F401  (registers dispatch problems)
+
+CASES = [
+    ("matmul", dict(m=1024, n=1024, k=1024, dtype="float32")),
+    ("matmul", dict(m=4096, n=4096, k=4096, dtype="bfloat16")),
+    ("matvec", dict(m=4096, n=4096, dtype="float32")),
+    ("atax", dict(m=2048, n=2048, dtype="float32")),
+    ("bicg", dict(m=2048, n=2048, dtype="float32")),
+    ("jacobi3d", dict(z=128, y=128, x=128, dtype="float32")),
+    ("flash_attention", dict(b=4, h=8, sq=2048, skv=2048, d=128,
+                             causal=True, dtype="float32")),
+]
+
+WARM_REPS = 200
+
+
+def bench_one(kernel_id, sig):
+    db = TuningDatabase()          # private, unwarmed: first call is cold
+    t0 = time.perf_counter()
+    params = tuning_cache.lookup_or_tune(kernel_id, db=db, **sig)
+    cold = time.perf_counter() - t0
+
+    warms = []
+    for _ in range(WARM_REPS):
+        t0 = time.perf_counter()
+        tuning_cache.lookup_or_tune(kernel_id, db=db, **sig)
+        warms.append(time.perf_counter() - t0)
+    warm = statistics.median(warms)
+    assert db.stats.tunes == 1 and db.stats.hits == WARM_REPS
+    return params, cold, warm
+
+
+def main():
+    print(f"{'kernel':<16} {'space tune (cold)':>18} {'cache hit (warm)':>17} "
+          f"{'speedup':>8}   params")
+    for kernel_id, sig in CASES:
+        params, cold, warm = bench_one(kernel_id, sig)
+        print(f"{kernel_id:<16} {cold*1e3:>15.2f} ms {warm*1e6:>14.1f} us "
+              f"{cold/warm:>7.0f}x   {params}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,5 +1,6 @@
 """Root conftest: make `benchmarks` (and `src/repro` as fallback)
-importable regardless of how pytest is invoked."""
+importable regardless of how pytest is invoked, and register the
+project's custom pytest marks."""
 import os
 import sys
 
@@ -7,3 +8,9 @@ _ROOT = os.path.dirname(os.path.abspath(__file__))
 for p in (_ROOT, os.path.join(_ROOT, "src")):
     if p not in sys.path:
         sys.path.insert(0, p)
+
+
+def pytest_configure(config):
+    config.addinivalue_line(
+        "markers", "slow: long-running test (empirical timing sweeps, "
+        "large interpret-mode kernels); deselect with -m 'not slow'")

@@ -3,11 +3,13 @@
     PYTHONPATH=src python examples/quickstart.py
 
 Demonstrates the paper's headline capability: picking near-optimal
-launch parameters with ZERO kernel executions, then verifying against
-an empirical sweep.
+launch parameters with ZERO kernel executions — plus the tuning
+database: the second identical tune is a pure cache hit — then
+verifies against an empirical sweep.
 """
 import jax.numpy as jnp
 
+from repro import tuning_cache
 from repro.core import KernelTuner
 from repro.kernels import make_tunable_atax
 
@@ -24,6 +26,14 @@ def main():
     print(f"   predicted time:   {rep.best_predicted_s*1e6:.1f} us")
     print(f"   search-space reduction: "
           f"{rep.search_space_reduction:.1%}")
+
+    print("\n== same tune again: served from the tuning database ==")
+    rep_c = KernelTuner(make_tunable_atax(m=1024, n=512, dtype=jnp.float32),
+                        repeats=3).tune(mode="static")
+    stats = tuning_cache.get_default_db().stats.as_dict()
+    print(f"   from_cache={rep_c.from_cache} params={rep_c.best_params} "
+          f"db stats={stats}")
+    assert rep_c.from_cache and rep_c.best_params == rep.best_params
 
     print("\n== hybrid mode (static shortlist, measure top-2) ==")
     rep_h = tuner.tune(mode="hybrid", empirical_budget=2)

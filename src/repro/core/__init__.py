@@ -21,7 +21,8 @@ from repro.core.occupancy import (CudaOccupancy, cuda_occupancy,
                                   tpu_occupancy, suggest_block_shapes)
 from repro.core.predict import (CostModel, default_tpu_model, predict_time,
                                 cuda_eq6_time, calibrate, spearman,
-                                rank_candidates)
+                                rank_candidates, features_matrix,
+                                static_times_batch)
 from repro.core.search import (SearchSpace, SearchResult, ExhaustiveSearch,
                                RandomSearch, SimulatedAnnealing,
                                GeneticSearch, NelderMeadSearch,

@@ -34,7 +34,8 @@ import numpy as np
 from repro.core.hw import TpuSpec, TPU_V5E
 from repro.core.mix import InstructionMix, intensity, classify_boundedness
 from repro.core.occupancy import TpuOccupancy
-from repro.core.predict import (CostModel, default_tpu_model, spearman)
+from repro.core.predict import (CostModel, default_tpu_model, spearman,
+                                static_times_batch)
 from repro.core.search import (ExhaustiveSearch, Params, SearchResult,
                                SearchSpace, StaticPrunedSearch, _Base)
 
@@ -93,6 +94,7 @@ class TuningReport:
     boundedness: str
     intensity: float
     table: List[Dict[str, Any]] = dataclasses.field(default_factory=list)
+    from_cache: bool = False           # served from the tuning database
 
     def summary(self) -> str:
         sp = ("%.3f" % self.spearman_static_vs_measured
@@ -146,6 +148,16 @@ def _median_time(fn: Callable[..., Any], inputs: tuple, repeats: int) -> float:
 
 
 class KernelTuner:
+    """Tunes one Pallas kernel; results persist in the tuning database.
+
+    ``db`` controls result reuse: the default sentinel ``"default"``
+    resolves to :func:`repro.tuning_cache.get_default_db` (the
+    process-wide LRU + optional on-disk store), ``None`` disables
+    caching, and any :class:`~repro.tuning_cache.TuningDatabase` is used
+    as-is.  On a cache hit :meth:`tune` returns without a single
+    cost-model evaluation.
+    """
+
     def __init__(self, kernel: TunableKernel,
                  model: Optional[CostModel] = None,
                  spec: TpuSpec = TPU_V5E,
@@ -153,7 +165,8 @@ class KernelTuner:
                  keep_frac: float = 0.125,
                  use_rule: bool = True,
                  size_axes: Optional[Sequence[str]] = None,
-                 seed: int = 0):
+                 seed: int = 0,
+                 db: Any = "default"):
         self.kernel = kernel
         self.model = model or default_tpu_model(mode="max")
         self.spec = spec
@@ -164,6 +177,7 @@ class KernelTuner:
             a for a in kernel.space.names
             if a.startswith("b") or "block" in a or "tile" in a]
         self.seed = seed
+        self.db = db
         self._info_cache: Dict[Tuple, KernelStaticInfo] = {}
 
     # -- static machinery ----------------------------------------------------
@@ -176,14 +190,95 @@ class KernelTuner:
     def static_cost(self, p: Params) -> float:
         return self._info(p).static_time(self.model)
 
+    def static_cost_batch(self, pts: Sequence[Params]) -> np.ndarray:
+        """Score a candidate set in one vectorized model pass."""
+        return static_times_batch([self._info(p) for p in pts], self.model)
+
+    def _mid_params(self) -> Params:
+        return {k: v[len(v) // 2]
+                for k, v in self.kernel.space.axes.items()}
+
     def representative_mix(self) -> InstructionMix:
-        mid = {k: v[len(v) // 2] for k, v in self.kernel.space.axes.items()}
-        return self._info(mid).mix
+        return self._info(self._mid_params()).mix
+
+    # -- tuning-database plumbing ---------------------------------------------
+    def _database(self):
+        if self.db == "default":
+            from repro.tuning_cache import get_default_db
+            return get_default_db()
+        return self.db
+
+    def _analysis_fingerprint(self) -> str:
+        """Static-analysis identity of the kernel instance.
+
+        Kernel names encode shapes only, so two TunableKernels with the
+        same shapes but different dtype (or e.g. flash causal=False)
+        would otherwise share a key.  The mid-config instruction mix +
+        occupancy step time reflect every analytic input, so they
+        disambiguate without the factory having to name them all.
+        """
+        info = self._info(self._mid_params())
+        parts = [repr(getattr(info.mix, f)) for f in (
+            "mxu_flops", "vpu_flops", "trans_flops", "hbm_bytes",
+            "vmem_bytes", "ctrl_ops", "reg_ops")]
+        if info.occupancy is not None:
+            parts.append(repr(info.occupancy.predicted_step_time))
+            parts.append(repr(info.occupancy.grid_steps))
+        import hashlib
+        return hashlib.sha256("|".join(parts).encode()).hexdigest()[:12]
+
+    def _cache_key(self, mode: str, empirical_budget: Optional[int],
+                   strategy: Optional[_Base]):
+        from repro.tuning_cache import make_key
+        return make_key(
+            f"tuner/{self.kernel.name}", spec=self.spec, mode=mode,
+            model_name=self.model.fingerprint(),
+            analysis=self._analysis_fingerprint(),
+            axes={k: list(map(str, v))
+                  for k, v in self.kernel.space.axes.items()},
+            keep_frac=self.keep_frac, use_rule=self.use_rule,
+            size_axes=list(self.size_axes), repeats=self.repeats,
+            empirical_budget=empirical_budget,
+            # full strategy config, not just the class: two differently
+            # configured SimulatedAnnealing instances must not collide.
+            # Only primitive attrs participate — object reprs embed
+            # memory addresses and would make every key unique.
+            strategy=(type(strategy).__name__
+                      + repr(sorted(
+                          (k, v) for k, v in vars(strategy).items()
+                          if isinstance(v, (int, float, str, bool,
+                                            type(None)))))
+                      if strategy else None))
+
+    def _report_from_record(self, rec, mode: str) -> "TuningReport":
+        ex = rec.extras
+        return TuningReport(
+            kernel=self.kernel.name, mode=mode,
+            best_params=dict(rec.params),
+            best_predicted_s=rec.predicted_s,
+            best_measured_s=rec.measured_s,
+            space_size=rec.space_size,
+            static_rank_time_s=0.0,
+            empirical_evals=0,
+            search_space_reduction=ex.get("search_space_reduction", 1.0),
+            spearman_static_vs_measured=ex.get("spearman"),
+            boundedness=ex.get("boundedness", "unknown"),
+            intensity=ex.get("intensity", 0.0),
+            from_cache=True)
 
     # -- tuning modes ----------------------------------------------------------
     def tune(self, mode: str = "static",
              strategy: Optional[_Base] = None,
              empirical_budget: Optional[int] = None) -> TuningReport:
+        db = self._database()
+        key = self._cache_key(mode, empirical_budget, strategy) \
+            if db is not None else None
+        if db is not None:
+            rec = db.lookup(key)
+            if rec is not None:
+                # Cache hit: one mid-config static_info (key fingerprint),
+                # zero cost-model evaluations, no space ranking.
+                return self._report_from_record(rec, mode)
         space = self.kernel.space
         mix0 = self.representative_mix()
         rule = (make_intensity_rule(mix0, space, self.size_axes)
@@ -201,7 +296,8 @@ class KernelTuner:
         if mode == "static":
             pruner = StaticPrunedSearch(self.static_cost,
                                         keep_frac=self.keep_frac,
-                                        rule=rule, seed=self.seed)
+                                        rule=rule, seed=self.seed,
+                                        static_cost_batch=self.static_cost_batch)
             res = pruner.minimize(objective, space, empirical_budget=0)
             static_time = time.perf_counter() - t0
             best_pred = res.best_value
@@ -209,7 +305,8 @@ class KernelTuner:
         elif mode == "hybrid":
             pruner = StaticPrunedSearch(self.static_cost,
                                         keep_frac=self.keep_frac,
-                                        rule=rule, seed=self.seed)
+                                        rule=rule, seed=self.seed,
+                                        static_cost_batch=self.static_cost_batch)
             short = pruner.shortlist(space)
             static_time = time.perf_counter() - t0
             cap = empirical_budget or len(short)
@@ -243,7 +340,7 @@ class KernelTuner:
         corr = (spearman(predicted_for_corr, measured_for_corr)
                 if len(measured_for_corr) >= 3 else None)
         info = self._info(res.best_params)
-        return TuningReport(
+        report = TuningReport(
             kernel=self.kernel.name, mode=mode,
             best_params=res.best_params,
             best_predicted_s=float(best_pred),
@@ -257,6 +354,22 @@ class KernelTuner:
             intensity=intensity(info.mix),
             table=table,
         )
+        if db is not None:
+            from repro.tuning_cache import TuningRecord
+            from repro.tuning_cache.store import now_unix
+            db.put(TuningRecord(
+                key=key, params=dict(report.best_params),
+                predicted_s=report.best_predicted_s,
+                measured_s=report.best_measured_s,
+                space_size=report.space_size, source=mode,
+                created_unix=now_unix(),
+                extras={
+                    "search_space_reduction": report.search_space_reduction,
+                    "spearman": report.spearman_static_vs_measured,
+                    "boundedness": report.boundedness,
+                    "intensity": report.intensity,
+                }))
+        return report
 
 
 class GraphTuner:
@@ -265,18 +378,30 @@ class GraphTuner:
     ``lower_fn(params)`` must return a ``jax.stages.Lowered``; we compile
     it AOT and score with the 3-term roofline.  No device execution —
     the direct datacenter-scale application of the paper's thesis.
+
+    ``db`` + ``cache_signature`` opt into the tuning database: because
+    ``lower_fn`` is an opaque callable, the caller must supply the
+    signature kwargs (arch name, batch, seq, ...) that make the result
+    reusable.  A cached hit skips every AOT lower+compile and returns
+    ``(params, terms, [])`` with terms rebuilt as a
+    :class:`~repro.core.roofline.RooflineTerms` (or ``None`` if the
+    stored record cannot be rebuilt); history is not cached.
     """
 
     def __init__(self, space: SearchSpace,
                  lower_fn: Callable[[Params], Any],
                  chips: int, model_flops: float,
-                 spec: TpuSpec = TPU_V5E, ici_links: int = 4):
+                 spec: TpuSpec = TPU_V5E, ici_links: int = 4,
+                 db: Any = None,
+                 cache_signature: Optional[Dict[str, Any]] = None):
         self.space = space
         self.lower_fn = lower_fn
         self.chips = chips
         self.model_flops = model_flops
         self.spec = spec
         self.ici_links = ici_links
+        self.db = db
+        self.cache_signature = cache_signature
 
     def score(self, p: Params) -> Tuple[float, Any]:
         from repro.core.roofline import roofline_from_artifacts
@@ -291,7 +416,32 @@ class GraphTuner:
         t = max(terms.t_compute, terms.t_memory, terms.t_collective)
         return t, terms
 
+    def _cache_key(self):
+        if self.db is None or self.cache_signature is None:
+            return None
+        from repro.tuning_cache import make_key
+        return make_key(
+            "graph", spec=self.spec, mode="graph",
+            chips=self.chips, model_flops=self.model_flops,
+            ici_links=self.ici_links,
+            axes={k: list(map(str, v)) for k, v in self.space.axes.items()},
+            **self.cache_signature)
+
     def tune(self) -> Tuple[Params, Any, List[Tuple[Params, float]]]:
+        key = self._cache_key()
+        if key is not None:
+            rec = self.db.lookup(key)
+            if rec is not None:
+                terms = rec.extras.get("terms")
+                if isinstance(terms, dict):
+                    # rebuild the dataclass so hit and miss return the
+                    # same type (callers access .t_compute etc.)
+                    from repro.core.roofline import RooflineTerms
+                    try:
+                        terms = RooflineTerms(**terms)
+                    except TypeError:
+                        terms = None
+                return dict(rec.params), terms, []
         hist: List[Tuple[Params, float]] = []
         best_p, best_t, best_terms = None, math.inf, None
         for p in self.space.enumerate():
@@ -303,4 +453,13 @@ class GraphTuner:
             hist.append((p, t))
             if t < best_t:
                 best_p, best_t, best_terms = p, t, terms
+        if key is not None and best_p is not None:
+            from repro.tuning_cache import TuningRecord
+            from repro.tuning_cache.store import now_unix
+            terms_d = (dataclasses.asdict(best_terms)
+                       if dataclasses.is_dataclass(best_terms) else None)
+            self.db.put(TuningRecord(
+                key=key, params=dict(best_p), predicted_s=float(best_t),
+                space_size=self.space.size, source="graph",
+                created_unix=now_unix(), extras={"terms": terms_d}))
         return best_p, best_terms, hist

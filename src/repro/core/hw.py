@@ -205,4 +205,13 @@ DTYPE_BYTES: Dict[str, int] = {
 
 
 def dtype_bytes(dtype) -> int:
-    return DTYPE_BYTES.get(str(getattr(dtype, "name", dtype)), 4)
+    name = getattr(dtype, "name", None)
+    if name is None:
+        # scalar-type classes like jnp.bfloat16 have no .name; normalize
+        # through np.dtype so bf16 is not silently billed as 4 bytes
+        try:
+            import numpy as np
+            name = np.dtype(dtype).name
+        except TypeError:
+            name = str(dtype)
+    return DTYPE_BYTES.get(str(name), 4)

@@ -32,11 +32,21 @@ from repro.core.mix import InstructionMix
 
 __all__ = [
     "CostModel", "default_tpu_model", "predict_time", "cuda_eq6_time",
-    "calibrate", "rank_candidates", "spearman",
+    "calibrate", "rank_candidates", "spearman", "features_matrix",
+    "static_times_batch",
 ]
 
 _FEATURES = ("mxu_flops", "vpu_flops", "trans_flops", "hbm_bytes",
              "vmem_bytes", "ctrl_ops", "reg_ops")
+_COMPUTE_COLS = (0, 1, 2)   # mxu, vpu, trans
+_MEMORY_COLS = (3, 4)       # hbm, vmem
+_CTRL_COLS = (5, 6)         # ctrl, reg
+
+
+def features_matrix(mixes: Sequence[InstructionMix]) -> np.ndarray:
+    """(N, 7) feature matrix in `_FEATURES` column order."""
+    return np.array([[getattr(m, f) for f in _FEATURES] for m in mixes],
+                    dtype=np.float64).reshape(len(mixes), len(_FEATURES))
 
 
 @dataclasses.dataclass
@@ -63,6 +73,50 @@ class CostModel:
                     + self.coeffs.get("reg_ops", 0.0) * mix.reg_ops)
             return float(max(compute, memory) + ctrl)
         return float(sum(terms))
+
+    def coeff_vector(self) -> np.ndarray:
+        return np.array([self.coeffs.get(f, 0.0) for f in _FEATURES],
+                        dtype=np.float64)
+
+    def fingerprint(self) -> str:
+        """Content identity for tuning-cache keys: two models with the
+        same name but different coefficients (e.g. successive
+        `calibrate` fits) must not collide on one cache entry.
+
+        Memoized per instance (this runs on every trace-time dispatch);
+        mutating `coeffs` after the first call is unsupported — build a
+        new CostModel instead, as `calibrate` does.
+        """
+        fp = self.__dict__.get("_fp")
+        if fp is None:
+            import hashlib
+            import json
+            payload = json.dumps(
+                {"coeffs": {k: repr(v) for k, v in self.coeffs.items()},
+                 "mode": self.mode}, sort_keys=True)
+            digest = hashlib.sha256(payload.encode()).hexdigest()[:10]
+            fp = self.__dict__["_fp"] = f"{self.name}@{digest}"
+        return fp
+
+    def time_batch(self, mixes: Optional[Sequence[InstructionMix]] = None,
+                   F: Optional[np.ndarray] = None) -> np.ndarray:
+        """Vectorized `time` over a whole candidate set — one NumPy pass.
+
+        Accepts either a sequence of mixes or a precomputed ``F``
+        feature matrix (``features_matrix`` column order).  This is the
+        static-ranking hot path: scoring the full search space is a few
+        matrix products instead of a Python loop over configurations.
+        """
+        if F is None:
+            F = features_matrix(mixes or [])
+        F = np.asarray(F, dtype=np.float64).reshape(-1, len(_FEATURES))
+        T = F * self.coeff_vector()[None, :]      # per-pipeline seconds
+        if self.mode == "max":
+            compute = T[:, _COMPUTE_COLS].sum(axis=1)
+            memory = T[:, _MEMORY_COLS].sum(axis=1)
+            ctrl = T[:, _CTRL_COLS].sum(axis=1)
+            return np.maximum(compute, memory) + ctrl
+        return T.sum(axis=1)
 
     def breakdown(self, mix: InstructionMix) -> Dict[str, float]:
         return {f: self.coeffs.get(f, 0.0) * getattr(mix, f)
@@ -158,5 +212,31 @@ def rank_candidates(mixes: Sequence[InstructionMix],
                     ) -> Tuple[np.ndarray, np.ndarray]:
     """Predicted times + ascending-rank order for a candidate set."""
     model = model or default_tpu_model()
-    t = np.array([model.time(m) for m in mixes])
+    t = model.time_batch(mixes)
     return t, np.argsort(t, kind="stable")
+
+
+def static_times_batch(infos: Sequence[object],
+                       model: CostModel) -> np.ndarray:
+    """Vectorized `KernelStaticInfo.static_time` over a candidate set.
+
+    ``infos`` are KernelStaticInfo-like: ``.mix``, ``.feasible()`` and
+    optionally ``.occupancy`` with ``predicted_step_time``/``grid_steps``.
+    Model scoring is a single batched pass; the per-config pipeline
+    floor (occupancy step time x grid steps) and the +inf infeasibility
+    penalty are folded in with NumPy element-wise ops.
+    """
+    n = len(infos)
+    if n == 0:
+        return np.empty(0, dtype=np.float64)
+    t = model.time_batch([i.mix for i in infos])
+    pipe = np.zeros(n, dtype=np.float64)
+    feas = np.ones(n, dtype=bool)
+    for j, info in enumerate(infos):
+        occ = getattr(info, "occupancy", None)
+        if occ is not None:
+            pipe[j] = occ.predicted_step_time * max(occ.grid_steps, 1)
+        feas[j] = info.feasible()
+    t = np.maximum(t, pipe)
+    t[~feas] = np.inf
+    return t

@@ -307,9 +307,12 @@ class StaticPrunedSearch(_Base):
     def __init__(self, static_cost: Callable[[Params], float],
                  keep_frac: float = 0.125, keep_n: Optional[int] = None,
                  rule: Optional[Callable[[Params], bool]] = None,
-                 seed: int = 0):
+                 seed: int = 0,
+                 static_cost_batch: Optional[
+                     Callable[[Sequence[Params]], "np.ndarray"]] = None):
         super().__init__(seed)
         self.static_cost = static_cost
+        self.static_cost_batch = static_cost_batch
         self.keep_frac, self.keep_n, self.rule = keep_frac, keep_n, rule
 
     def shortlist(self, space: SearchSpace) -> List[Tuple[Params, float]]:
@@ -318,8 +321,15 @@ class StaticPrunedSearch(_Base):
             ruled = [p for p in pts if self.rule(p)]
             if ruled:
                 pts = ruled
-        scored = [(p, float(self.static_cost(p))) for p in pts]
-        scored.sort(key=lambda t: t[1])
+        if self.static_cost_batch is not None:
+            # vectorized hot path: score the whole space in one batch
+            costs = np.asarray(self.static_cost_batch(pts),
+                               dtype=np.float64)
+            order = np.argsort(costs, kind="stable")
+            scored = [(pts[i], float(costs[i])) for i in order]
+        else:
+            scored = [(p, float(self.static_cost(p))) for p in pts]
+            scored.sort(key=lambda t: t[1])
         n = self.keep_n or max(1, int(len(scored) * self.keep_frac))
         return scored[:n]
 

@@ -18,10 +18,12 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro import tuning_cache
 from repro.core.autotuner import KernelStaticInfo, TunableKernel
 from repro.core.search import SearchSpace
 from repro.kernels.common import (block_info, cdiv, default_interpret,
-                                  pick_divisor_candidates)
+                                  pick_divisor_candidates,
+                                  tpu_compiler_params)
 
 __all__ = ["atax_pallas", "atax_static_info", "make_tunable_atax"]
 
@@ -68,8 +70,7 @@ def atax_pallas(a: jax.Array, x: jax.Array, *, bm: int = 256,
         out_specs=pl.BlockSpec((n, 1), lambda i: (0, 0)),
         out_shape=jax.ShapeDtypeStruct((n, 1), a.dtype),
         scratch_shapes=[pltpu.VMEM((n, 1), jnp.float32)],
-        compiler_params=pltpu.CompilerParams(
-            dimension_semantics=("arbitrary",)),
+        compiler_params=tpu_compiler_params(("arbitrary",)),
         interpret=interpret,
     )(a, x)
 
@@ -111,3 +112,14 @@ def make_tunable_atax(m: int = 2048, n: int = 2048,
     return TunableKernel(name=f"atax_{m}x{n}", space=space, build=build,
                          static_info=static_info, make_inputs=make_inputs,
                          reference=atax_ref)
+
+
+@tuning_cache.register("atax")
+def _dispatch_atax(*, m: int, n: int,
+                   dtype: str = "float32") -> tuning_cache.TuningProblem:
+    space = SearchSpace({
+        "bm": pick_divisor_candidates(m, (16, 32, 64, 128, 256, 512, 1024)),
+    })
+    return tuning_cache.TuningProblem(
+        space=space,
+        static_info=lambda p: atax_static_info(m, n, dtype, p))

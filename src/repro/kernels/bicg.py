@@ -14,10 +14,12 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro import tuning_cache
 from repro.core.autotuner import KernelStaticInfo, TunableKernel
 from repro.core.search import SearchSpace
 from repro.kernels.common import (block_info, cdiv, default_interpret,
-                                  pick_divisor_candidates)
+                                  pick_divisor_candidates,
+                                  tpu_compiler_params)
 
 __all__ = ["bicg_pallas", "bicg_static_info", "make_tunable_bicg"]
 
@@ -63,8 +65,7 @@ def bicg_pallas(a: jax.Array, p: jax.Array, r: jax.Array, *,
         out_shape=[jax.ShapeDtypeStruct((m, 1), a.dtype),
                    jax.ShapeDtypeStruct((n, 1), a.dtype)],
         scratch_shapes=[pltpu.VMEM((n, 1), jnp.float32)],
-        compiler_params=pltpu.CompilerParams(
-            dimension_semantics=("arbitrary",)),
+        compiler_params=tpu_compiler_params(("arbitrary",)),
         interpret=interpret,
     )(a, p, r)
 
@@ -107,3 +108,14 @@ def make_tunable_bicg(m: int = 2048, n: int = 2048,
     return TunableKernel(name=f"bicg_{m}x{n}", space=space, build=build,
                          static_info=static_info, make_inputs=make_inputs,
                          reference=bicg_ref)
+
+
+@tuning_cache.register("bicg")
+def _dispatch_bicg(*, m: int, n: int,
+                   dtype: str = "float32") -> tuning_cache.TuningProblem:
+    space = SearchSpace({
+        "bm": pick_divisor_candidates(m, (16, 32, 64, 128, 256, 512, 1024)),
+    })
+    return tuning_cache.TuningProblem(
+        space=space,
+        static_info=lambda p: bicg_static_info(m, n, dtype, p))

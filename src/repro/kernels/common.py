@@ -20,6 +20,7 @@ from typing import Sequence
 import jax
 import jax.numpy as jnp
 import numpy as np
+from jax.experimental.pallas import tpu as pltpu
 
 from repro.core.hw import TPU_V5E, TpuSpec, dtype_bytes
 from repro.core.mix import InstructionMix
@@ -27,7 +28,18 @@ from repro.core.occupancy import tpu_occupancy
 from repro.core.autotuner import KernelStaticInfo
 
 __all__ = ["cdiv", "default_interpret", "round_up", "block_info",
-           "pick_divisor_candidates"]
+           "pick_divisor_candidates", "CompilerParams",
+           "tpu_compiler_params"]
+
+# jax renamed pltpu.TPUCompilerParams -> pltpu.CompilerParams around 0.5;
+# resolve whichever this jax ships so kernels work on both sides.
+CompilerParams = getattr(pltpu, "CompilerParams", None) \
+    or getattr(pltpu, "TPUCompilerParams")
+
+
+def tpu_compiler_params(dimension_semantics: Sequence[str]) -> "CompilerParams":
+    """Version-portable `compiler_params=` value for `pl.pallas_call`."""
+    return CompilerParams(dimension_semantics=tuple(dimension_semantics))
 
 
 def cdiv(a: int, b: int) -> int:

@@ -18,10 +18,12 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro import tuning_cache
 from repro.core.autotuner import KernelStaticInfo, TunableKernel
 from repro.core.search import SearchSpace
 from repro.kernels.common import (block_info, cdiv, default_interpret,
-                                  pick_divisor_candidates)
+                                  pick_divisor_candidates,
+                                  tpu_compiler_params)
 
 __all__ = ["flash_attention_pallas", "flash_static_info",
            "make_tunable_flash"]
@@ -101,8 +103,8 @@ def flash_attention_pallas(q: jax.Array, k: jax.Array, v: jax.Array, *,
         scratch_shapes=[pltpu.VMEM((bq, 1), jnp.float32),
                         pltpu.VMEM((bq, 1), jnp.float32),
                         pltpu.VMEM((bq, d), jnp.float32)],
-        compiler_params=pltpu.CompilerParams(
-            dimension_semantics=("parallel", "parallel", "arbitrary")),
+        compiler_params=tpu_compiler_params(
+            ("parallel", "parallel", "arbitrary")),
         interpret=interpret,
     )(qr, kr, vr)
     return out.reshape(b, h, sq, d)
@@ -155,3 +157,17 @@ def make_tunable_flash(b: int = 2, h: int = 4, s: int = 1024, d: int = 128,
     return TunableKernel(name=f"flash_{b}x{h}x{s}x{d}", space=space,
                          build=build, static_info=static_info,
                          make_inputs=make_inputs, reference=attention_ref)
+
+
+@tuning_cache.register("flash_attention")
+def _dispatch_flash(*, b: int, h: int, sq: int, skv: int, d: int,
+                    causal: bool = True,
+                    dtype: str = "float32") -> tuning_cache.TuningProblem:
+    space = SearchSpace({
+        "bq": pick_divisor_candidates(sq, (8, 16, 32, 64, 128, 256, 512)),
+        "bkv": pick_divisor_candidates(skv, (8, 16, 32, 64, 128, 256, 512)),
+    })
+    return tuning_cache.TuningProblem(
+        space=space,
+        static_info=lambda p: flash_static_info(b, h, sq, skv, d, dtype, p,
+                                                causal=causal))

@@ -17,12 +17,13 @@ from typing import Dict
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
-from jax.experimental.pallas import tpu as pltpu
 
+from repro import tuning_cache
 from repro.core.autotuner import KernelStaticInfo, TunableKernel
 from repro.core.search import SearchSpace
 from repro.kernels.common import (block_info, cdiv, default_interpret,
-                                  pick_divisor_candidates)
+                                  pick_divisor_candidates,
+                                  tpu_compiler_params)
 
 __all__ = ["jacobi3d_pallas", "jacobi3d_static_info", "make_tunable_jacobi3d"]
 
@@ -80,8 +81,7 @@ def jacobi3d_pallas(u: jax.Array, *, bz: int = 8,
         ],
         out_specs=pl.BlockSpec((bz, y, x), lambda i: (i, 0, 0)),
         out_shape=jax.ShapeDtypeStruct((z, y, x), u.dtype),
-        compiler_params=pltpu.CompilerParams(
-            dimension_semantics=("arbitrary",)),
+        compiler_params=tpu_compiler_params(("arbitrary",)),
         interpret=interpret,
     )(u, u, u)
 
@@ -123,3 +123,14 @@ def make_tunable_jacobi3d(z: int = 128, y: int = 128, x: int = 128,
     return TunableKernel(name=f"jacobi3d_{z}x{y}x{x}", space=space,
                          build=build, static_info=static_info,
                          make_inputs=make_inputs, reference=jacobi3d_ref)
+
+
+@tuning_cache.register("jacobi3d")
+def _dispatch_jacobi3d(*, z: int, y: int, x: int,
+                       dtype: str = "float32") -> tuning_cache.TuningProblem:
+    space = SearchSpace({
+        "bz": pick_divisor_candidates(z, (1, 2, 4, 8, 16, 32, 64)),
+    })
+    return tuning_cache.TuningProblem(
+        space=space,
+        static_info=lambda p: jacobi3d_static_info(z, y, x, dtype, p))

@@ -16,10 +16,12 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro import tuning_cache
 from repro.core.autotuner import KernelStaticInfo, TunableKernel
 from repro.core.search import SearchSpace
 from repro.kernels.common import (block_info, cdiv, default_interpret,
-                                  pick_divisor_candidates)
+                                  pick_divisor_candidates,
+                                  tpu_compiler_params)
 
 __all__ = ["matmul_pallas", "matmul_static_info", "make_tunable_matmul"]
 
@@ -59,8 +61,8 @@ def matmul_pallas(a: jax.Array, b: jax.Array, *,
         out_specs=pl.BlockSpec((bm, bn), lambda i, j, kk: (i, j)),
         out_shape=jax.ShapeDtypeStruct((m, n), a.dtype),
         scratch_shapes=[pltpu.VMEM((bm, bn), jnp.float32)],
-        compiler_params=pltpu.CompilerParams(
-            dimension_semantics=("parallel", "parallel", "arbitrary")),
+        compiler_params=tpu_compiler_params(
+            ("parallel", "parallel", "arbitrary")),
         interpret=interpret,
     )(a, b)
 
@@ -108,3 +110,16 @@ def make_tunable_matmul(m: int = 1024, n: int = 1024, k: int = 1024,
     return TunableKernel(name=f"matmul_{m}x{n}x{k}", space=space,
                          build=build, static_info=static_info,
                          make_inputs=make_inputs, reference=matmul_ref)
+
+
+@tuning_cache.register("matmul")
+def _dispatch_matmul(*, m: int, n: int, k: int,
+                     dtype: str = "float32") -> tuning_cache.TuningProblem:
+    space = SearchSpace({
+        "bm": pick_divisor_candidates(m, (8, 16, 32, 64, 128, 256, 512)),
+        "bn": pick_divisor_candidates(n, (8, 16, 32, 64, 128, 256, 512)),
+        "bk": pick_divisor_candidates(k, (8, 16, 32, 64, 128, 256, 512)),
+    })
+    return tuning_cache.TuningProblem(
+        space=space,
+        static_info=lambda p: matmul_static_info(m, n, k, dtype, p))

@@ -16,10 +16,12 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro import tuning_cache
 from repro.core.autotuner import KernelStaticInfo, TunableKernel
 from repro.core.search import SearchSpace
 from repro.kernels.common import (block_info, cdiv, default_interpret,
-                                  pick_divisor_candidates)
+                                  pick_divisor_candidates,
+                                  tpu_compiler_params)
 
 __all__ = ["matvec_pallas", "matvec_static_info", "make_tunable_matvec"]
 
@@ -58,8 +60,7 @@ def matvec_pallas(a: jax.Array, x: jax.Array, *,
         out_specs=pl.BlockSpec((bm, 1), lambda i, j: (i, 0)),
         out_shape=jax.ShapeDtypeStruct((m, 1), a.dtype),
         scratch_shapes=[pltpu.VMEM((bm, 1), jnp.float32)],
-        compiler_params=pltpu.CompilerParams(
-            dimension_semantics=("parallel", "arbitrary")),
+        compiler_params=tpu_compiler_params(("parallel", "arbitrary")),
         interpret=interpret,
     )(a, x)
 
@@ -102,3 +103,15 @@ def make_tunable_matvec(m: int = 2048, n: int = 2048,
     return TunableKernel(name=f"matvec_{m}x{n}", space=space, build=build,
                          static_info=static_info, make_inputs=make_inputs,
                          reference=matvec_ref)
+
+
+@tuning_cache.register("matvec")
+def _dispatch_matvec(*, m: int, n: int,
+                     dtype: str = "float32") -> tuning_cache.TuningProblem:
+    space = SearchSpace({
+        "bm": pick_divisor_candidates(m, (32, 64, 128, 256, 512, 1024)),
+        "bk": pick_divisor_candidates(n, (32, 64, 128, 256, 512, 1024)),
+    })
+    return tuning_cache.TuningProblem(
+        space=space,
+        static_info=lambda p: matvec_static_info(m, n, dtype, p))

@@ -1,16 +1,26 @@
 """Public jit'd entry points for the kernel layer.
 
-Each op dispatches to the Pallas kernel with tuned-by-default launch
-parameters (the static tuner's suggestions for mid-size problems) and
-falls back to interpret mode off-TPU.  ``tuned_params`` lets a caller
-inject a :class:`~repro.core.autotuner.TuningReport`'s best_params.
+Each op resolves its launch configuration **at trace time** through the
+tuning database (`repro.tuning_cache.lookup_or_tune`): the first call
+for a given (kernel, shapes, dtype, chip) ranks the kernel's whole
+launch space with the static cost model in one vectorized pass; every
+later call — including across processes when a disk/pre-tuned database
+is configured — is a pure cache hit with zero model evaluations.
+
+``tuned_params`` still lets a caller inject a
+:class:`~repro.core.autotuner.TuningReport`'s best_params explicitly,
+which bypasses the database entirely.  If the database/registry fails
+for any reason the op falls back to the legacy largest-divisor
+defaults, so dispatch can never break a numerically-correct call.
 """
 from __future__ import annotations
 
+import logging
 from typing import Dict, Optional
 
 import jax
 
+from repro import tuning_cache
 from repro.kernels.matmul import matmul_pallas
 from repro.kernels.matvec import matvec_pallas
 from repro.kernels.atax import atax_pallas
@@ -22,6 +32,7 @@ __all__ = ["matmul", "matvec", "atax", "bicg", "jacobi3d",
            "flash_attention"]
 
 _P = Optional[Dict]
+_log = logging.getLogger(__name__)
 
 
 def _largest_divisor(n: int, candidates) -> int:
@@ -31,10 +42,22 @@ def _largest_divisor(n: int, candidates) -> int:
     return n
 
 
+def _resolve(kernel_id: str, **signature) -> Dict:
+    """Trace-time launch-config lookup; never raises (returns {} on
+    failure so the per-op fallback defaults apply)."""
+    try:
+        return tuning_cache.lookup_or_tune(kernel_id, **signature)
+    except Exception:
+        _log.exception("tuning-cache dispatch failed for %s %s; "
+                       "using fallback defaults", kernel_id, signature)
+        return {}
+
+
 def matmul(a, b, tuned_params: _P = None, **kw):
-    p = tuned_params or {}
     m, k = a.shape
     n = b.shape[1]
+    p = tuned_params if tuned_params is not None else _resolve(
+        "matmul", m=m, n=n, k=k, dtype=str(a.dtype))
     return matmul_pallas(
         a, b,
         bm=p.get("bm", _largest_divisor(m, (256, 128, 64, 32, 16, 8))),
@@ -44,8 +67,9 @@ def matmul(a, b, tuned_params: _P = None, **kw):
 
 
 def matvec(a, x, tuned_params: _P = None, **kw):
-    p = tuned_params or {}
     m, n = a.shape
+    p = tuned_params if tuned_params is not None else _resolve(
+        "matvec", m=m, n=n, dtype=str(a.dtype))
     return matvec_pallas(
         a, x,
         bm=p.get("bm", _largest_divisor(m, (512, 256, 128, 64, 32))),
@@ -54,16 +78,18 @@ def matvec(a, x, tuned_params: _P = None, **kw):
 
 
 def atax(a, x, tuned_params: _P = None, **kw):
-    p = tuned_params or {}
-    m = a.shape[0]
+    m, n = a.shape
+    p = tuned_params if tuned_params is not None else _resolve(
+        "atax", m=m, n=n, dtype=str(a.dtype))
     return atax_pallas(
         a, x, bm=p.get("bm", _largest_divisor(m, (256, 128, 64, 32, 16))),
         **kw)
 
 
 def bicg(a, p_vec, r, tuned_params: _P = None, **kw):
-    p = tuned_params or {}
-    m = a.shape[0]
+    m, n = a.shape
+    p = tuned_params if tuned_params is not None else _resolve(
+        "bicg", m=m, n=n, dtype=str(a.dtype))
     return bicg_pallas(
         a, p_vec, r,
         bm=p.get("bm", _largest_divisor(m, (256, 128, 64, 32, 16))),
@@ -71,17 +97,20 @@ def bicg(a, p_vec, r, tuned_params: _P = None, **kw):
 
 
 def jacobi3d(u, tuned_params: _P = None, **kw):
-    p = tuned_params or {}
-    z = u.shape[0]
+    z, y, x = u.shape
+    p = tuned_params if tuned_params is not None else _resolve(
+        "jacobi3d", z=z, y=y, x=x, dtype=str(u.dtype))
     return jacobi3d_pallas(
         u, bz=p.get("bz", _largest_divisor(z, (8, 4, 2, 1))), **kw)
 
 
 def flash_attention(q, k, v, causal: bool = True, tuned_params: _P = None,
                     **kw):
-    p = tuned_params or {}
-    s = q.shape[2]
+    b, h, s, d = q.shape
     skv = k.shape[2]
+    p = tuned_params if tuned_params is not None else _resolve(
+        "flash_attention", b=b, h=h, sq=s, skv=skv, d=d, causal=causal,
+        dtype=str(q.dtype))
     return flash_attention_pallas(
         q, k, v, causal=causal,
         bq=p.get("bq", _largest_divisor(s, (256, 128, 64, 32, 16, 8))),

@@ -26,11 +26,30 @@ def main():
     ap.add_argument("--gen", type=int, default=32)
     ap.add_argument("--temperature", type=float, default=0.0)
     ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--tuning-db", default=None,
+                    help="JSONL tuning database to warm kernel dispatch "
+                         "with before serving (on top of the packaged "
+                         "pre-tuned records)")
     args = ap.parse_args()
 
+    from repro import tuning_cache
     from repro.configs import get_config, get_smoke
     from repro.distributed import make_serve_fns
     from repro.models import build_model
+
+    # Warm the dispatch cache up front so the serving path never pays a
+    # cold full-space rank: the default db auto-loads the packaged
+    # pre-tuned records; --tuning-db layers a deployment-specific one.
+    db = tuning_cache.get_default_db()
+    if args.tuning_db:
+        try:
+            n = db.warm_jsonl(args.tuning_db)
+            print(f"[serve] warmed tuning cache: +{n} records "
+                  f"from {args.tuning_db}")
+        except OSError as e:
+            print(f"[serve] WARNING: could not warm tuning cache "
+                  f"from {args.tuning_db}: {e}")
+    print(f"[serve] tuning cache ready: {len(db)} records resident")
 
     cfg = get_smoke(args.arch) if args.smoke else get_config(args.arch)
     model = build_model(cfg)

@@ -1,0 +1,79 @@
+"""repro.tuning_cache — the persistent tuning database + dispatch registry.
+
+The paper's thesis (near-optimal launch parameters from static analysis,
+zero program runs) implies tuning results are pure functions of
+``(kernel, shapes/dtype, hardware, tuner mode, model version)`` — so we
+compute them once and reuse them everywhere:
+
+* `keys`      content-addressed cache keys + the MODEL_VERSION stamp
+* `store`     TuningRecord, in-process LRU, on-disk JSON, JSONL interchange
+* `registry`  trace-time dispatch: kernels resolve launch params via
+              `lookup_or_tune` instead of hard-coded defaults
+* `cli`       ``python -m repro.tuning_cache export|import|show|tune``
+
+The process-wide default database is memory-only unless the
+``REPRO_TUNING_CACHE_DIR`` environment variable points at a directory;
+it is warmed at first use from the pre-tuned JSONL files shipped under
+``tuning_cache/pretuned/`` so common shapes dispatch warm out of the box.
+
+See DESIGN.md §6-§7 for the key schema and invalidation rules.
+"""
+from __future__ import annotations
+
+import os
+from typing import Optional
+
+from repro.tuning_cache.keys import (CacheKey, MODEL_VERSION, canonical_json,
+                                     fingerprint_spec, make_key)
+from repro.tuning_cache.store import (CacheStats, DiskStore, TuningDatabase,
+                                      TuningRecord)
+from repro.tuning_cache.registry import (TuningProblem, get_problem,
+                                         lookup_or_tune, normalize_signature,
+                                         rank_space, register, registered)
+
+__all__ = [
+    "CacheKey", "MODEL_VERSION", "canonical_json", "fingerprint_spec",
+    "make_key", "CacheStats", "DiskStore", "TuningDatabase", "TuningRecord",
+    "TuningProblem", "get_problem", "lookup_or_tune", "normalize_signature",
+    "rank_space", "register", "registered", "get_default_db",
+    "set_default_db", "reset_default_db", "pretuned_dir",
+]
+
+ENV_DB_DIR = "REPRO_TUNING_CACHE_DIR"
+
+_default_db: Optional[TuningDatabase] = None
+
+
+def pretuned_dir() -> str:
+    """Directory of pre-tuned JSONL databases shipped with the package."""
+    return os.path.join(os.path.dirname(__file__), "pretuned")
+
+
+def _warm_pretuned(db: TuningDatabase) -> int:
+    n = 0
+    root = pretuned_dir()
+    if os.path.isdir(root):
+        for name in sorted(os.listdir(root)):
+            if name.endswith(".jsonl"):
+                n += db.warm_jsonl(os.path.join(root, name))
+    return n
+
+
+def get_default_db() -> TuningDatabase:
+    """Process-wide database: LRU + optional env-configured disk root,
+    warmed once from the packaged pre-tuned JSONL files."""
+    global _default_db
+    if _default_db is None:
+        _default_db = TuningDatabase(root=os.environ.get(ENV_DB_DIR))
+        _warm_pretuned(_default_db)
+    return _default_db
+
+
+def set_default_db(db: Optional[TuningDatabase]) -> None:
+    global _default_db
+    _default_db = db
+
+
+def reset_default_db() -> None:
+    """Drop the process default (tests; env-var changes)."""
+    set_default_db(None)

@@ -1,0 +1,5 @@
+import sys
+
+from repro.tuning_cache.cli import main
+
+sys.exit(main())

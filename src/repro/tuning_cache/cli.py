@@ -1,0 +1,120 @@
+"""Tuning-database CLI.
+
+    # dump a disk database (default: $REPRO_TUNING_CACHE_DIR or .tuning_cache)
+    PYTHONPATH=src python -m repro.tuning_cache export --out db.jsonl
+
+    # load a shipped JSONL into a disk database
+    PYTHONPATH=src python -m repro.tuning_cache import --path db.jsonl
+
+    # inspect what is stored
+    PYTHONPATH=src python -m repro.tuning_cache show
+
+    # pre-tune one kernel instance into the database
+    PYTHONPATH=src python -m repro.tuning_cache tune \
+        --kernel matmul --sig m=1024 n=1024 k=1024 dtype=float32
+
+`tune` + `export` is how the in-repo pre-tuned databases under
+``src/repro/tuning_cache/pretuned/`` are produced; `import` (or
+`launch/serve.py --tuning-db`) is how they are consumed.
+"""
+from __future__ import annotations
+
+import argparse
+import os
+import sys
+from typing import Any, Dict, List, Optional
+
+from repro.tuning_cache import (ENV_DB_DIR, TuningDatabase, get_problem,
+                                lookup_or_tune, registered)
+
+DEFAULT_DB_DIR = ".tuning_cache"
+
+
+def _open_db(path: Optional[str]) -> TuningDatabase:
+    root = path or os.environ.get(ENV_DB_DIR) or DEFAULT_DB_DIR
+    return TuningDatabase(root=root)
+
+
+def _parse_sig(pairs: List[str]) -> Dict[str, Any]:
+    sig: Dict[str, Any] = {}
+    for pair in pairs:
+        if "=" not in pair:
+            raise SystemExit(f"--sig entries must be key=value, got {pair!r}")
+        k, v = pair.split("=", 1)
+        if v.lower() in ("true", "false"):
+            # bools must round-trip as bools or the stored key's
+            # signature will never match the trace-time dispatch key
+            sig[k] = v.lower() == "true"
+            continue
+        try:
+            sig[k] = int(v)
+        except ValueError:
+            sig[k] = v
+    return sig
+
+
+def main(argv: Optional[List[str]] = None) -> int:
+    ap = argparse.ArgumentParser(
+        prog="python -m repro.tuning_cache",
+        description="Export / import / inspect / grow the tuning database.")
+    ap.add_argument("--db", default=None,
+                    help=f"database directory (default: ${ENV_DB_DIR} "
+                         f"or {DEFAULT_DB_DIR})")
+    sub = ap.add_subparsers(dest="cmd", required=True)
+
+    # `--db` is accepted before or after the subcommand; SUPPRESS keeps
+    # the subparser from clobbering a value parsed at the top level.
+    def add_sub(name, help):
+        p = sub.add_parser(name, help=help)
+        p.add_argument("--db", default=argparse.SUPPRESS)
+        return p
+
+    p_exp = add_sub("export", help="dump the database to JSONL")
+    p_exp.add_argument("--out", required=True)
+
+    p_imp = add_sub("import", help="load a JSONL into the database")
+    p_imp.add_argument("--path", required=True)
+
+    add_sub("show", help="list stored records")
+
+    p_tune = add_sub("tune", help="pre-tune one kernel instance")
+    p_tune.add_argument("--kernel", required=True)
+    p_tune.add_argument("--sig", nargs="+", default=[],
+                        metavar="KEY=VALUE",
+                        help="shape/dtype signature, e.g. m=1024 dtype=float32")
+
+    args = ap.parse_args(argv)
+    db = _open_db(args.db)
+
+    if args.cmd == "export":
+        n = db.export_jsonl(args.out)
+        print(f"exported {n} records -> {args.out}")
+    elif args.cmd == "import":
+        try:
+            n = db.import_jsonl(args.path, source="import")
+        except OSError as e:
+            raise SystemExit(f"cannot read {args.path}: {e}")
+        print(f"imported {n} records from {args.path} -> {db.disk.root}")
+    elif args.cmd == "show":
+        n = 0
+        for rec in db.records():
+            n += 1
+            print(f"{rec.key.digest}  {rec.key.kernel_id:<16} "
+                  f"mode={rec.key.mode:<9} pred={rec.predicted_s:.3e}s "
+                  f"params={rec.params}  sig={rec.key.signature}")
+        print(f"({n} records; stats={db.stats.as_dict()})")
+    elif args.cmd == "tune":
+        import repro.kernels  # noqa: F401  (registers dispatch problems)
+        sig = _parse_sig(args.sig)
+        try:
+            get_problem(args.kernel, **sig)  # fail fast on a bad signature
+        except (KeyError, TypeError) as e:
+            raise SystemExit(f"error: {e.args[0] if e.args else e}")
+        params = lookup_or_tune(args.kernel, db=db, **sig)
+        print(f"tuned {args.kernel} {sig} -> {params} "
+              f"(registered kernels: {registered()})")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,144 @@
+"""Trace-time dispatch registry (DESIGN.md §7).
+
+Kernel modules register a *dispatch problem factory* under a stable
+``kernel_id``: given concrete shapes/dtype keywords, the factory returns
+the kernel's launch-parameter `SearchSpace` plus an analytic
+``static_info(params)`` builder — the same static-analysis inputs the
+full `KernelTuner` uses, but with no inputs, no build function, and no
+reference, because dispatch only ever ranks statically.
+
+``lookup_or_tune(kernel_id, m=.., n=.., dtype=..)`` is then the one call
+a kernel entry point makes at trace time: key the tuning database on
+(kernel_id, signature, chip fingerprint, mode, model version); on a hit
+return the stored params with **zero** cost-model evaluations; on a
+miss, rank the entire space in one vectorized pass
+(`repro.core.predict.static_times_batch`), store the winner, return it.
+"""
+from __future__ import annotations
+
+import dataclasses
+import inspect
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import numpy as np
+
+from repro.core.hw import TpuSpec, TPU_V5E
+from repro.core.predict import CostModel, default_tpu_model, \
+    static_times_batch
+from repro.core.search import Params, SearchSpace
+from repro.tuning_cache.keys import CacheKey, fingerprint_spec, make_key
+from repro.tuning_cache.store import TuningDatabase, TuningRecord, now_unix
+
+__all__ = ["TuningProblem", "register", "get_problem", "registered",
+           "rank_space", "lookup_or_tune"]
+
+
+@dataclasses.dataclass
+class TuningProblem:
+    """What dispatch needs to rank one kernel instance statically."""
+
+    space: SearchSpace
+    static_info: Callable[[Params], Any]    # -> KernelStaticInfo-like
+
+
+_REGISTRY: Dict[str, Callable[..., TuningProblem]] = {}
+
+
+def register(kernel_id: str):
+    """Decorator: register a ``(**signature) -> TuningProblem`` factory."""
+    def deco(factory: Callable[..., TuningProblem]):
+        _REGISTRY[kernel_id] = factory
+        return factory
+    return deco
+
+
+def registered() -> Tuple[str, ...]:
+    return tuple(sorted(_REGISTRY))
+
+
+def _factory(kernel_id: str) -> Callable[..., TuningProblem]:
+    try:
+        return _REGISTRY[kernel_id]
+    except KeyError:
+        raise KeyError(
+            f"no dispatch entry for kernel {kernel_id!r}; "
+            f"registered: {registered()}") from None
+
+
+def get_problem(kernel_id: str, **signature: Any) -> TuningProblem:
+    return _factory(kernel_id)(**signature)
+
+
+def normalize_signature(kernel_id: str,
+                        signature: Dict[str, Any]) -> Dict[str, Any]:
+    """Bind a partial signature through the factory's defaults.
+
+    Keys must be identical no matter how the signature was spelled:
+    `tune --sig m=1024 ...` (dtype omitted, factory default applies)
+    has to produce the same record as `ops.matmul` passing
+    `dtype='float32'` explicitly, or CLI-produced databases would be
+    permanent cache misses at trace time.
+    """
+    factory = _factory(kernel_id)
+    sig = _SIG_CACHE.get(kernel_id)
+    if sig is None:
+        sig = _SIG_CACHE[kernel_id] = inspect.signature(factory)
+    ba = sig.bind(**signature)
+    ba.apply_defaults()
+    return dict(ba.arguments)
+
+
+_SIG_CACHE: Dict[str, inspect.Signature] = {}
+
+
+def rank_space(problem: TuningProblem, model: CostModel
+               ) -> Tuple[Params, float, int]:
+    """Argmin of the static model over the whole space, batched."""
+    pts = problem.space.enumerate()
+    infos = [problem.static_info(p) for p in pts]
+    times = static_times_batch(infos, model)
+    i = int(np.argmin(times))
+    return pts[i], float(times[i]), len(pts)
+
+
+_DEFAULT_MODELS: Dict[str, CostModel] = {}
+
+
+def _model_for(spec: TpuSpec) -> CostModel:
+    # memoized on the full-field fingerprint: a modified spec that keeps
+    # the default name must still get its own rate coefficients
+    fp = fingerprint_spec(spec)
+    if fp not in _DEFAULT_MODELS:
+        _DEFAULT_MODELS[fp] = default_tpu_model(spec, mode="max")
+    return _DEFAULT_MODELS[fp]
+
+
+def lookup_or_tune(kernel_id: str, *,
+                   spec: TpuSpec = TPU_V5E,
+                   mode: str = "static",
+                   model: Optional[CostModel] = None,
+                   db: Optional[TuningDatabase] = None,
+                   **signature: Any) -> Dict[str, Any]:
+    """Resolve launch params for a kernel instance, cache-first.
+
+    Returns a plain params dict ready to splat into the pallas_call
+    wrapper.  Identical ``(kernel_id, signature, spec)`` calls after the
+    first are pure cache hits: no space enumeration, no static_info
+    construction, no cost-model evaluation.
+    """
+    if db is None:
+        from repro.tuning_cache import get_default_db
+        db = get_default_db()
+    model = model or _model_for(spec)
+    signature = normalize_signature(kernel_id, signature)
+    key = make_key(kernel_id, spec=spec, mode=mode,
+                   model_name=model.fingerprint(), **signature)
+
+    def tune() -> TuningRecord:
+        problem = get_problem(kernel_id, **signature)
+        params, predicted, n = rank_space(problem, model)
+        return TuningRecord(key=key, params=dict(params),
+                            predicted_s=predicted, space_size=n,
+                            source=mode, created_unix=now_unix())
+
+    return dict(db.lookup_or_tune(key, tune).params)

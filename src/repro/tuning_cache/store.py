@@ -1,0 +1,241 @@
+"""Tuning-record storage: in-process LRU over an on-disk JSON backend.
+
+Layout of a persistent database rooted at ``root``::
+
+    root/
+      <digest>.json     one TuningRecord per file, digest = CacheKey.digest
+
+Records are tiny (a params dict plus a few floats), so one-file-per-key
+keeps writes atomic-enough (write temp + rename) and makes corruption
+strictly local: a record that fails to parse is quarantined to
+``<digest>.json.corrupt`` and treated as a miss — the next
+``lookup_or_tune`` simply re-tunes and overwrites it.
+
+JSONL is the interchange format (`export_jsonl` / `import_jsonl`): one
+record per line, self-describing (the full key travels with the params),
+so a database tuned on one host can be shipped in-repo and warmed
+elsewhere — see `repro.tuning_cache.cli`.
+"""
+from __future__ import annotations
+
+import collections
+import dataclasses
+import json
+import math
+import os
+import time
+from typing import Any, Callable, Dict, Iterator, Optional
+
+from repro.tuning_cache.keys import CacheKey
+
+__all__ = ["TuningRecord", "CacheStats", "DiskStore", "TuningDatabase"]
+
+
+@dataclasses.dataclass
+class TuningRecord:
+    """One tuning decision: the winning params + provenance."""
+
+    key: CacheKey
+    params: Dict[str, Any]
+    predicted_s: float = math.inf
+    measured_s: Optional[float] = None
+    space_size: int = 0
+    source: str = "static"      # 'static' | 'hybrid' | 'empirical' | 'import'
+    created_unix: float = 0.0
+    extras: Dict[str, Any] = dataclasses.field(default_factory=dict)
+
+    def to_dict(self) -> Dict[str, Any]:
+        d = dataclasses.asdict(self)
+        d["key"] = self.key.to_dict()
+        return d
+
+    @staticmethod
+    def from_dict(d: Dict[str, Any]) -> "TuningRecord":
+        return TuningRecord(
+            key=CacheKey.from_dict(d["key"]),
+            params=dict(d["params"]),
+            predicted_s=float(d.get("predicted_s", math.inf)),
+            measured_s=(None if d.get("measured_s") is None
+                        else float(d["measured_s"])),
+            space_size=int(d.get("space_size", 0)),
+            source=str(d.get("source", "import")),
+            created_unix=float(d.get("created_unix", 0.0)),
+            extras=dict(d.get("extras", {})),
+        )
+
+
+@dataclasses.dataclass
+class CacheStats:
+    hits: int = 0
+    misses: int = 0
+    puts: int = 0
+    tunes: int = 0
+    corrupt: int = 0
+
+    def as_dict(self) -> Dict[str, int]:
+        return dataclasses.asdict(self)
+
+
+class DiskStore:
+    """One-JSON-file-per-record backend with quarantine-on-corruption."""
+
+    def __init__(self, root: str):
+        self.root = os.path.abspath(os.path.expanduser(root))
+        self.corrupt_seen = 0
+
+    def path_for(self, digest: str) -> str:
+        return os.path.join(self.root, f"{digest}.json")
+
+    def load(self, digest: str) -> Optional[TuningRecord]:
+        path = self.path_for(digest)
+        try:
+            with open(path, "r", encoding="utf-8") as f:
+                return TuningRecord.from_dict(json.load(f))
+        except FileNotFoundError:
+            return None
+        except (json.JSONDecodeError, KeyError, TypeError, ValueError):
+            # Corrupted record: quarantine so it never poisons lookups
+            # again, and report a miss so the caller re-tunes.
+            self.corrupt_seen += 1
+            try:
+                os.replace(path, path + ".corrupt")
+            except OSError:
+                pass
+            return None
+
+    def save(self, record: TuningRecord) -> None:
+        os.makedirs(self.root, exist_ok=True)
+        path = self.path_for(record.key.digest)
+        tmp = path + ".tmp"
+        with open(tmp, "w", encoding="utf-8") as f:
+            json.dump(record.to_dict(), f, sort_keys=True)
+        os.replace(tmp, path)
+
+    def iter_records(self) -> Iterator[TuningRecord]:
+        if not os.path.isdir(self.root):
+            return
+        for name in sorted(os.listdir(self.root)):
+            if not name.endswith(".json"):
+                continue
+            rec = self.load(name[:-len(".json")])
+            if rec is not None:
+                yield rec
+
+
+class TuningDatabase:
+    """LRU-fronted tuning store; optionally backed by a `DiskStore`.
+
+    `lookup` / `put` / `lookup_or_tune` are the whole API surface the
+    tuner layer needs; everything else is import/export plumbing.
+    """
+
+    def __init__(self, root: Optional[str] = None, capacity: int = 4096):
+        self.capacity = max(1, int(capacity))
+        self._lru: "collections.OrderedDict[str, TuningRecord]" = \
+            collections.OrderedDict()
+        self.disk = DiskStore(root) if root else None
+        self.stats = CacheStats()
+        self._disk_corrupt_synced = 0
+
+    # -- core ---------------------------------------------------------------
+    def lookup(self, key: CacheKey) -> Optional[TuningRecord]:
+        digest = key.digest
+        rec = self._lru.get(digest)
+        if rec is not None:
+            self._lru.move_to_end(digest)
+            self.stats.hits += 1
+            return rec
+        if self.disk is not None:
+            rec = self.disk.load(digest)
+            # fold in only the delta so corrupt JSONL lines counted by
+            # import_jsonl are not clobbered
+            self.stats.corrupt += (self.disk.corrupt_seen
+                                   - self._disk_corrupt_synced)
+            self._disk_corrupt_synced = self.disk.corrupt_seen
+            if rec is not None:
+                self._remember(digest, rec)
+                self.stats.hits += 1
+                return rec
+        self.stats.misses += 1
+        return None
+
+    def put(self, record: TuningRecord) -> None:
+        self._remember(record.key.digest, record)
+        if self.disk is not None:
+            self.disk.save(record)
+        self.stats.puts += 1
+
+    def lookup_or_tune(self, key: CacheKey,
+                       tune: Callable[[], TuningRecord]) -> TuningRecord:
+        rec = self.lookup(key)
+        if rec is not None:
+            return rec
+        rec = tune()
+        self.stats.tunes += 1
+        self.put(rec)
+        return rec
+
+    def _remember(self, digest: str, rec: TuningRecord) -> None:
+        self._lru[digest] = rec
+        self._lru.move_to_end(digest)
+        while len(self._lru) > self.capacity:
+            self._lru.popitem(last=False)
+
+    def __len__(self) -> int:
+        return len(self._lru)
+
+    def clear(self) -> None:
+        self._lru.clear()
+        self.stats = CacheStats()
+
+    # -- interchange --------------------------------------------------------
+    def records(self) -> Iterator[TuningRecord]:
+        """Everything resident: memory first, then disk-only records."""
+        seen = set()
+        for digest, rec in list(self._lru.items()):
+            seen.add(digest)
+            yield rec
+        if self.disk is not None:
+            for rec in self.disk.iter_records():
+                if rec.key.digest not in seen:
+                    yield rec
+
+    def export_jsonl(self, path: str) -> int:
+        n = 0
+        with open(path, "w", encoding="utf-8") as f:
+            for rec in self.records():
+                f.write(json.dumps(rec.to_dict(), sort_keys=True) + "\n")
+                n += 1
+        return n
+
+    def import_jsonl(self, path: str, source: Optional[str] = None) -> int:
+        """Load records from a JSONL file; bad lines are skipped."""
+        n = 0
+        with open(path, "r", encoding="utf-8") as f:
+            for line in f:
+                line = line.strip()
+                if not line:
+                    continue
+                try:
+                    rec = TuningRecord.from_dict(json.loads(line))
+                except (json.JSONDecodeError, KeyError, TypeError,
+                        ValueError):
+                    self.stats.corrupt += 1
+                    continue
+                if source is not None:
+                    rec.source = source
+                self.put(rec)
+                n += 1
+        return n
+
+    def warm_jsonl(self, path: str) -> int:
+        """import_jsonl into memory only (no disk write-back)."""
+        disk, self.disk = self.disk, None
+        try:
+            return self.import_jsonl(path)
+        finally:
+            self.disk = disk
+
+
+def now_unix() -> float:
+    return time.time()

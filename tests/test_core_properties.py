@@ -1,10 +1,16 @@
-"""Property-based tests (hypothesis) on the analyzer's invariants."""
+"""Property-based tests (hypothesis) on the analyzer's invariants.
+
+Skips cleanly when `hypothesis` is not installed.
+"""
 import math
 
-import hypothesis.strategies as st
 import jax.numpy as jnp
 import numpy as np
 import pytest
+
+pytest.importorskip("hypothesis")
+
+import hypothesis.strategies as st
 from hypothesis import given, settings
 
 from repro.core import (GPU_TABLE, InstructionMix, SearchSpace,

@@ -1,0 +1,419 @@
+"""Tuning database + dispatch registry tests (ISSUE 1 acceptance).
+
+Covers: hit/miss semantics, key stability across processes, corrupted
+record recovery, zero-model-evaluation cache hits (both the dispatch
+registry and KernelTuner.tune), JSONL export/import round-trips, and
+the vectorized static ranking agreeing with the scalar path.
+"""
+import json
+import math
+import os
+import subprocess
+import sys
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import tuning_cache
+from repro.core import KernelTuner
+from repro.core.hw import TPU_V5E, TpuSpec
+from repro.core.predict import (CostModel, default_tpu_model,
+                                static_times_batch)
+from repro.core.search import SearchSpace, StaticPrunedSearch
+from repro.kernels import make_tunable_matmul, make_tunable_matvec
+from repro.tuning_cache import (CacheKey, TuningDatabase, TuningRecord,
+                                fingerprint_spec, make_key)
+from repro.tuning_cache.store import now_unix
+
+
+@pytest.fixture(autouse=True)
+def _fresh_default_db():
+    """Isolate every test from the process-wide default database."""
+    tuning_cache.set_default_db(TuningDatabase())
+    yield
+    tuning_cache.reset_default_db()
+
+
+def _key(**over):
+    sig = dict(m=128, n=128, dtype="float32")
+    sig.update(over.pop("signature", {}))
+    return make_key(over.pop("kernel_id", "matvec"), spec=TPU_V5E,
+                    **over, **sig)
+
+
+def _record(key, params=None):
+    return TuningRecord(key=key, params=params or {"bm": 64},
+                        predicted_s=1e-5, space_size=4, source="static",
+                        created_unix=now_unix())
+
+
+class CountingModel(CostModel):
+    """Cost model that counts every (scalar or batched) evaluation."""
+
+    def __init__(self, base):
+        super().__init__(coeffs=dict(base.coeffs), mode=base.mode,
+                         name=base.name)
+        self.evals = 0
+
+    def time(self, mix):
+        self.evals += 1
+        return super().time(mix)
+
+    def time_batch(self, mixes=None, F=None):
+        n = len(mixes) if mixes is not None else len(np.atleast_2d(F))
+        self.evals += n
+        return super().time_batch(mixes=mixes, F=F)
+
+
+# ---------------------------------------------------------------------------
+# hit / miss semantics
+# ---------------------------------------------------------------------------
+
+
+def test_memory_hit_miss():
+    db = TuningDatabase()
+    key = _key()
+    assert db.lookup(key) is None
+    assert db.stats.misses == 1
+    db.put(_record(key))
+    rec = db.lookup(key)
+    assert rec is not None and rec.params == {"bm": 64}
+    assert db.stats.hits == 1
+    # a different signature is a different key -> miss
+    assert db.lookup(_key(signature={"m": 256})) is None
+
+
+def test_key_components_disambiguate():
+    base = _key()
+    assert base.digest != _key(mode="hybrid").digest
+    assert base.digest != _key(kernel_id="matmul").digest
+    other_spec = TpuSpec(name="tpu-v5e-mod", hbm_bw=900e9)
+    assert base.digest != make_key("matvec", spec=other_spec,
+                                   m=128, n=128, dtype="float32").digest
+    # model version bump invalidates everything
+    k2 = CacheKey(kernel_id=base.kernel_id, signature=base.signature,
+                  spec_fingerprint=base.spec_fingerprint, mode=base.mode,
+                  model_version="999")
+    assert base.digest != k2.digest
+
+
+def test_lru_eviction():
+    db = TuningDatabase(capacity=2)
+    keys = [_key(signature={"m": 64 * (i + 1)}) for i in range(3)]
+    for k in keys:
+        db.put(_record(k))
+    assert len(db) == 2
+    assert db.lookup(keys[0]) is None      # evicted (oldest)
+    assert db.lookup(keys[2]) is not None
+
+
+def test_disk_roundtrip_and_promotion(tmp_path):
+    root = str(tmp_path / "db")
+    db1 = TuningDatabase(root=root)
+    key = _key()
+    db1.put(_record(key))
+    # fresh database over the same root: memory cold, disk warm
+    db2 = TuningDatabase(root=root)
+    rec = db2.lookup(key)
+    assert rec is not None and rec.params == {"bm": 64}
+    assert len(db2) == 1                   # promoted into the LRU
+
+
+# ---------------------------------------------------------------------------
+# key stability across processes
+# ---------------------------------------------------------------------------
+
+
+_KEY_SNIPPET = """
+import sys
+sys.path.insert(0, {src!r})
+from repro.core.hw import TPU_V5E
+from repro.tuning_cache import make_key
+k = make_key("matvec", spec=TPU_V5E, mode="static", m=128, n=128,
+             dtype="float32")
+print(k.digest)
+"""
+
+
+def test_key_digest_stable_across_processes():
+    src = os.path.join(os.path.dirname(os.path.dirname(
+        os.path.abspath(__file__))), "src")
+    here = make_key("matvec", spec=TPU_V5E, mode="static", m=128, n=128,
+                    dtype="float32").digest
+    out = subprocess.run(
+        [sys.executable, "-c", _KEY_SNIPPET.format(src=src)],
+        capture_output=True, text=True, check=True)
+    assert out.stdout.strip() == here
+
+
+def test_spec_fingerprint_tracks_fields():
+    assert fingerprint_spec(TPU_V5E) == fingerprint_spec(TpuSpec())
+    assert fingerprint_spec(TPU_V5E) != fingerprint_spec(
+        TpuSpec(vmem_bytes=32 * 1024 ** 2))
+
+
+# ---------------------------------------------------------------------------
+# corruption recovery
+# ---------------------------------------------------------------------------
+
+
+def test_corrupted_record_recovers(tmp_path):
+    root = str(tmp_path / "db")
+    db = TuningDatabase(root=root)
+    key = _key()
+    db.put(_record(key))
+    path = db.disk.path_for(key.digest)
+    with open(path, "w") as f:
+        f.write("{this is not json")
+    db2 = TuningDatabase(root=root)
+    assert db2.lookup(key) is None                 # miss, no crash
+    assert os.path.exists(path + ".corrupt")       # quarantined
+    db2.put(_record(key, params={"bm": 128}))      # re-tune overwrites
+    assert TuningDatabase(root=root).lookup(key).params == {"bm": 128}
+
+
+def test_import_jsonl_skips_bad_lines(tmp_path):
+    good = _record(_key())
+    path = tmp_path / "db.jsonl"
+    path.write_text(json.dumps(good.to_dict()) + "\n"
+                    + "not json at all\n"
+                    + '{"params": {"bm": 1}}\n')     # missing key
+    db = TuningDatabase()
+    assert db.import_jsonl(str(path)) == 1
+    assert db.lookup(good.key) is not None
+
+
+def test_export_import_roundtrip(tmp_path):
+    db = TuningDatabase()
+    keys = [_key(signature={"m": 64 * (i + 1)}) for i in range(4)]
+    for i, k in enumerate(keys):
+        db.put(_record(k, params={"bm": 8 << i}))
+    out = str(tmp_path / "db.jsonl")
+    assert db.export_jsonl(out) == 4
+    db2 = TuningDatabase()
+    assert db2.import_jsonl(out) == 4
+    for i, k in enumerate(keys):
+        assert db2.lookup(k).params == {"bm": 8 << i}
+
+
+# ---------------------------------------------------------------------------
+# zero model evaluations on the second lookup
+# ---------------------------------------------------------------------------
+
+
+def test_dispatch_second_lookup_zero_model_evals():
+    import repro.kernels  # noqa: F401  (registers dispatch problems)
+    model = CountingModel(default_tpu_model(mode="max"))
+    db = TuningDatabase()
+    p1 = tuning_cache.lookup_or_tune("matmul", db=db, model=model,
+                                     m=256, n=256, k=256, dtype="float32")
+    assert model.evals > 0 and p1
+    model.evals = 0
+    p2 = tuning_cache.lookup_or_tune("matmul", db=db, model=model,
+                                     m=256, n=256, k=256, dtype="float32")
+    assert p2 == p1
+    assert model.evals == 0                  # pure cache hit
+    assert db.stats.hits == 1 and db.stats.tunes == 1
+
+
+def test_kernel_tuner_second_tune_zero_model_evals():
+    db = TuningDatabase()
+    model = CountingModel(default_tpu_model(mode="max"))
+    tk = make_tunable_matvec(m=512, n=512, dtype=jnp.float32)
+    rep1 = KernelTuner(tk, model=model, repeats=1, db=db).tune(mode="static")
+    assert model.evals > 0 and not rep1.from_cache
+    model.evals = 0
+    tk2 = make_tunable_matvec(m=512, n=512, dtype=jnp.float32)
+    rep2 = KernelTuner(tk2, model=model, repeats=1, db=db).tune(mode="static")
+    assert rep2.from_cache
+    assert rep2.best_params == rep1.best_params
+    assert rep2.best_predicted_s == pytest.approx(rep1.best_predicted_s)
+    assert model.evals == 0                  # zero cost-model evaluations
+
+
+def test_kernel_tuner_key_distinguishes_dtype():
+    """Shape-only kernel names must not collide across dtypes: the key
+    carries a static-analysis fingerprint of the instance."""
+    db = TuningDatabase()
+    tk32 = make_tunable_matvec(m=512, n=512, dtype=jnp.float32)
+    rep32 = KernelTuner(tk32, repeats=1, db=db).tune(mode="static")
+    tk16 = make_tunable_matvec(m=512, n=512, dtype=jnp.bfloat16)
+    rep16 = KernelTuner(tk16, repeats=1, db=db).tune(mode="static")
+    assert not rep32.from_cache and not rep16.from_cache
+    assert db.stats.puts == 2          # two distinct records
+
+
+def test_model_fingerprint_distinguishes_calibrations():
+    """Two models with the same name but different coefficients (e.g.
+    successive calibrate() fits) must key separately."""
+    base = default_tpu_model(mode="max")
+    other = CostModel(coeffs={**base.coeffs,
+                              "hbm_bytes": base.coeffs["hbm_bytes"] * 2},
+                      mode=base.mode, name=base.name)
+    assert base.fingerprint() != other.fingerprint()
+    db = TuningDatabase()
+    tk = make_tunable_matvec(m=512, n=512, dtype=jnp.float32)
+    KernelTuner(tk, model=base, repeats=1, db=db).tune(mode="static")
+    rep = KernelTuner(make_tunable_matvec(m=512, n=512, dtype=jnp.float32),
+                      model=other, repeats=1, db=db).tune(mode="static")
+    assert not rep.from_cache
+
+
+def test_signature_normalized_through_factory_defaults():
+    """A CLI tune that omits an optional key (dtype) must produce the
+    same record a dispatch call with the explicit default produces."""
+    import repro.kernels  # noqa: F401
+    db = TuningDatabase()
+    p1 = tuning_cache.lookup_or_tune("matmul", db=db, m=256, n=256, k=256)
+    assert db.stats.tunes == 1
+    p2 = tuning_cache.lookup_or_tune("matmul", db=db, m=256, n=256, k=256,
+                                     dtype="float32")
+    assert db.stats.tunes == 1 and db.stats.hits == 1   # same key -> hit
+    assert p1 == p2
+
+
+def test_default_model_tracks_spec_fields():
+    """The per-spec default-model memo must key on spec contents, not
+    the (possibly unchanged) spec name."""
+    from repro.tuning_cache.registry import _model_for
+    m1 = _model_for(TPU_V5E)
+    m2 = _model_for(TpuSpec(hbm_bw=TPU_V5E.hbm_bw / 4))   # same name
+    assert m2.coeffs["hbm_bytes"] == pytest.approx(
+        m1.coeffs["hbm_bytes"] * 4)
+
+
+def test_strategy_config_in_kernel_tuner_key():
+    from repro.core.search import RandomSearch
+    t = KernelTuner(make_tunable_matvec(m=512, n=512, dtype=jnp.float32),
+                    repeats=1, db=None)
+    k1 = t._cache_key("empirical", 4, RandomSearch(seed=1))
+    k2 = t._cache_key("empirical", 4, RandomSearch(seed=7))
+    assert k1.digest != k2.digest
+
+
+def test_strategy_key_stable_across_instances_with_object_attrs():
+    """Object-valued strategy attrs (bound methods, rngs) must not leak
+    memory addresses into the key — identical configs must collide."""
+    t = KernelTuner(make_tunable_matvec(m=512, n=512, dtype=jnp.float32),
+                    repeats=1, db=None)
+    s1 = StaticPrunedSearch(t.static_cost, keep_frac=0.25)
+    s2 = StaticPrunedSearch(t.static_cost, keep_frac=0.25)
+    assert t._cache_key("empirical", 4, s1).digest == \
+        t._cache_key("empirical", 4, s2).digest
+    s3 = StaticPrunedSearch(t.static_cost, keep_frac=0.5)
+    assert t._cache_key("empirical", 4, s1).digest != \
+        t._cache_key("empirical", 4, s3).digest
+
+
+def test_graph_tuner_cache_hit_returns_roofline_terms():
+    """Hit and miss must return the same terms type."""
+    import dataclasses
+    from repro.core.autotuner import GraphTuner
+    from repro.core.roofline import RooflineTerms
+    db = TuningDatabase()
+    space = SearchSpace({"microbatch": (1, 2)})
+    terms = RooflineTerms(name="x", chips=4, hlo_flops=1e12, hlo_bytes=1e9,
+                          collective_bytes=1e8, model_flops=1e12,
+                          t_compute=1e-3, t_memory=5e-4, t_collective=1e-4,
+                          dominant="compute", useful_ratio=0.9,
+                          roofline_frac=0.8)
+    gt = GraphTuner(space, lower_fn=None, chips=4, model_flops=1e12,
+                    db=db, cache_signature={"arch": "toy"})
+    db.put(TuningRecord(key=gt._cache_key(), params={"microbatch": 2},
+                        predicted_s=1e-3, space_size=2, source="graph",
+                        created_unix=now_unix(),
+                        extras={"terms": dataclasses.asdict(terms)}))
+    best_p, got, hist = gt.tune()     # lower_fn never touched on a hit
+    assert best_p == {"microbatch": 2}
+    assert isinstance(got, RooflineTerms)
+    assert got.t_compute == pytest.approx(terms.t_compute)
+
+
+def test_cli_sig_parses_bools():
+    from repro.tuning_cache.cli import _parse_sig
+    sig = _parse_sig(["m=64", "causal=false", "other=True", "dtype=float32"])
+    assert sig == {"m": 64, "causal": False, "other": True,
+                   "dtype": "float32"}
+
+
+def test_corrupt_count_survives_disk_lookups(tmp_path):
+    db = TuningDatabase(root=str(tmp_path / "db"))
+    bad = tmp_path / "bad.jsonl"
+    bad.write_text("definitely not json\n")
+    db.import_jsonl(str(bad))
+    assert db.stats.corrupt == 1
+    db.lookup(_key())                       # disk miss must not clobber
+    assert db.stats.corrupt == 1
+
+
+def test_kernel_tuner_uses_process_default_db():
+    tk = make_tunable_matmul(m=256, n=256, k=256, dtype=jnp.float32)
+    rep1 = KernelTuner(tk, repeats=1).tune(mode="static")
+    rep2 = KernelTuner(make_tunable_matmul(m=256, n=256, k=256,
+                                           dtype=jnp.float32),
+                       repeats=1).tune(mode="static")
+    assert not rep1.from_cache and rep2.from_cache
+    assert rep2.best_params == rep1.best_params
+
+
+# ---------------------------------------------------------------------------
+# vectorized ranking == scalar ranking
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("mode", ["sum", "max"])
+def test_batch_scoring_matches_scalar(mode):
+    tk = make_tunable_matmul(m=512, n=512, k=512, dtype=jnp.float32)
+    model = default_tpu_model(mode=mode)
+    pts = tk.space.enumerate()
+    infos = [tk.static_info(p) for p in pts]
+    batch = static_times_batch(infos, model)
+    scalar = np.array([i.static_time(model) for i in infos])
+    np.testing.assert_allclose(batch, scalar, rtol=1e-12)
+
+
+def test_static_pruned_search_batch_path_matches():
+    tk = make_tunable_matmul(m=512, n=512, k=512, dtype=jnp.float32)
+    tuner = KernelTuner(tk, repeats=1, db=None)
+    scalar = StaticPrunedSearch(tuner.static_cost, keep_frac=0.5)
+    batch = StaticPrunedSearch(tuner.static_cost, keep_frac=0.5,
+                               static_cost_batch=tuner.static_cost_batch)
+    s1 = scalar.shortlist(tk.space)
+    s2 = batch.shortlist(tk.space)
+    assert [c for _, c in s1] == pytest.approx([c for _, c in s2])
+    assert s1[0][0] == s2[0][0]
+
+
+# ---------------------------------------------------------------------------
+# CLI
+# ---------------------------------------------------------------------------
+
+
+def test_cli_tune_export_import_show(tmp_path, capsys):
+    from repro.tuning_cache.cli import main
+    dbdir = str(tmp_path / "db")
+    out = str(tmp_path / "out.jsonl")
+    assert main(["--db", dbdir, "tune", "--kernel", "matvec",
+                 "--sig", "m=512", "n=512", "dtype=float32"]) == 0
+    assert main(["--db", dbdir, "export", "--out", out]) == 0
+    assert os.path.exists(out) and os.path.getsize(out) > 0
+    dbdir2 = str(tmp_path / "db2")
+    assert main(["--db", dbdir2, "import", "--path", out]) == 0
+    assert main(["--db", dbdir2, "show"]) == 0
+    assert "matvec" in capsys.readouterr().out
+
+
+def test_pretuned_database_parses():
+    """Every packaged pre-tuned record must round-trip and carry a
+    current-generation model version (else it would never hit)."""
+    root = tuning_cache.pretuned_dir()
+    files = [f for f in os.listdir(root) if f.endswith(".jsonl")] \
+        if os.path.isdir(root) else []
+    for name in files:
+        with open(os.path.join(root, name)) as f:
+            for line in f:
+                rec = TuningRecord.from_dict(json.loads(line))
+                assert rec.params
+                assert rec.key.model_version == tuning_cache.MODEL_VERSION
+                assert math.isfinite(rec.predicted_s)
