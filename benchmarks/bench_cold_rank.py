@@ -1,0 +1,136 @@
+"""Cold full-space static rank: scalar object path vs struct-of-arrays.
+
+    PYTHONPATH=src python benchmarks/bench_cold_rank.py [--smoke] [--out F]
+
+Per kernel instance, three numbers:
+
+* **cold scalar** — the pre-ISSUE-2 pipeline: enumerate the space as
+  dicts, build one `KernelStaticInfo` (mix dataclass + occupancy
+  dataclass) per config, batch-score, argmin;
+* **cold array**  — the struct-of-arrays pipeline: `enumerate_lattice`
+  + `static_info_batch` + array-form `static_times_batch`, no
+  per-config Python objects;
+* **warm dispatch** — the memoized `lookup_or_tune` repeat-trace path
+  (what every production dispatch after the first pays).
+
+Both cold paths must pick the identical winner (asserted).  Results go
+to ``BENCH_cold_rank.json``.  ``--smoke`` (CI) trims cases/repeats but
+still exercises every stage and enforces the acceptance thresholds on
+the matmul case: array >= 10x scalar, warm <= 5 us.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import statistics
+import time
+
+import numpy as np
+
+import repro.kernels  # noqa: F401  (registers dispatch problems)
+from repro import tuning_cache
+from repro.core.predict import default_tpu_model, static_times_batch
+from repro.tuning_cache.registry import rank_space
+
+CASES = [
+    ("matmul", dict(m=4096, n=4096, k=4096, dtype="float32")),
+    ("matmul", dict(m=1024, n=1024, k=1024, dtype="bfloat16")),
+    ("matvec", dict(m=4096, n=4096, dtype="float32")),
+    ("atax", dict(m=2048, n=2048, dtype="float32")),
+    ("bicg", dict(m=2048, n=2048, dtype="float32")),
+    ("jacobi3d", dict(z=128, y=128, x=128, dtype="float32")),
+    ("flash_attention", dict(b=4, h=8, sq=2048, skv=2048, d=128,
+                             causal=True, dtype="float32")),
+]
+
+SMOKE_CASES = [
+    ("matmul", dict(m=1024, n=1024, k=1024, dtype="float32")),
+    ("flash_attention", dict(b=2, h=4, sq=1024, skv=1024, d=128,
+                             causal=True, dtype="float32")),
+]
+
+
+def _median(fn, repeats):
+    ts = []
+    for _ in range(repeats):
+        t0 = time.perf_counter()
+        fn()
+        ts.append(time.perf_counter() - t0)
+    return float(statistics.median(ts))
+
+
+def bench_cold(kernel_id, sig, repeats):
+    problem = tuning_cache.get_problem(kernel_id, **sig)
+    model = default_tpu_model(mode="max")
+
+    def scalar_rank():
+        pts = problem.space.enumerate()
+        infos = [problem.static_info(p) for p in pts]
+        times = static_times_batch(infos, model)
+        i = int(np.argmin(times))
+        return pts[i]
+
+    def array_rank():
+        return rank_space(problem, model)[0]
+
+    best_scalar, best_array = scalar_rank(), array_rank()
+    assert best_scalar == best_array, (kernel_id, best_scalar, best_array)
+    return {
+        "space_size": problem.space.size,
+        "cold_scalar_s": _median(scalar_rank, repeats),
+        "cold_array_s": _median(array_rank, repeats),
+        "best_params": best_array,
+    }
+
+
+def bench_warm(kernel_id, sig, reps):
+    tuning_cache.lookup_or_tune(kernel_id, **sig)     # prime db + memo
+    return _median(lambda: tuning_cache.lookup_or_tune(kernel_id, **sig),
+                   reps)
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--smoke", action="store_true",
+                    help="CI mode: fewer cases/repeats, assert the "
+                         "acceptance thresholds")
+    ap.add_argument("--out", default="BENCH_cold_rank.json")
+    args = ap.parse_args(argv)
+
+    cases = SMOKE_CASES if args.smoke else CASES
+    cold_reps = 5 if args.smoke else 20
+    warm_reps = 200 if args.smoke else 1000
+
+    results = []
+    print(f"{'kernel':<16} {'space':>6} {'cold scalar':>12} "
+          f"{'cold array':>11} {'speedup':>8} {'warm dispatch':>14}")
+    for kernel_id, sig in cases:
+        row = bench_cold(kernel_id, sig, cold_reps)
+        row["kernel"] = kernel_id
+        row["signature"] = sig
+        row["speedup"] = row["cold_scalar_s"] / row["cold_array_s"]
+        row["warm_dispatch_s"] = bench_warm(kernel_id, sig, warm_reps)
+        results.append(row)
+        print(f"{kernel_id:<16} {row['space_size']:>6} "
+              f"{row['cold_scalar_s']*1e3:>9.2f} ms "
+              f"{row['cold_array_s']*1e6:>8.0f} us "
+              f"{row['speedup']:>7.1f}x "
+              f"{row['warm_dispatch_s']*1e6:>11.2f} us")
+
+    with open(args.out, "w", encoding="utf-8") as f:
+        json.dump({"smoke": args.smoke, "results": results}, f, indent=2,
+                  sort_keys=True, default=str)
+    print(f"wrote {args.out}")
+
+    if args.smoke:
+        mm = next(r for r in results if r["kernel"] == "matmul")
+        assert mm["speedup"] >= 10.0, \
+            f"array path only {mm['speedup']:.1f}x over scalar (need >=10x)"
+        assert mm["warm_dispatch_s"] <= 5e-6, \
+            f"warm dispatch {mm['warm_dispatch_s']*1e6:.2f} us (need <=5 us)"
+        print("smoke thresholds OK (>=10x cold speedup, <=5 us warm)")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

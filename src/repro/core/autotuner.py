@@ -25,6 +25,7 @@ the 5th sorted trial; we use the median of ``repeats`` wall-clock runs
 from __future__ import annotations
 
 import dataclasses
+import logging
 import math
 import time
 from typing import Any, Callable, Dict, List, Optional, Sequence, Tuple
@@ -43,6 +44,8 @@ __all__ = [
     "KernelStaticInfo", "TunableKernel", "TuningReport",
     "KernelTuner", "GraphTuner", "make_intensity_rule",
 ]
+
+_log = logging.getLogger(__name__)
 
 
 @dataclasses.dataclass
@@ -69,7 +72,16 @@ class KernelStaticInfo:
 
 @dataclasses.dataclass
 class TunableKernel:
-    """A kernel + its tuning space (what an Orio annotation declares)."""
+    """A kernel + its tuning space (what an Orio annotation declares).
+
+    ``static_info_batch``, when provided, is the struct-of-arrays
+    analyzer: it takes a dict of (N,) value columns (one per space
+    axis; see `SearchSpace.enumerate_lattice`) and returns a
+    `repro.kernels.common.BatchStaticInfo` whose rows match
+    ``static_info`` exactly.  The tuner ranks through it when present;
+    the scalar builder remains the parity fallback and the per-point
+    probe.
+    """
 
     name: str
     space: SearchSpace
@@ -77,6 +89,7 @@ class TunableKernel:
     static_info: Callable[[Params], KernelStaticInfo]
     make_inputs: Callable[[], tuple]
     reference: Optional[Callable[..., Any]] = None
+    static_info_batch: Optional[Callable[[Dict[str, np.ndarray]], Any]] = None
 
 
 @dataclasses.dataclass
@@ -191,7 +204,21 @@ class KernelTuner:
         return self._info(p).static_time(self.model)
 
     def static_cost_batch(self, pts: Sequence[Params]) -> np.ndarray:
-        """Score a candidate set in one vectorized model pass."""
+        """Score a candidate set in one vectorized model pass.
+
+        When the kernel registers a struct-of-arrays builder the whole
+        pass is array math: the candidate dicts are transposed into
+        value columns, analyzed in one `static_info_batch` call, and
+        scored directly from the feature matrix — no KernelStaticInfo
+        objects at all.  Kernels without a batch builder fall back to
+        the scalar analyzer per point.
+        """
+        if self.kernel.static_info_batch is not None:
+            cols = {k: np.asarray([p[k] for p in pts])
+                    for k in self.kernel.space.names}
+            b = self.kernel.static_info_batch(cols)
+            return static_times_batch(None, self.model, F=b.F, pipe=b.pipe,
+                                      feasible=b.feasible)
         return static_times_batch([self._info(p) for p in pts], self.model)
 
     def _mid_params(self) -> Params:
@@ -447,7 +474,16 @@ class GraphTuner:
         for p in self.space.enumerate():
             try:
                 t, terms = self.score(p)
-            except Exception as e:  # infeasible sharding etc.
+            except (ValueError, TypeError, LookupError, RuntimeError,
+                    ArithmeticError, AssertionError) as e:
+                # Infeasible candidate (unshardable layout, compile
+                # rejection — XlaRuntimeError subclasses RuntimeError;
+                # LookupError covers candidate-indexed tables in user
+                # lower_fns).  Scored +inf, never wins; params logged so
+                # a sharding that silently loses every time is
+                # diagnosable.
+                _log.debug("GraphTuner: candidate %s infeasible: %s",
+                           p, e, exc_info=True)
                 hist.append((p, math.inf))
                 continue
             hist.append((p, t))

@@ -30,6 +30,7 @@ from repro.core.mix import InstructionMix
 __all__ = [
     "CudaOccupancy", "cuda_occupancy", "suggest_cuda_params",
     "TpuOccupancy", "tpu_occupancy", "suggest_block_shapes",
+    "TpuOccupancyBatch", "tpu_occupancy_batch",
 ]
 
 
@@ -233,6 +234,123 @@ def tpu_occupancy(block_in_bytes: Sequence[int],
                         limiter=lim, grid_steps=int(grid_steps),
                         mxu_alignment=align,
                         predicted_step_time=step)
+
+
+# ---------------------------------------------------------------------------
+# Batched TPU occupancy (struct-of-arrays over a whole config lattice)
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class TpuOccupancyBatch:
+    """`TpuOccupancy` over N configurations, one array per field.
+
+    Produced by :func:`tpu_occupancy_batch`; every field is an (N,)
+    array whose element ``i`` equals the corresponding scalar
+    :func:`tpu_occupancy` field for configuration ``i`` exactly (bitwise
+    — the parity tests compare with ``==``, not a tolerance).
+    """
+
+    fits_vmem: np.ndarray           # (N,) bool
+    vmem_bytes: np.ndarray          # (N,) int64
+    vmem_ratio: np.ndarray          # (N,) float64
+    t_compute: np.ndarray           # (N,) float64
+    t_dma: np.ndarray               # (N,) float64
+    occupancy: np.ndarray           # (N,) float64
+    limiter: np.ndarray             # (N,) str ('vmem'|'dma'|'compute')
+    grid_steps: np.ndarray          # (N,) int64
+    mxu_alignment: np.ndarray       # (N,) float64
+    predicted_step_time: np.ndarray  # (N,) float64
+
+    def __len__(self) -> int:
+        return int(self.predicted_step_time.shape[0])
+
+    def at(self, i: int) -> TpuOccupancy:
+        """Scalar view of configuration ``i`` (debugging / parity)."""
+        return TpuOccupancy(
+            fits_vmem=bool(self.fits_vmem[i]),
+            vmem_bytes=int(self.vmem_bytes[i]),
+            vmem_ratio=float(self.vmem_ratio[i]),
+            t_compute=float(self.t_compute[i]),
+            t_dma=float(self.t_dma[i]),
+            occupancy=float(self.occupancy[i]),
+            limiter=str(self.limiter[i]),
+            grid_steps=int(self.grid_steps[i]),
+            mxu_alignment=float(self.mxu_alignment[i]),
+            predicted_step_time=float(self.predicted_step_time[i]))
+
+
+def _align_frac_batch(shape: Sequence, spec: TpuSpec) -> np.ndarray:
+    """Vectorized `_align_frac`: dims may be ints or (N,) arrays."""
+    if not len(shape):
+        return np.asarray(1.0)
+    last = np.asarray(shape[-1], dtype=np.float64)
+    second = np.asarray(shape[-2] if len(shape) >= 2 else 1,
+                        dtype=np.float64)
+    pad_last = np.ceil(last / spec.lane) * spec.lane
+    pad_second = np.ceil(second / spec.sublane) * spec.sublane
+    real = last * second
+    padded = pad_last * pad_second
+    return np.where(padded > 0, real / np.where(padded > 0, padded, 1.0), 1.0)
+
+
+def tpu_occupancy_batch(block_in_bytes: Sequence,
+                        block_out_bytes: Sequence,
+                        flops_per_step,
+                        *,
+                        grid_steps=1,
+                        scratch_bytes=0,
+                        buffering: int = 2,
+                        block_shapes: Optional[Sequence[Sequence]] = None,
+                        compute_unit: str = "mxu",
+                        spec: TpuSpec = TPU_V5E) -> TpuOccupancyBatch:
+    """Vectorized :func:`tpu_occupancy` over a whole config lattice.
+
+    Same contract, array-valued: each entry of ``block_in_bytes`` /
+    ``block_out_bytes`` is the per-step byte count of one operand as a
+    scalar or (N,) array; ``flops_per_step`` / ``grid_steps`` /
+    ``scratch_bytes`` broadcast likewise; each shape in ``block_shapes``
+    may mix int dims with (N,) array dims.  One NumPy pass computes the
+    step time, grid steps, and VMEM feasibility of all N configurations.
+    """
+    moved = np.asarray(sum(np.asarray(b, dtype=np.float64)
+                           for b in list(block_in_bytes)
+                           + list(block_out_bytes)), dtype=np.float64)
+    vmem_f = moved * buffering + scratch_bytes
+    budget = spec.vmem_bytes
+    fits = vmem_f <= budget
+    peak = spec.peak_flops_bf16 if compute_unit == "mxu" else spec.vpu_flops
+    if block_shapes:
+        fr = [_align_frac_batch(s, spec) for s in block_shapes if len(s)]
+        align = np.mean(np.stack(np.broadcast_arrays(*fr)), axis=0) \
+            if fr else np.asarray(1.0)
+    else:
+        align = np.asarray(1.0)
+    eff_peak = peak * np.maximum(align, 1e-6)
+    flops = np.asarray(flops_per_step, dtype=np.float64)
+    t_c = np.where(flops != 0.0, flops / eff_peak, 0.0)
+    t_d = moved / spec.hbm_bw
+    dma_occ = np.where(t_d > 0, t_c / np.where(t_d > 0, t_d, 1.0), 0.0)
+    occ = np.where(~fits, 0.0, np.where(t_d > t_c, dma_occ, 1.0))
+    limiter = np.where(~fits, "vmem", np.where(t_d > t_c, "dma", "compute"))
+    step = np.maximum(t_c, t_d) + spec.ctrl_overhead_s
+    shape = np.broadcast_shapes(np.shape(step), np.shape(align),
+                                np.shape(np.asarray(grid_steps)),
+                                np.shape(np.asarray(scratch_bytes)))
+    n = shape[0] if shape else 1
+    full = lambda a, dt: np.ascontiguousarray(
+        np.broadcast_to(np.asarray(a, dtype=dt), (n,)))
+    return TpuOccupancyBatch(
+        fits_vmem=full(fits, bool),
+        vmem_bytes=full(vmem_f, np.int64),
+        vmem_ratio=full(vmem_f.astype(np.int64) / budget, np.float64),
+        t_compute=full(t_c, np.float64),
+        t_dma=full(t_d, np.float64),
+        occupancy=full(occ, np.float64),
+        limiter=np.broadcast_to(limiter, (n,)).copy(),
+        grid_steps=full(grid_steps, np.int64),
+        mxu_alignment=full(align, np.float64),
+        predicted_step_time=full(step, np.float64))
 
 
 def suggest_block_shapes(m: int, n: int, k: int,

@@ -216,16 +216,35 @@ def rank_candidates(mixes: Sequence[InstructionMix],
     return t, np.argsort(t, kind="stable")
 
 
-def static_times_batch(infos: Sequence[object],
-                       model: CostModel) -> np.ndarray:
+def static_times_batch(infos: Optional[Sequence[object]],
+                       model: CostModel,
+                       *,
+                       F: Optional[np.ndarray] = None,
+                       pipe: Optional[np.ndarray] = None,
+                       feasible: Optional[np.ndarray] = None) -> np.ndarray:
     """Vectorized `KernelStaticInfo.static_time` over a candidate set.
 
-    ``infos`` are KernelStaticInfo-like: ``.mix``, ``.feasible()`` and
-    optionally ``.occupancy`` with ``predicted_step_time``/``grid_steps``.
-    Model scoring is a single batched pass; the per-config pipeline
-    floor (occupancy step time x grid steps) and the +inf infeasibility
-    penalty are folded in with NumPy element-wise ops.
+    Two input forms:
+
+    * struct-of-arrays (the hot path): pass ``F`` — an (N, 7) feature
+      matrix in `features_matrix` column order — plus optional ``pipe``
+      (per-config pipeline floor, occupancy step time x grid steps) and
+      ``feasible`` (bool mask) arrays, e.g. straight from
+      `repro.kernels.common.block_info_batch`.  No Python loop at all.
+    * object sequence (compat): ``infos`` are KernelStaticInfo-like,
+      with ``.mix``, ``.feasible()`` and optionally ``.occupancy``; the
+      arrays above are gathered from them per config.
+
+    Model scoring is a single batched pass either way; the pipeline
+    floor and the +inf infeasibility penalty fold in element-wise.
     """
+    if F is not None:
+        t = np.asarray(model.time_batch(F=F), dtype=np.float64)
+        if pipe is not None:
+            t = np.maximum(t, np.asarray(pipe, dtype=np.float64))
+        if feasible is not None:
+            t = np.where(np.asarray(feasible, dtype=bool), t, np.inf)
+        return t
     n = len(infos)
     if n == 0:
         return np.empty(0, dtype=np.float64)

@@ -24,13 +24,39 @@ from typing import Callable, Dict, List, Optional, Sequence, Tuple
 import numpy as np
 
 __all__ = [
-    "SearchSpace", "SearchResult",
+    "SearchSpace", "ConfigLattice", "SearchResult",
     "ExhaustiveSearch", "RandomSearch", "SimulatedAnnealing",
     "GeneticSearch", "NelderMeadSearch", "StaticPrunedSearch",
 ]
 
 Params = Dict[str, object]
 Objective = Callable[[Params], float]
+
+
+@dataclasses.dataclass(frozen=True)
+class ConfigLattice:
+    """Struct-of-arrays view of a `SearchSpace` enumeration.
+
+    ``columns[name]`` is the (N,) array of that axis's value for every
+    configuration; ``indices`` is the (ndim, N) axis-index lattice.  Row
+    ``i`` corresponds exactly to ``space.enumerate()[i]`` (same C order,
+    last axis fastest), so an argmin over batch-scored times identifies
+    the same configuration the scalar path would pick — including ties.
+    """
+
+    space: "SearchSpace"
+    indices: np.ndarray                  # (ndim, N) int
+    columns: Dict[str, np.ndarray]       # name -> (N,) axis values
+
+    @property
+    def size(self) -> int:
+        return int(self.indices.shape[1]) if self.indices.ndim == 2 else 0
+
+    def params_at(self, i: int) -> Params:
+        """Config ``i`` as a plain params dict (original axis objects,
+        not numpy scalars — these get JSON-serialized downstream)."""
+        return {k: self.space.axes[k][int(row[i])]
+                for k, row in zip(self.space.names, self.indices)}
 
 
 @dataclasses.dataclass(frozen=True)
@@ -58,6 +84,21 @@ class SearchSpace:
         keys = self.names
         return [dict(zip(keys, combo))
                 for combo in itertools.product(*self.axes.values())]
+
+    def enumerate_lattice(self) -> ConfigLattice:
+        """The whole space as index/value arrays — no per-config dicts.
+
+        This is the batched-analysis entry point: one (ndim, N) index
+        lattice plus one value column per axis, in `enumerate()` order.
+        """
+        sizes = [len(self.axes[k]) for k in self.names]
+        if not sizes:
+            return ConfigLattice(space=self, indices=np.zeros((0, 1), int),
+                                 columns={})
+        idx = np.indices(sizes).reshape(len(sizes), -1)
+        cols = {k: np.asarray(self.axes[k])[row]
+                for k, row in zip(self.names, idx)}
+        return ConfigLattice(space=self, indices=idx, columns=cols)
 
     def sample(self, rng: random.Random) -> Params:
         return {k: rng.choice(v) for k, v in self.axes.items()}

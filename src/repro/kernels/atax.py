@@ -15,17 +15,20 @@ from typing import Dict
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
 from repro import tuning_cache
 from repro.core.autotuner import KernelStaticInfo, TunableKernel
 from repro.core.search import SearchSpace
-from repro.kernels.common import (block_info, cdiv, default_interpret,
+from repro.kernels.common import (BatchStaticInfo, block_info,
+                                  block_info_batch, cdiv, default_interpret,
                                   pick_divisor_candidates,
                                   tpu_compiler_params)
 
-__all__ = ["atax_pallas", "atax_static_info", "make_tunable_atax"]
+__all__ = ["atax_pallas", "atax_static_info", "atax_static_info_batch",
+           "make_tunable_atax"]
 
 
 def _atax_kernel_rowsweep(a_ref, x_ref, y_ref, acc_ref):
@@ -90,6 +93,22 @@ def atax_static_info(m: int, n: int, dtype, params: Dict
     )
 
 
+def atax_static_info_batch(m: int, n: int, dtype,
+                           cols) -> BatchStaticInfo:
+    """`atax_static_info` over a whole config lattice in one pass."""
+    bm = np.minimum(np.asarray(cols["bm"], dtype=np.int64), m)
+    steps = cdiv(m, bm)
+    return block_info_batch(
+        in_blocks=[(bm, n), (n, 1)],
+        out_blocks=[(n, 1)],
+        in_dtypes=[dtype, dtype],
+        out_dtypes=[dtype],
+        flops_per_step=2.0 * bm * n + 2.0 * n * bm,   # A@x then Aᵀ@t
+        grid_steps=steps,
+        scratch_bytes=n * 4,
+    )
+
+
 def make_tunable_atax(m: int = 2048, n: int = 2048,
                       dtype=jnp.float32, seed: int = 0) -> TunableKernel:
     space = SearchSpace({
@@ -102,6 +121,9 @@ def make_tunable_atax(m: int = 2048, n: int = 2048,
     def static_info(p):
         return atax_static_info(m, n, dtype, p)
 
+    def static_info_batch(cols):
+        return atax_static_info_batch(m, n, dtype, cols)
+
     def make_inputs():
         kk = jax.random.PRNGKey(seed)
         ka, kx = jax.random.split(kk)
@@ -111,7 +133,8 @@ def make_tunable_atax(m: int = 2048, n: int = 2048,
     from repro.kernels.ref import atax_ref
     return TunableKernel(name=f"atax_{m}x{n}", space=space, build=build,
                          static_info=static_info, make_inputs=make_inputs,
-                         reference=atax_ref)
+                         reference=atax_ref,
+                         static_info_batch=static_info_batch)
 
 
 @tuning_cache.register("atax")
@@ -122,4 +145,5 @@ def _dispatch_atax(*, m: int, n: int,
     })
     return tuning_cache.TuningProblem(
         space=space,
-        static_info=lambda p: atax_static_info(m, n, dtype, p))
+        static_info=lambda p: atax_static_info(m, n, dtype, p),
+        static_info_batch=lambda c: atax_static_info_batch(m, n, dtype, c))

@@ -11,17 +11,20 @@ from typing import Dict
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
 from repro import tuning_cache
 from repro.core.autotuner import KernelStaticInfo, TunableKernel
 from repro.core.search import SearchSpace
-from repro.kernels.common import (block_info, cdiv, default_interpret,
+from repro.kernels.common import (BatchStaticInfo, block_info,
+                                  block_info_batch, cdiv, default_interpret,
                                   pick_divisor_candidates,
                                   tpu_compiler_params)
 
-__all__ = ["bicg_pallas", "bicg_static_info", "make_tunable_bicg"]
+__all__ = ["bicg_pallas", "bicg_static_info", "bicg_static_info_batch",
+           "make_tunable_bicg"]
 
 
 def _bicg_kernel(a_ref, p_ref, r_ref, q_ref, s_ref, acc_ref):
@@ -85,6 +88,22 @@ def bicg_static_info(m: int, n: int, dtype, params: Dict
     )
 
 
+def bicg_static_info_batch(m: int, n: int, dtype,
+                           cols) -> BatchStaticInfo:
+    """`bicg_static_info` over a whole config lattice in one pass."""
+    bm = np.minimum(np.asarray(cols["bm"], dtype=np.int64), m)
+    steps = cdiv(m, bm)
+    return block_info_batch(
+        in_blocks=[(bm, n), (n, 1), (bm, 1)],
+        out_blocks=[(bm, 1), (n, 1)],
+        in_dtypes=[dtype] * 3,
+        out_dtypes=[dtype] * 2,
+        flops_per_step=4.0 * bm * n,     # two mat-vec MACs over the block
+        grid_steps=steps,
+        scratch_bytes=n * 4,
+    )
+
+
 def make_tunable_bicg(m: int = 2048, n: int = 2048,
                       dtype=jnp.float32, seed: int = 0) -> TunableKernel:
     space = SearchSpace({
@@ -97,6 +116,9 @@ def make_tunable_bicg(m: int = 2048, n: int = 2048,
     def static_info(p):
         return bicg_static_info(m, n, dtype, p)
 
+    def static_info_batch(cols):
+        return bicg_static_info_batch(m, n, dtype, cols)
+
     def make_inputs():
         kk = jax.random.PRNGKey(seed)
         ka, kp, kr = jax.random.split(kk, 3)
@@ -107,7 +129,8 @@ def make_tunable_bicg(m: int = 2048, n: int = 2048,
     from repro.kernels.ref import bicg_ref
     return TunableKernel(name=f"bicg_{m}x{n}", space=space, build=build,
                          static_info=static_info, make_inputs=make_inputs,
-                         reference=bicg_ref)
+                         reference=bicg_ref,
+                         static_info_batch=static_info_batch)
 
 
 @tuning_cache.register("bicg")
@@ -118,4 +141,5 @@ def _dispatch_bicg(*, m: int, n: int,
     })
     return tuning_cache.TuningProblem(
         space=space,
-        static_info=lambda p: bicg_static_info(m, n, dtype, p))
+        static_info=lambda p: bicg_static_info(m, n, dtype, p),
+        static_info_batch=lambda c: bicg_static_info_batch(m, n, dtype, c))

@@ -14,6 +14,7 @@ Every kernel in this package follows the same contract:
 """
 from __future__ import annotations
 
+import dataclasses
 import functools
 from typing import Sequence
 
@@ -24,10 +25,12 @@ from jax.experimental.pallas import tpu as pltpu
 
 from repro.core.hw import TPU_V5E, TpuSpec, dtype_bytes
 from repro.core.mix import InstructionMix
-from repro.core.occupancy import tpu_occupancy
+from repro.core.occupancy import (TpuOccupancyBatch, tpu_occupancy,
+                                  tpu_occupancy_batch)
 from repro.core.autotuner import KernelStaticInfo
 
 __all__ = ["cdiv", "default_interpret", "round_up", "block_info",
+           "BatchStaticInfo", "block_info_batch",
            "pick_divisor_candidates", "CompilerParams",
            "tpu_compiler_params"]
 
@@ -100,3 +103,86 @@ def block_info(*,
         reg_ops=0.0,
     )
     return KernelStaticInfo(mix=mix, occupancy=occ)
+
+
+@dataclasses.dataclass(frozen=True)
+class BatchStaticInfo:
+    """Struct-of-arrays `KernelStaticInfo` over N configurations.
+
+    ``F`` is the (N, 7) feature matrix in `repro.core.predict`
+    `features_matrix` column order (mxu, vpu, trans, hbm, vmem, ctrl,
+    reg); ``occupancy`` carries the vectorized pipeline model.  Row
+    ``i`` matches the scalar `block_info` for configuration ``i``
+    exactly.  Feed ``F``/``pipe``/``feasible`` straight into
+    `repro.core.predict.static_times_batch`.
+    """
+
+    F: np.ndarray                   # (N, 7) float64
+    occupancy: TpuOccupancyBatch
+
+    def __len__(self) -> int:
+        return int(self.F.shape[0])
+
+    @property
+    def feasible(self) -> np.ndarray:
+        return self.occupancy.fits_vmem
+
+    @property
+    def pipe(self) -> np.ndarray:
+        """Per-config pipeline floor: step time x grid steps."""
+        return (self.occupancy.predicted_step_time
+                * np.maximum(self.occupancy.grid_steps, 1))
+
+
+def block_info_batch(*,
+                     in_blocks: Sequence[tuple],
+                     out_blocks: Sequence[tuple],
+                     in_dtypes: Sequence,
+                     out_dtypes: Sequence,
+                     flops_per_step,
+                     vpu_per_step=0.0,
+                     trans_per_step=0.0,
+                     grid_steps=1,
+                     scratch_bytes=0,
+                     mix_scale=None,
+                     spec: TpuSpec = TPU_V5E) -> BatchStaticInfo:
+    """Vectorized `block_info`: one (N, 7) feature matrix + occupancy
+    arrays for a whole config lattice in a single NumPy pass.
+
+    Same contract as `block_info`, but block dims and per-step op
+    counts may be (N,) arrays (typically `SearchSpace.enumerate_lattice`
+    columns) broadcast against scalars.  No per-config Python objects
+    are built — this is what makes cold full-space ranking array math
+    instead of object churn.
+    """
+    def _elems(b):
+        out = np.asarray(1, dtype=np.int64)
+        for d in b:
+            out = out * np.asarray(d, dtype=np.int64)
+        return out
+
+    in_bytes = [_elems(b) * dtype_bytes(d)
+                for b, d in zip(in_blocks, in_dtypes)]
+    out_bytes = [_elems(b) * dtype_bytes(d)
+                 for b, d in zip(out_blocks, out_dtypes)]
+    occ = tpu_occupancy_batch(in_bytes, out_bytes, flops_per_step,
+                              grid_steps=grid_steps,
+                              scratch_bytes=scratch_bytes,
+                              block_shapes=list(in_blocks) + list(out_blocks),
+                              spec=spec)
+    n = len(occ)
+    scale = grid_steps if mix_scale is None else mix_scale
+    scale = np.asarray(scale, dtype=np.float64)
+    per_step_bytes = np.asarray(sum(in_bytes) + sum(out_bytes),
+                                dtype=np.float64)
+    col = lambda a: np.broadcast_to(np.asarray(a, dtype=np.float64), (n,))
+    F = np.column_stack([
+        col(np.asarray(flops_per_step, dtype=np.float64) * scale),
+        col(np.asarray(vpu_per_step, dtype=np.float64) * scale),
+        col(np.asarray(trans_per_step, dtype=np.float64) * scale),
+        col(per_step_bytes * scale),
+        col(per_step_bytes * scale),
+        col(np.asarray(grid_steps, dtype=np.float64)),
+        col(0.0),
+    ])
+    return BatchStaticInfo(F=F, occupancy=occ)

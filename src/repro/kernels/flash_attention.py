@@ -15,18 +15,20 @@ from typing import Dict
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
 from repro import tuning_cache
 from repro.core.autotuner import KernelStaticInfo, TunableKernel
 from repro.core.search import SearchSpace
-from repro.kernels.common import (block_info, cdiv, default_interpret,
+from repro.kernels.common import (BatchStaticInfo, block_info,
+                                  block_info_batch, cdiv, default_interpret,
                                   pick_divisor_candidates,
                                   tpu_compiler_params)
 
 __all__ = ["flash_attention_pallas", "flash_static_info",
-           "make_tunable_flash"]
+           "flash_static_info_batch", "make_tunable_flash"]
 
 _NEG_INF = -1e30
 
@@ -130,6 +132,27 @@ def flash_static_info(b: int, h: int, sq: int, skv: int, d: int, dtype,
     )
 
 
+def flash_static_info_batch(b: int, h: int, sq: int, skv: int, d: int,
+                            dtype, cols,
+                            causal: bool = True) -> BatchStaticInfo:
+    """`flash_static_info` over a whole config lattice in one pass."""
+    bq = np.minimum(np.asarray(cols["bq"], dtype=np.int64), sq)
+    bkv = np.minimum(np.asarray(cols["bkv"], dtype=np.int64), skv)
+    steps = (b * h) * cdiv(sq, bq) * cdiv(skv, bkv)
+    eff = 0.5 if causal and sq == skv else 1.0
+    return block_info_batch(
+        in_blocks=[(bq, d), (bkv, d), (bkv, d)],
+        out_blocks=[(bq, d)],
+        in_dtypes=[dtype] * 3,
+        out_dtypes=[dtype],
+        flops_per_step=4.0 * bq * bkv * d * eff,   # QK^T + PV
+        vpu_per_step=6.0 * bq * bkv * eff,         # mask/max/sum/scale
+        trans_per_step=(bq * bkv + bq) * eff,      # exp
+        grid_steps=steps,
+        scratch_bytes=(bq * 2 + bq * d) * 4,
+    )
+
+
 def make_tunable_flash(b: int = 2, h: int = 4, s: int = 1024, d: int = 128,
                        causal: bool = True, dtype=jnp.float32,
                        seed: int = 0) -> TunableKernel:
@@ -145,6 +168,10 @@ def make_tunable_flash(b: int = 2, h: int = 4, s: int = 1024, d: int = 128,
     def static_info(p):
         return flash_static_info(b, h, s, s, d, dtype, p, causal=causal)
 
+    def static_info_batch(cols):
+        return flash_static_info_batch(b, h, s, s, d, dtype, cols,
+                                       causal=causal)
+
     def make_inputs():
         kk = jax.random.PRNGKey(seed)
         kq, kkey, kv = jax.random.split(kk, 3)
@@ -156,7 +183,8 @@ def make_tunable_flash(b: int = 2, h: int = 4, s: int = 1024, d: int = 128,
     from repro.kernels.ref import attention_ref
     return TunableKernel(name=f"flash_{b}x{h}x{s}x{d}", space=space,
                          build=build, static_info=static_info,
-                         make_inputs=make_inputs, reference=attention_ref)
+                         make_inputs=make_inputs, reference=attention_ref,
+                         static_info_batch=static_info_batch)
 
 
 @tuning_cache.register("flash_attention")
@@ -170,4 +198,6 @@ def _dispatch_flash(*, b: int, h: int, sq: int, skv: int, d: int,
     return tuning_cache.TuningProblem(
         space=space,
         static_info=lambda p: flash_static_info(b, h, sq, skv, d, dtype, p,
-                                                causal=causal))
+                                                causal=causal),
+        static_info_batch=lambda c: flash_static_info_batch(
+            b, h, sq, skv, d, dtype, c, causal=causal))

@@ -16,16 +16,19 @@ from typing import Dict
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 from jax.experimental import pallas as pl
 
 from repro import tuning_cache
 from repro.core.autotuner import KernelStaticInfo, TunableKernel
 from repro.core.search import SearchSpace
-from repro.kernels.common import (block_info, cdiv, default_interpret,
+from repro.kernels.common import (BatchStaticInfo, block_info,
+                                  block_info_batch, cdiv, default_interpret,
                                   pick_divisor_candidates,
                                   tpu_compiler_params)
 
-__all__ = ["jacobi3d_pallas", "jacobi3d_static_info", "make_tunable_jacobi3d"]
+__all__ = ["jacobi3d_pallas", "jacobi3d_static_info",
+           "jacobi3d_static_info_batch", "make_tunable_jacobi3d"]
 
 C0_DEFAULT = 0.5
 C1_DEFAULT = 1.0 / 12.0
@@ -103,6 +106,23 @@ def jacobi3d_static_info(z: int, y: int, x: int, dtype,
     )
 
 
+def jacobi3d_static_info_batch(z: int, y: int, x: int, dtype,
+                               cols) -> BatchStaticInfo:
+    """`jacobi3d_static_info` over a whole config lattice in one pass."""
+    bz = np.minimum(np.asarray(cols["bz"], dtype=np.int64), z)
+    steps = cdiv(z, bz)
+    plane = y * x
+    return block_info_batch(
+        in_blocks=[(bz, y, x)] * 3,
+        out_blocks=[(bz, y, x)],
+        in_dtypes=[dtype] * 3,
+        out_dtypes=[dtype],
+        flops_per_step=0.0,
+        vpu_per_step=8.0 * bz * plane,
+        grid_steps=steps,
+    )
+
+
 def make_tunable_jacobi3d(z: int = 128, y: int = 128, x: int = 128,
                           dtype=jnp.float32, seed: int = 0) -> TunableKernel:
     space = SearchSpace({
@@ -115,6 +135,9 @@ def make_tunable_jacobi3d(z: int = 128, y: int = 128, x: int = 128,
     def static_info(p):
         return jacobi3d_static_info(z, y, x, dtype, p)
 
+    def static_info_batch(cols):
+        return jacobi3d_static_info_batch(z, y, x, dtype, cols)
+
     def make_inputs():
         kk = jax.random.PRNGKey(seed)
         return (jax.random.normal(kk, (z, y, x), dtype),)
@@ -122,7 +145,8 @@ def make_tunable_jacobi3d(z: int = 128, y: int = 128, x: int = 128,
     from repro.kernels.ref import jacobi3d_ref
     return TunableKernel(name=f"jacobi3d_{z}x{y}x{x}", space=space,
                          build=build, static_info=static_info,
-                         make_inputs=make_inputs, reference=jacobi3d_ref)
+                         make_inputs=make_inputs, reference=jacobi3d_ref,
+                         static_info_batch=static_info_batch)
 
 
 @tuning_cache.register("jacobi3d")
@@ -133,4 +157,6 @@ def _dispatch_jacobi3d(*, z: int, y: int, x: int,
     })
     return tuning_cache.TuningProblem(
         space=space,
-        static_info=lambda p: jacobi3d_static_info(z, y, x, dtype, p))
+        static_info=lambda p: jacobi3d_static_info(z, y, x, dtype, p),
+        static_info_batch=lambda c: jacobi3d_static_info_batch(z, y, x,
+                                                               dtype, c))

@@ -13,17 +13,20 @@ from typing import Dict
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
 from repro import tuning_cache
 from repro.core.autotuner import KernelStaticInfo, TunableKernel
 from repro.core.search import SearchSpace
-from repro.kernels.common import (block_info, cdiv, default_interpret,
+from repro.kernels.common import (BatchStaticInfo, block_info,
+                                  block_info_batch, cdiv, default_interpret,
                                   pick_divisor_candidates,
                                   tpu_compiler_params)
 
-__all__ = ["matmul_pallas", "matmul_static_info", "make_tunable_matmul"]
+__all__ = ["matmul_pallas", "matmul_static_info",
+           "matmul_static_info_batch", "make_tunable_matmul"]
 
 
 def _mm_kernel(a_ref, b_ref, o_ref, acc_ref):
@@ -84,6 +87,24 @@ def matmul_static_info(m: int, n: int, k: int, dtype,
     )
 
 
+def matmul_static_info_batch(m: int, n: int, k: int, dtype,
+                             cols) -> BatchStaticInfo:
+    """`matmul_static_info` over a whole config lattice in one pass."""
+    bm = np.minimum(np.asarray(cols["bm"], dtype=np.int64), m)
+    bn = np.minimum(np.asarray(cols["bn"], dtype=np.int64), n)
+    bk = np.minimum(np.asarray(cols["bk"], dtype=np.int64), k)
+    steps = cdiv(m, bm) * cdiv(n, bn) * cdiv(k, bk)
+    return block_info_batch(
+        in_blocks=[(bm, bk), (bk, bn)],
+        out_blocks=[(bm, bn)],
+        in_dtypes=[dtype, dtype],
+        out_dtypes=[dtype],
+        flops_per_step=2.0 * bm * bn * bk,
+        grid_steps=steps,
+        scratch_bytes=bm * bn * 4,
+    )
+
+
 def make_tunable_matmul(m: int = 1024, n: int = 1024, k: int = 1024,
                         dtype=jnp.float32, seed: int = 0) -> TunableKernel:
     sizes = (128, 256, 512)
@@ -100,6 +121,9 @@ def make_tunable_matmul(m: int = 1024, n: int = 1024, k: int = 1024,
     def static_info(p):
         return matmul_static_info(m, n, k, dtype, p)
 
+    def static_info_batch(cols):
+        return matmul_static_info_batch(m, n, k, dtype, cols)
+
     def make_inputs():
         kk = jax.random.PRNGKey(seed)
         ka, kb = jax.random.split(kk)
@@ -109,7 +133,8 @@ def make_tunable_matmul(m: int = 1024, n: int = 1024, k: int = 1024,
     from repro.kernels.ref import matmul_ref
     return TunableKernel(name=f"matmul_{m}x{n}x{k}", space=space,
                          build=build, static_info=static_info,
-                         make_inputs=make_inputs, reference=matmul_ref)
+                         make_inputs=make_inputs, reference=matmul_ref,
+                         static_info_batch=static_info_batch)
 
 
 @tuning_cache.register("matmul")
@@ -122,4 +147,6 @@ def _dispatch_matmul(*, m: int, n: int, k: int,
     })
     return tuning_cache.TuningProblem(
         space=space,
-        static_info=lambda p: matmul_static_info(m, n, k, dtype, p))
+        static_info=lambda p: matmul_static_info(m, n, k, dtype, p),
+        static_info_batch=lambda c: matmul_static_info_batch(m, n, k,
+                                                             dtype, c))

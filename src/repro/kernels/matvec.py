@@ -13,17 +13,20 @@ from typing import Dict
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
 from repro import tuning_cache
 from repro.core.autotuner import KernelStaticInfo, TunableKernel
 from repro.core.search import SearchSpace
-from repro.kernels.common import (block_info, cdiv, default_interpret,
+from repro.kernels.common import (BatchStaticInfo, block_info,
+                                  block_info_batch, cdiv, default_interpret,
                                   pick_divisor_candidates,
                                   tpu_compiler_params)
 
-__all__ = ["matvec_pallas", "matvec_static_info", "make_tunable_matvec"]
+__all__ = ["matvec_pallas", "matvec_static_info",
+           "matvec_static_info_batch", "make_tunable_matvec"]
 
 
 def _mv_kernel(a_ref, x_ref, y_ref, acc_ref):
@@ -80,6 +83,23 @@ def matvec_static_info(m: int, n: int, dtype, params: Dict
     )
 
 
+def matvec_static_info_batch(m: int, n: int, dtype,
+                             cols) -> BatchStaticInfo:
+    """`matvec_static_info` over a whole config lattice in one pass."""
+    bm = np.minimum(np.asarray(cols["bm"], dtype=np.int64), m)
+    bk = np.minimum(np.asarray(cols["bk"], dtype=np.int64), n)
+    steps = cdiv(m, bm) * cdiv(n, bk)
+    return block_info_batch(
+        in_blocks=[(bm, bk), (bk, 1)],
+        out_blocks=[(bm, 1)],
+        in_dtypes=[dtype, dtype],
+        out_dtypes=[dtype],
+        flops_per_step=2.0 * bm * bk,
+        grid_steps=steps,
+        scratch_bytes=bm * 4,
+    )
+
+
 def make_tunable_matvec(m: int = 2048, n: int = 2048,
                         dtype=jnp.float32, seed: int = 0) -> TunableKernel:
     space = SearchSpace({
@@ -93,6 +113,9 @@ def make_tunable_matvec(m: int = 2048, n: int = 2048,
     def static_info(p):
         return matvec_static_info(m, n, dtype, p)
 
+    def static_info_batch(cols):
+        return matvec_static_info_batch(m, n, dtype, cols)
+
     def make_inputs():
         kk = jax.random.PRNGKey(seed)
         ka, kx = jax.random.split(kk)
@@ -102,7 +125,8 @@ def make_tunable_matvec(m: int = 2048, n: int = 2048,
     from repro.kernels.ref import matvec_ref
     return TunableKernel(name=f"matvec_{m}x{n}", space=space, build=build,
                          static_info=static_info, make_inputs=make_inputs,
-                         reference=matvec_ref)
+                         reference=matvec_ref,
+                         static_info_batch=static_info_batch)
 
 
 @tuning_cache.register("matvec")
@@ -114,4 +138,5 @@ def _dispatch_matvec(*, m: int, n: int,
     })
     return tuning_cache.TuningProblem(
         space=space,
-        static_info=lambda p: matvec_static_info(m, n, dtype, p))
+        static_info=lambda p: matvec_static_info(m, n, dtype, p),
+        static_info_batch=lambda c: matvec_static_info_batch(m, n, dtype, c))

@@ -27,16 +27,17 @@ from repro.tuning_cache.keys import (CacheKey, MODEL_VERSION, canonical_json,
                                      fingerprint_spec, make_key)
 from repro.tuning_cache.store import (CacheStats, DiskStore, TuningDatabase,
                                       TuningRecord)
-from repro.tuning_cache.registry import (TuningProblem, get_problem,
-                                         lookup_or_tune, normalize_signature,
-                                         rank_space, register, registered)
+from repro.tuning_cache.registry import (TuningProblem, clear_dispatch_memo,
+                                         get_problem, lookup_or_tune,
+                                         normalize_signature, rank_space,
+                                         register, registered)
 
 __all__ = [
     "CacheKey", "MODEL_VERSION", "canonical_json", "fingerprint_spec",
     "make_key", "CacheStats", "DiskStore", "TuningDatabase", "TuningRecord",
-    "TuningProblem", "get_problem", "lookup_or_tune", "normalize_signature",
-    "rank_space", "register", "registered", "get_default_db",
-    "set_default_db", "reset_default_db", "pretuned_dir",
+    "TuningProblem", "clear_dispatch_memo", "get_problem", "lookup_or_tune",
+    "normalize_signature", "rank_space", "register", "registered",
+    "get_default_db", "set_default_db", "reset_default_db", "pretuned_dir",
 ]
 
 ENV_DB_DIR = "REPRO_TUNING_CACHE_DIR"
@@ -72,6 +73,9 @@ def get_default_db() -> TuningDatabase:
 def set_default_db(db: Optional[TuningDatabase]) -> None:
     global _default_db
     _default_db = db
+    # the dispatch memo shadows the default database; a new default
+    # must not serve another database's answers
+    clear_dispatch_memo()
 
 
 def reset_default_db() -> None:

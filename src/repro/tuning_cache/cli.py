@@ -13,21 +13,56 @@
     PYTHONPATH=src python -m repro.tuning_cache tune \
         --kernel matmul --sig m=1024 n=1024 k=1024 dtype=float32
 
-`tune` + `export` is how the in-repo pre-tuned databases under
-``src/repro/tuning_cache/pretuned/`` are produced; `import` (or
-`launch/serve.py --tuning-db`) is how they are consumed.
+    # sweep the default shape grid over every registered kernel and
+    # regenerate the shipped database in one command
+    PYTHONPATH=src python -m repro.tuning_cache pretune \
+        --out src/repro/tuning_cache/pretuned/tpu_v5e.jsonl
+
+`pretune` (or `tune` + `export` per instance) is how the in-repo
+pre-tuned databases under ``src/repro/tuning_cache/pretuned/`` are
+produced; `import` (or `launch/serve.py --tuning-db`) is how they are
+consumed.
 """
 from __future__ import annotations
 
 import argparse
 import os
 import sys
-from typing import Any, Dict, List, Optional
+import time
+from typing import Any, Dict, List, Optional, Tuple
 
 from repro.tuning_cache import (ENV_DB_DIR, TuningDatabase, get_problem,
                                 lookup_or_tune, registered)
 
 DEFAULT_DB_DIR = ".tuning_cache"
+
+# The production shape grid behind `pretune`: every signature the
+# shipped pretuned database covers.  Each instance is one vectorized
+# full-space rank (`rank_space` batch path), so regenerating the whole
+# grid is sub-second.
+_DTYPES = ("float32", "bfloat16")
+
+
+def default_pretune_cases() -> List[Tuple[str, Dict[str, Any]]]:
+    cases: List[Tuple[str, Dict[str, Any]]] = []
+    for (m, n, k) in [(256,) * 3, (512,) * 3, (1024,) * 3, (2048,) * 3,
+                      (1024, 1024, 4096), (4096, 1024, 1024)]:
+        for dt in _DTYPES:
+            cases.append(("matmul", dict(m=m, n=n, k=k, dtype=dt)))
+    for s in (512, 1024, 2048, 4096):
+        for dt in _DTYPES:
+            for kid in ("matvec", "atax", "bicg"):
+                cases.append((kid, dict(m=s, n=s, dtype=dt)))
+    cases.append(("atax", dict(m=1024, n=512, dtype="float32")))
+    for s in (64, 128, 256):
+        cases.append(("jacobi3d", dict(z=s, y=s, x=s, dtype="float32")))
+    for (b, h, s) in [(2, 4, 1024), (4, 8, 2048), (1, 8, 4096)]:
+        for causal in (True, False):
+            for dt in _DTYPES:
+                cases.append(("flash_attention",
+                              dict(b=b, h=h, sq=s, skv=s, d=128,
+                                   causal=causal, dtype=dt)))
+    return cases
 
 
 def _open_db(path: Optional[str]) -> TuningDatabase:
@@ -83,6 +118,17 @@ def main(argv: Optional[List[str]] = None) -> int:
                         metavar="KEY=VALUE",
                         help="shape/dtype signature, e.g. m=1024 dtype=float32")
 
+    p_pre = add_sub("pretune",
+                    help="sweep the default shape grid over every "
+                         "registered kernel (one vectorized rank per "
+                         "instance)")
+    p_pre.add_argument("--out", default=None,
+                       help="also export the database to this JSONL "
+                            "(e.g. the shipped pretuned db)")
+    p_pre.add_argument("--kernels", default=None,
+                       help="comma-separated kernel_id filter "
+                            "(default: all)")
+
     args = ap.parse_args(argv)
     db = _open_db(args.db)
 
@@ -113,6 +159,30 @@ def main(argv: Optional[List[str]] = None) -> int:
         params = lookup_or_tune(args.kernel, db=db, **sig)
         print(f"tuned {args.kernel} {sig} -> {params} "
               f"(registered kernels: {registered()})")
+    elif args.cmd == "pretune":
+        import repro.kernels  # noqa: F401  (registers dispatch problems)
+        keep = (set(args.kernels.split(",")) if args.kernels else None)
+        cases = [(k, s) for k, s in default_pretune_cases()
+                 if keep is None or k in keep]
+        if not cases:
+            raise SystemExit(f"no pretune cases match --kernels "
+                             f"{args.kernels!r}; registered: {registered()}")
+        # Sweep into a private in-memory database so --out contains
+        # exactly the swept grid — a pre-existing disk database (stale
+        # shapes, other specs) must never leak into a shipped JSONL.
+        mem = TuningDatabase()
+        t0 = time.perf_counter()
+        for kernel_id, sig in cases:
+            params = lookup_or_tune(kernel_id, db=mem, **sig)
+            print(f"{kernel_id:<16} {sig} -> {params}")
+        dt = time.perf_counter() - t0
+        for rec in mem.records():        # write-through to the target db
+            db.put(rec)
+        print(f"pretuned {len(cases)} instances in {dt*1e3:.0f} ms "
+              f"-> {len(mem)} records into {db.disk.root}")
+        if args.out:
+            n = mem.export_jsonl(args.out)
+            print(f"exported {n} records -> {args.out}")
     return 0
 
 

@@ -136,6 +136,11 @@ class TuningDatabase:
         self.disk = DiskStore(root) if root else None
         self.stats = CacheStats()
         self._disk_corrupt_synced = 0
+        # Bulk-mutation counter: bumped by clear() and import_jsonl()
+        # (incl. warm_jsonl).  The dispatch memo snapshots it so that
+        # clearing or re-warming the live default database invalidates
+        # memoized answers instead of being silently shadowed.
+        self.generation = 0
 
     # -- core ---------------------------------------------------------------
     def lookup(self, key: CacheKey) -> Optional[TuningRecord]:
@@ -187,6 +192,7 @@ class TuningDatabase:
     def clear(self) -> None:
         self._lru.clear()
         self.stats = CacheStats()
+        self.generation += 1
 
     # -- interchange --------------------------------------------------------
     def records(self) -> Iterator[TuningRecord]:
@@ -226,6 +232,8 @@ class TuningDatabase:
                     rec.source = source
                 self.put(rec)
                 n += 1
+        if n:
+            self.generation += 1
         return n
 
     def warm_jsonl(self, path: str) -> int:

@@ -1,0 +1,261 @@
+"""Struct-of-arrays static analysis: batch/scalar parity (ISSUE 2).
+
+The batched pipeline (`SearchSpace.enumerate_lattice` ->
+`static_info_batch` -> `tpu_occupancy_batch` -> array-form
+`static_times_batch`) must be *bitwise* identical to the scalar
+object path for every registered kernel and every configuration in its
+space — equality is asserted exactly, not to a tolerance — and
+`rank_space` must pick the identical argmin through either path.
+Also covers the warm-dispatch memo (skips key construction on repeat
+traces, invalidated on default-db swap) and the lattice/enumerate
+ordering contract.
+"""
+import numpy as np
+import pytest
+
+import repro.kernels  # noqa: F401  (registers dispatch problems)
+from repro import tuning_cache
+from repro.core.predict import (default_tpu_model, features_matrix,
+                                static_times_batch)
+from repro.core.search import SearchSpace
+from repro.tuning_cache import TuningDatabase, TuningProblem
+from repro.tuning_cache.registry import rank_space
+
+
+@pytest.fixture(autouse=True)
+def _fresh_default_db():
+    """Isolate from the process-wide database (and dispatch memo)."""
+    tuning_cache.set_default_db(TuningDatabase())
+    yield
+    tuning_cache.reset_default_db()
+
+
+# One instance per registered kernel family; non-square / non-causal /
+# mixed-dtype variants so shape roles cannot silently swap.
+CASES = [
+    ("matmul", dict(m=512, n=256, k=1024, dtype="float32")),
+    ("matmul", dict(m=512, n=512, k=512, dtype="bfloat16")),
+    ("matvec", dict(m=2048, n=1024, dtype="float32")),
+    ("atax", dict(m=1024, n=512, dtype="float32")),
+    ("bicg", dict(m=2048, n=2048, dtype="bfloat16")),
+    ("jacobi3d", dict(z=128, y=64, x=128, dtype="float32")),
+    ("flash_attention", dict(b=2, h=4, sq=1024, skv=1024, d=128,
+                             causal=True, dtype="float32")),
+    ("flash_attention", dict(b=1, h=8, sq=2048, skv=512, d=128,
+                             causal=False, dtype="bfloat16")),
+]
+
+_IDS = [f"{k}-{'-'.join(str(v) for v in s.values())}" for k, s in CASES]
+
+
+def _problem(kernel_id, sig):
+    return tuning_cache.get_problem(kernel_id, **sig)
+
+
+def test_every_registered_kernel_is_covered():
+    assert set(tuning_cache.registered()) == {k for k, _ in CASES}
+
+
+@pytest.mark.parametrize("kernel_id,sig", CASES, ids=_IDS)
+def test_lattice_order_matches_enumerate(kernel_id, sig):
+    prob = _problem(kernel_id, sig)
+    lat = prob.space.enumerate_lattice()
+    pts = prob.space.enumerate()
+    assert lat.size == len(pts) == prob.space.size
+    assert [lat.params_at(i) for i in range(lat.size)] == pts
+    # params_at must yield plain python objects (JSON-serializable)
+    assert all(type(v) is type(pv)
+               for p, q in zip([lat.params_at(0)], [pts[0]])
+               for (v, pv) in zip(p.values(), q.values()))
+
+
+@pytest.mark.parametrize("kernel_id,sig", CASES, ids=_IDS)
+def test_batch_features_and_occupancy_exactly_match_scalar(kernel_id, sig):
+    prob = _problem(kernel_id, sig)
+    lat = prob.space.enumerate_lattice()
+    infos = [prob.static_info(p) for p in prob.space.enumerate()]
+    batch = prob.static_info_batch(lat.columns)
+    assert len(batch) == len(infos)
+
+    # features: all 7 columns, every config, bitwise
+    F_scalar = features_matrix([i.mix for i in infos])
+    np.testing.assert_array_equal(batch.F, F_scalar)
+
+    # occupancy: every field the static time depends on, bitwise
+    occ = batch.occupancy
+    for field, get in [
+        ("predicted_step_time", lambda o: o.predicted_step_time),
+        ("grid_steps", lambda o: o.grid_steps),
+        ("fits_vmem", lambda o: o.fits_vmem),
+        ("t_compute", lambda o: o.t_compute),
+        ("t_dma", lambda o: o.t_dma),
+        ("occupancy", lambda o: o.occupancy),
+        ("vmem_bytes", lambda o: o.vmem_bytes),
+        ("vmem_ratio", lambda o: o.vmem_ratio),
+        ("mxu_alignment", lambda o: o.mxu_alignment),
+    ]:
+        np.testing.assert_array_equal(
+            getattr(occ, field), [get(i.occupancy) for i in infos],
+            err_msg=f"{kernel_id}: occupancy.{field} batch != scalar")
+    assert list(occ.limiter) == [i.occupancy.limiter for i in infos]
+    # the scalar reconstruction view round-trips
+    assert occ.at(0) == infos[0].occupancy
+
+
+@pytest.mark.parametrize("mode", ["sum", "max"])
+@pytest.mark.parametrize("kernel_id,sig", CASES, ids=_IDS)
+def test_batch_times_exactly_match_scalar(kernel_id, sig, mode):
+    prob = _problem(kernel_id, sig)
+    model = default_tpu_model(mode=mode)
+    infos = [prob.static_info(p) for p in prob.space.enumerate()]
+    batch = prob.static_info_batch(prob.space.enumerate_lattice().columns)
+    t_obj = static_times_batch(infos, model)
+    t_arr = static_times_batch(None, model, F=batch.F, pipe=batch.pipe,
+                               feasible=batch.feasible)
+    np.testing.assert_array_equal(t_arr, t_obj)
+    scalar = np.array([i.static_time(model) for i in infos])
+    np.testing.assert_array_equal(t_arr, scalar)
+
+
+@pytest.mark.parametrize("kernel_id,sig", CASES, ids=_IDS)
+def test_rank_space_argmin_identical_before_and_after(kernel_id, sig):
+    prob = _problem(kernel_id, sig)
+    model = default_tpu_model(mode="max")
+    scalar_prob = TuningProblem(space=prob.space,
+                                static_info=prob.static_info)
+    p_new, t_new, n_new = rank_space(prob, model)
+    p_old, t_old, n_old = rank_space(scalar_prob, model)
+    assert p_new == p_old
+    assert t_new == t_old          # bitwise, not approx
+    assert n_new == n_old == prob.space.size
+
+
+def test_tuner_static_cost_batch_routes_through_arrays():
+    """KernelTuner's batched scorer must agree with its scalar scorer
+    on an arbitrary candidate subset (the rule-filtered shortlist
+    path), not just the full lattice."""
+    import jax.numpy as jnp
+    from repro.core import KernelTuner
+    from repro.kernels import make_tunable_matmul
+    tk = make_tunable_matmul(m=512, n=512, k=512, dtype=jnp.float32)
+    assert tk.static_info_batch is not None
+    tuner = KernelTuner(tk, repeats=1, db=None)
+    pts = tk.space.enumerate()[::3]            # non-contiguous subset
+    got = tuner.static_cost_batch(pts)
+    want = np.array([tuner.static_cost(p) for p in pts])
+    np.testing.assert_array_equal(got, want)
+
+
+def test_static_times_batch_array_form_handles_partial_inputs():
+    model = default_tpu_model(mode="max")
+    F = np.zeros((3, 7))
+    F[:, 0] = [1e9, 2e9, 3e9]
+    base = static_times_batch(None, model, F=F)
+    floored = static_times_batch(None, model, F=F, pipe=np.full(3, 1.0))
+    np.testing.assert_array_equal(floored, np.maximum(base, 1.0))
+    masked = static_times_batch(None, model, F=F,
+                                feasible=np.array([True, False, True]))
+    assert masked[1] == np.inf and masked[0] == base[0]
+
+
+def test_enumerate_lattice_empty_and_single_axis():
+    empty = SearchSpace({})
+    lat = empty.enumerate_lattice()
+    assert lat.size == 1 and lat.params_at(0) == {}
+    one = SearchSpace({"a": (3, 1, 2)})
+    lat1 = one.enumerate_lattice()
+    assert [lat1.params_at(i) for i in range(lat1.size)] == one.enumerate()
+    np.testing.assert_array_equal(lat1.columns["a"], [3, 1, 2])
+
+
+# ---------------------------------------------------------------------------
+# warm-dispatch memo
+# ---------------------------------------------------------------------------
+
+
+def test_dispatch_memo_skips_key_construction(monkeypatch):
+    from repro.tuning_cache import registry
+    calls = {"n": 0}
+    real = registry.make_key
+
+    def counting(*a, **k):
+        calls["n"] += 1
+        return real(*a, **k)
+
+    monkeypatch.setattr(registry, "make_key", counting)
+    sig = dict(m=256, n=256, k=256, dtype="float32")
+    p1 = tuning_cache.lookup_or_tune("matmul", **sig)
+    assert calls["n"] == 1
+    p2 = tuning_cache.lookup_or_tune("matmul", **sig)
+    assert p2 == p1
+    assert calls["n"] == 1          # repeat trace: zero key hashing
+    # a different signature is a fresh memo entry
+    tuning_cache.lookup_or_tune("matmul", m=512, n=512, k=512,
+                                dtype="float32")
+    assert calls["n"] == 2
+
+
+def test_dispatch_memo_result_is_mutation_safe():
+    sig = dict(m=256, n=256, dtype="float32")
+    p1 = tuning_cache.lookup_or_tune("matvec", **sig)
+    p1["bm"] = "poisoned"
+    assert tuning_cache.lookup_or_tune("matvec", **sig)["bm"] != "poisoned"
+
+
+def test_dispatch_memo_invalidated_on_default_db_swap():
+    sig = dict(m=256, n=256, dtype="float32")
+    tuning_cache.lookup_or_tune("matvec", **sig)
+    db2 = TuningDatabase()
+    tuning_cache.set_default_db(db2)
+    tuning_cache.lookup_or_tune("matvec", **sig)
+    assert db2.stats.tunes == 1     # re-tuned against the new default
+
+
+def test_dispatch_memo_invalidated_by_bulk_db_mutation(tmp_path):
+    """clear() / import_jsonl on the *live* default database must not
+    be shadowed by the memo."""
+    import json
+    sig = dict(m=256, n=256, dtype="float32")
+    db = tuning_cache.get_default_db()
+    tuning_cache.lookup_or_tune("matvec", **sig)
+    db.clear()
+    tuning_cache.lookup_or_tune("matvec", **sig)
+    assert db.stats.tunes == 1      # re-tuned, not served stale
+    # an imported record with different params must win over the memo
+    rec = next(iter(db.records()))
+    rec.params = {"bm": -1, "bk": -1}
+    path = tmp_path / "override.jsonl"
+    path.write_text(json.dumps(rec.to_dict()) + "\n")
+    db.import_jsonl(str(path))
+    assert tuning_cache.lookup_or_tune("matvec", **sig) == \
+        {"bm": -1, "bk": -1}
+
+
+def test_pretune_out_excludes_preexisting_db_records(tmp_path):
+    """`pretune --out` must export exactly the swept grid, never stale
+    records already sitting in the target database."""
+    import json
+    from repro.tuning_cache.cli import main
+    dbdir = str(tmp_path / "db")
+    # plant an unrelated record in the persistent db first
+    assert main(["--db", dbdir, "tune", "--kernel", "matvec",
+                 "--sig", "m=64", "n=64", "dtype=float32"]) == 0
+    out = str(tmp_path / "grid.jsonl")
+    assert main(["--db", dbdir, "pretune", "--kernels", "jacobi3d",
+                 "--out", out]) == 0
+    recs = [json.loads(l) for l in open(out)]
+    assert len(recs) == 3                      # the jacobi3d grid only
+    assert all(r["key"]["kernel_id"] == "jacobi3d" for r in recs)
+    # but the sweep still write-through persists into the target db
+    db = TuningDatabase(root=dbdir)
+    assert sum(r.key.kernel_id == "jacobi3d" for r in db.records()) == 3
+
+
+def test_dispatch_memo_not_engaged_for_explicit_db():
+    """Explicit-db callers must keep exact database hit/miss semantics
+    (the memo would hide hits from their stats)."""
+    db = TuningDatabase()
+    sig = dict(m=256, n=256, dtype="float32")
+    tuning_cache.lookup_or_tune("matvec", db=db, **sig)
+    tuning_cache.lookup_or_tune("matvec", db=db, **sig)
+    assert db.stats.tunes == 1 and db.stats.hits == 1
