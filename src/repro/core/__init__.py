@@ -1,7 +1,8 @@
 """repro.core — the paper's contribution: static & predictive autotuning.
 
 Layers (paper §III):
-  hw         Table I / Table II constants (faithful) + TPU v5e specs
+  hw         Table I / Table II constants (faithful) + TPU target table
+  target     process-default hardware target (env / autodetect / scoped)
   mix        instruction-mix extraction (jaxpr + HLO text)
   occupancy  CUDA Eqs. 1-5 (faithful) + TPU pipeline occupancy
   predict    Eq. 6 time model, calibration, rank metrics
@@ -11,8 +12,12 @@ Layers (paper §III):
   roofline   3-term roofline from compiled artifacts
 """
 from repro.core.hw import (GPU_TABLE, FERMI_M2050, KEPLER_K20, MAXWELL_M40,
-                           GpuSpec, TpuSpec, TPU_V5E, IPC_TABLE, cpi,
-                           tpu_rate_table, dtype_bytes)
+                           GpuSpec, TpuSpec, TPU_V4, TPU_V5E, TPU_V5P,
+                           TPU_V6E, TPU_TABLE, resolve_target, IPC_TABLE,
+                           cpi, tpu_rate_table, dtype_bytes)
+from repro.core.target import (ENV_TARGET, default_target,
+                               set_default_target, use_target,
+                               detect_target)
 from repro.core.mix import (InstructionMix, mix_from_jaxpr, mix_of_fn,
                             mix_from_hlo_text, mix_from_cost_analysis,
                             intensity, classify_boundedness)

@@ -32,8 +32,9 @@ from typing import Any, Callable, Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
 
-from repro.core.hw import TpuSpec, TPU_V5E
+from repro.core.hw import TpuSpec, resolve_target
 from repro.core.mix import InstructionMix, intensity, classify_boundedness
+from repro.core.target import use_target
 from repro.core.occupancy import TpuOccupancy
 from repro.core.predict import (CostModel, default_tpu_model, spearman,
                                 static_times_batch)
@@ -173,7 +174,7 @@ class KernelTuner:
 
     def __init__(self, kernel: TunableKernel,
                  model: Optional[CostModel] = None,
-                 spec: TpuSpec = TPU_V5E,
+                 spec: Optional[TpuSpec] = None,
                  repeats: int = 5,
                  keep_frac: float = 0.125,
                  use_rule: bool = True,
@@ -181,8 +182,8 @@ class KernelTuner:
                  seed: int = 0,
                  db: Any = "default"):
         self.kernel = kernel
-        self.model = model or default_tpu_model(mode="max")
-        self.spec = spec
+        self.spec = resolve_target(spec)
+        self.model = model or default_tpu_model(self.spec, mode="max")
         self.repeats = repeats
         self.keep_frac = keep_frac
         self.use_rule = use_rule
@@ -194,10 +195,15 @@ class KernelTuner:
         self._info_cache: Dict[Tuple, KernelStaticInfo] = {}
 
     # -- static machinery ----------------------------------------------------
+    # Kernel-supplied static_info builders resolve their own spec from
+    # the default target, so every analysis call runs under
+    # `use_target(self.spec)`: a tuner constructed for one chip keeps
+    # analyzing for that chip whatever the ambient default is.
     def _info(self, p: Params) -> KernelStaticInfo:
         key = tuple(str(p[k]) for k in self.kernel.space.names)
         if key not in self._info_cache:
-            self._info_cache[key] = self.kernel.static_info(p)
+            with use_target(self.spec):
+                self._info_cache[key] = self.kernel.static_info(p)
         return self._info_cache[key]
 
     def static_cost(self, p: Params) -> float:
@@ -216,7 +222,8 @@ class KernelTuner:
         if self.kernel.static_info_batch is not None:
             cols = {k: np.asarray([p[k] for p in pts])
                     for k in self.kernel.space.names}
-            b = self.kernel.static_info_batch(cols)
+            with use_target(self.spec):
+                b = self.kernel.static_info_batch(cols)
             return static_times_batch(None, self.model, F=b.F, pipe=b.pipe,
                                       feasible=b.feasible)
         return static_times_batch([self._info(p) for p in pts], self.model)
@@ -418,15 +425,17 @@ class GraphTuner:
     def __init__(self, space: SearchSpace,
                  lower_fn: Callable[[Params], Any],
                  chips: int, model_flops: float,
-                 spec: TpuSpec = TPU_V5E, ici_links: int = 4,
+                 spec: Optional[TpuSpec] = None,
+                 ici_links: Optional[int] = None,
                  db: Any = None,
                  cache_signature: Optional[Dict[str, Any]] = None):
         self.space = space
         self.lower_fn = lower_fn
         self.chips = chips
         self.model_flops = model_flops
-        self.spec = spec
-        self.ici_links = ici_links
+        self.spec = resolve_target(spec)
+        self.ici_links = (self.spec.ici_links if ici_links is None
+                          else ici_links)
         self.db = db
         self.cache_signature = cache_signature
 

@@ -8,10 +8,13 @@ Two families live here:
    capability).  These feed the faithful CUDA occupancy equations
    (Eqs. 1-5) and the CPI weights of Eq. 6.
 
-2. The TPU adaptation: chip-level specs for the TPU v5e target (the
-   mesh the dry-run compiles for) and a throughput table playing the
-   role of Table II for the TPU pipelines (MXU / VPU / transcendental /
-   HBM / ICI).
+2. The TPU adaptation: chip-level specs for the supported TPU targets
+   (v4 / v5e / v5p / v6e) and a throughput table playing the role of
+   Table II for the TPU pipelines (MXU / VPU / transcendental / HBM /
+   ICI).  ``TPU_TABLE`` is the Table-I analogue — one column per chip
+   generation — and :func:`resolve_target` turns a name (or ``None``,
+   meaning the process default from :mod:`repro.core.target`) into a
+   spec.
 
 Everything is a frozen dataclass so specs can be hashed into tuning
 cache keys.
@@ -19,7 +22,7 @@ cache keys.
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict
+from typing import Dict, Optional, Union
 
 
 # ---------------------------------------------------------------------------
@@ -140,7 +143,7 @@ def cpi(category: str, gpu: GpuSpec) -> float:
 
 
 # ---------------------------------------------------------------------------
-# TPU adaptation -- the paper's Table I/II for the v5e target.
+# TPU adaptation -- the paper's Table I/II, one column per chip generation.
 # ---------------------------------------------------------------------------
 
 
@@ -148,10 +151,11 @@ def cpi(category: str, gpu: GpuSpec) -> float:
 class TpuSpec:
     """TPU chip + interconnect model used by occupancy/predict/roofline.
 
+    One instance per supported chip generation (the Table-I analogue:
+    the paper's Fermi/Kepler/Maxwell columns become v4/v5e/v5p/v6e).
     The three roofline constants (peak bf16 FLOP/s, HBM bandwidth, ICI
-    link bandwidth) are the grading constants given in the assignment;
-    the VMEM/VPU numbers model the on-core memory hierarchy for the
-    Pallas occupancy model.
+    link bandwidth) are public chip numbers; the VMEM/VPU numbers model
+    the on-core memory hierarchy for the Pallas occupancy model.
     """
 
     name: str = "tpu-v5e"
@@ -172,14 +176,93 @@ class TpuSpec:
     cores_per_chip: int = 1                # v5e: 1 TensorCore per chip
     # Control overhead charged per grid step / scalar-unit op (seconds).
     ctrl_overhead_s: float = 120e-9
+    # Inter-chip interconnect topology ('2d-torus' | '3d-torus').
+    ici_topology: str = "2d-torus"
+
+    @property
+    def ici_links(self) -> int:
+        """Links per chip, derived from the torus dimensionality:
+        a d-dimensional torus has 2*d neighbours (2D -> 4, 3D -> 6)."""
+        return {"2d-torus": 4, "3d-torus": 6}[self.ici_topology]
 
 
 TPU_V5E = TpuSpec()
 
+TPU_V4 = TpuSpec(
+    name="tpu-v4",
+    peak_flops_bf16=275e12, peak_flops_f32=68.75e12,
+    hbm_bw=1228e9, ici_bw_per_link=50e9,
+    hbm_bytes=32 * 1024**3,
+    vmem_bytes=16 * 1024**2, vmem_bw=15e12,
+    vpu_flops=4.4e12, transcendental_flops=0.55e12,
+    cores_per_chip=2, ctrl_overhead_s=140e-9,
+    ici_topology="3d-torus",
+)
+
+TPU_V5P = TpuSpec(
+    name="tpu-v5p",
+    peak_flops_bf16=459e12, peak_flops_f32=114.75e12,
+    hbm_bw=2765e9, ici_bw_per_link=100e9,
+    hbm_bytes=95 * 1024**3,
+    vmem_bytes=32 * 1024**2, vmem_bw=22e12,
+    vpu_flops=7.4e12, transcendental_flops=0.9e12,
+    cores_per_chip=2, ctrl_overhead_s=110e-9,
+    ici_topology="3d-torus",
+)
+
+TPU_V6E = TpuSpec(
+    name="tpu-v6e",
+    peak_flops_bf16=918e12, peak_flops_f32=229.5e12,
+    hbm_bw=1640e9, ici_bw_per_link=100e9,
+    hbm_bytes=32 * 1024**3,
+    vmem_bytes=32 * 1024**2, vmem_bw=25e12,
+    vpu_flops=14.2e12, transcendental_flops=1.8e12,
+    cores_per_chip=1, ctrl_overhead_s=100e-9,
+    ici_topology="2d-torus",
+)
+
+# The Table-I analogue for the TPU side: canonical name -> spec, plus
+# short aliases.  Shipped pretuned databases exist for the entries of
+# `repro.tuning_cache.cli.SHIPPED_TARGETS` (a subset of this table).
+TPU_TABLE: Dict[str, TpuSpec] = {
+    "tpu-v4": TPU_V4, "v4": TPU_V4,
+    "tpu-v5e": TPU_V5E, "v5e": TPU_V5E,
+    "tpu-v5p": TPU_V5P, "v5p": TPU_V5P,
+    "tpu-v6e": TPU_V6E, "v6e": TPU_V6E,
+}
+
+
+def resolve_target(target: Optional[Union[str, TpuSpec]] = None) -> TpuSpec:
+    """Name-or-spec -> spec; ``None`` -> the process default target.
+
+    Accepts canonical names ('tpu-v5p'), short aliases ('v5p'), and the
+    spellings jax's ``device_kind`` / env vars use ('TPU v5p',
+    'tpu_v5p', 'TPU v5 lite').  A `TpuSpec` passes through unchanged so
+    every ``spec=`` keyword in the stack takes either form.
+    """
+    if target is None:
+        from repro.core.target import default_target
+        return default_target()
+    if isinstance(target, TpuSpec):
+        return target
+    name = str(target).strip().lower().replace("_", "-").replace(" ", "-")
+    # device_kind spellings: 'TPU v5 lite' / 'TPU v6 lite' are the
+    # efficiency chips; bare 'TPU v5' is how jax reports v5p.
+    name = name.replace("v5-lite", "v5e").replace("v6-lite", "v6e")
+    if name in ("tpu-v5", "v5"):
+        name = "tpu-v5p"
+    for key in (name, name[len("tpu-"):] if name.startswith("tpu-") else name):
+        if key in TPU_TABLE:
+            return TPU_TABLE[key]
+    raise KeyError(
+        f"unknown TPU target {target!r}; known: "
+        f"{sorted(k for k in TPU_TABLE if k.startswith('tpu-'))}")
+
 
 # Instruction-class peak rates for Eq. 6 on TPU (the Table II analogue).
 # Keys are the InstructionMix categories defined in repro.core.mix.
-def tpu_rate_table(spec: TpuSpec = TPU_V5E) -> Dict[str, float]:
+def tpu_rate_table(spec: Optional[TpuSpec] = None) -> Dict[str, float]:
+    spec = resolve_target(spec)
     return {
         # FLOP-like categories: events/sec.
         "mxu_flops": spec.peak_flops_bf16,

@@ -24,7 +24,7 @@ from typing import Dict, Iterable, List, Optional, Sequence, Tuple
 
 import numpy as np
 
-from repro.core.hw import GpuSpec, TpuSpec, TPU_V5E, dtype_bytes
+from repro.core.hw import GpuSpec, TpuSpec, dtype_bytes, resolve_target
 from repro.core.mix import InstructionMix
 
 __all__ = [
@@ -197,7 +197,7 @@ def tpu_occupancy(block_in_bytes: Sequence[int],
                   buffering: int = 2,
                   block_shapes: Optional[Sequence[Sequence[int]]] = None,
                   compute_unit: str = "mxu",
-                  spec: TpuSpec = TPU_V5E) -> TpuOccupancy:
+                  spec: Optional[TpuSpec] = None) -> TpuOccupancy:
     """Static occupancy of one Pallas configuration.
 
     Parameters
@@ -208,7 +208,10 @@ def tpu_occupancy(block_in_bytes: Sequence[int],
         useful FLOPs per grid step.
     buffering:
         pipeline depth (2 = double buffering, the Pallas default).
+    spec:
+        chip to model; ``None`` = the process default target.
     """
+    spec = resolve_target(spec)
     moved = float(sum(block_in_bytes) + sum(block_out_bytes))
     vmem = int(moved * buffering + scratch_bytes)
     budget = spec.vmem_bytes
@@ -303,7 +306,7 @@ def tpu_occupancy_batch(block_in_bytes: Sequence,
                         buffering: int = 2,
                         block_shapes: Optional[Sequence[Sequence]] = None,
                         compute_unit: str = "mxu",
-                        spec: TpuSpec = TPU_V5E) -> TpuOccupancyBatch:
+                        spec: Optional[TpuSpec] = None) -> TpuOccupancyBatch:
     """Vectorized :func:`tpu_occupancy` over a whole config lattice.
 
     Same contract, array-valued: each entry of ``block_in_bytes`` /
@@ -313,6 +316,7 @@ def tpu_occupancy_batch(block_in_bytes: Sequence,
     may mix int dims with (N,) array dims.  One NumPy pass computes the
     step time, grid steps, and VMEM feasibility of all N configurations.
     """
+    spec = resolve_target(spec)
     moved = np.asarray(sum(np.asarray(b, dtype=np.float64)
                            for b in list(block_in_bytes)
                            + list(block_out_bytes)), dtype=np.float64)
@@ -355,11 +359,12 @@ def tpu_occupancy_batch(block_in_bytes: Sequence,
 
 def suggest_block_shapes(m: int, n: int, k: int,
                          dtype_size: int = 2,
-                         spec: TpuSpec = TPU_V5E,
+                         spec: Optional[TpuSpec] = None,
                          candidates: Optional[Iterable[Tuple[int, int, int]]] = None,
                          ) -> List[Tuple[Tuple[int, int, int], TpuOccupancy]]:
     """Table VII analogue for TPU matmul tiles: rank (bm, bn, bk)
     candidates by static occupancy (no compilation, no execution)."""
+    spec = resolve_target(spec)
     if candidates is None:
         sizes = [128, 256, 512, 1024]
         candidates = [(bm, bn, bk) for bm in sizes for bn in sizes

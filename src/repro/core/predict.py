@@ -27,7 +27,8 @@ from typing import Dict, Optional, Sequence, Tuple
 
 import numpy as np
 
-from repro.core.hw import GpuSpec, TpuSpec, TPU_V5E, tpu_rate_table, cpi
+from repro.core.hw import (GpuSpec, TpuSpec, cpi, resolve_target,
+                           tpu_rate_table)
 from repro.core.mix import InstructionMix
 
 __all__ = [
@@ -123,8 +124,9 @@ class CostModel:
                 for f in _FEATURES}
 
 
-def default_tpu_model(spec: TpuSpec = TPU_V5E, mode: str = "sum") -> CostModel:
-    rates = tpu_rate_table(spec)
+def default_tpu_model(spec: Optional[TpuSpec] = None,
+                      mode: str = "sum") -> CostModel:
+    rates = tpu_rate_table(resolve_target(spec))
     coeffs = {k: (1.0 / v if v else 0.0) for k, v in rates.items()
               if k in _FEATURES}
     # vmem traffic overlaps aggressively with compute; damp its serial cost

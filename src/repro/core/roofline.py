@@ -20,7 +20,7 @@ import dataclasses
 import json
 from typing import Dict, Optional
 
-from repro.core.hw import TpuSpec, TPU_V5E
+from repro.core.hw import TpuSpec, resolve_target
 from repro.core.hlo import (CollectiveStats, collective_stats, module_mix,
                             parse_hlo)
 from repro.core.mix import InstructionMix
@@ -60,8 +60,8 @@ def roofline_from_artifacts(name: str,
                             hlo_text: Optional[str],
                             chips: int,
                             model_flops: float,
-                            spec: TpuSpec = TPU_V5E,
-                            ici_links: int = 4,
+                            spec: Optional[TpuSpec] = None,
+                            ici_links: Optional[int] = None,
                             flops_are_global: bool = False,
                             collectives: Optional[CollectiveStats] = None,
                             mix: Optional[InstructionMix] = None,
@@ -71,8 +71,13 @@ def roofline_from_artifacts(name: str,
     Prefers the loop-aware module mix (``repro.core.hlo.module_mix``)
     over ``cost_analysis`` — XLA's analysis counts while bodies once,
     undercounting scan-over-layers / microbatch loops by their trip
-    counts.  ``ici_links`` — links per chip (v5e 2D torus: 4).
+    counts.  ``spec`` — chip to model (``None`` = default target);
+    ``ici_links`` — links per chip (``None`` = from the spec's ICI
+    topology: 2D torus 4, 3D torus 6).
     """
+    spec = resolve_target(spec)
+    if ici_links is None:
+        ici_links = spec.ici_links
     if mix is None and hlo_text is not None:
         mod = parse_hlo(hlo_text)
         mix = module_mix(mod)

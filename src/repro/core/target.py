@@ -1,0 +1,118 @@
+"""Process-default hardware target (the chip the stack tunes for).
+
+Every layer of the static-tuning stack — occupancy, cost model,
+roofline, tuner, dispatch registry, CLI, launch — takes an optional
+``spec``; when it is omitted the layer asks this module which chip is
+active.  Resolution order:
+
+1. a scoped :func:`use_target` override (context-local: threads and
+   async tasks scope independently), then an explicit process-wide
+   :func:`set_default_target` pin,
+2. the ``REPRO_TUNING_TARGET`` environment variable (a
+   `repro.core.hw.TPU_TABLE` name, e.g. ``tpu-v5p``),
+3. best-effort auto-detection from ``jax.devices()[0].device_kind``
+   (memoized; CPU/GPU backends simply don't match),
+4. the v5e fallback, so behaviour without any configuration is
+   identical to the pre-registry stack.
+
+Because tuning-cache keys and the dispatch memo already carry the full
+spec fingerprint (`repro.tuning_cache.keys.fingerprint_spec`), switching
+the default target re-keys every cached ranking automatically — two
+targets can never serve each other's parameters.
+"""
+from __future__ import annotations
+
+import contextlib
+import contextvars
+import logging
+import os
+from typing import Iterator, Optional, Union
+
+from repro.core.hw import TPU_V5E, TpuSpec, resolve_target
+
+__all__ = ["ENV_TARGET", "default_target", "set_default_target",
+           "use_target", "detect_target"]
+
+ENV_TARGET = "REPRO_TUNING_TARGET"
+
+_log = logging.getLogger(__name__)
+
+# Scoped override (use_target).  A ContextVar, not a module global:
+# concurrent threads / async tasks each see their own scope, so one
+# trace pinning v5p around a cold rank can never leak v5p into another
+# thread's v5e analysis (and vice versa).
+_scoped: "contextvars.ContextVar[Optional[TpuSpec]]" = \
+    contextvars.ContextVar("repro_target_scoped", default=None)
+# Process-wide pin (set_default_target) — deliberately global: it must
+# be visible to threads spawned before or after the call.
+_explicit: Optional[TpuSpec] = None
+# Memoized auto-detection result; None = not attempted yet.  Holds
+# (spec_or_None,) so a failed detection is remembered as (None,).
+_detected: Optional[tuple] = None
+# (raw env value, resolved spec) — default_target runs on every warm
+# dispatch, so the env string is parsed once, not per call.
+_env_cache: Optional[tuple] = None
+
+
+def detect_target() -> Optional[TpuSpec]:
+    """Best-effort chip detection from the local jax backend.
+
+    Returns the matching `TpuSpec`, or ``None`` when there is no TPU
+    (CPU/GPU backend) or jax is unavailable.  The first call may
+    initialize the jax backend; results — including failures — are
+    memoized for the life of the process.
+    """
+    global _detected
+    if _detected is None:
+        spec = None
+        try:
+            import jax
+            devices = jax.devices()
+            if devices:
+                spec = resolve_target(devices[0].device_kind)
+        except Exception as e:     # no backend / unknown kind: fall through
+            _log.debug("target auto-detection failed: %s", e)
+        _detected = (spec,)
+    return _detected[0]
+
+
+def default_target() -> TpuSpec:
+    """The chip every ``spec=None`` in the stack resolves to."""
+    spec = _scoped.get()
+    if spec is not None:
+        return spec
+    spec = _explicit
+    if spec is not None:
+        return spec
+    env = os.environ.get(ENV_TARGET)
+    if env:
+        global _env_cache
+        cache = _env_cache
+        if cache is None or cache[0] != env:
+            cache = _env_cache = (env, resolve_target(env))
+        return cache[1]
+    detected = detect_target()
+    if detected is not None:
+        return detected
+    return TPU_V5E
+
+
+def set_default_target(target: Optional[Union[str, TpuSpec]]) -> TpuSpec:
+    """Pin the process-default target (``None`` restores env/auto/v5e
+    resolution).  Returns the now-active target."""
+    global _explicit
+    _explicit = None if target is None else resolve_target(target)
+    return default_target()
+
+
+@contextlib.contextmanager
+def use_target(target: Union[str, TpuSpec]) -> Iterator[TpuSpec]:
+    """Scoped default target; restores the prior default on exit, even
+    when the body raises.  Nests (inner targets shadow outer ones) and
+    is context-local: concurrent threads/tasks scope independently."""
+    spec = resolve_target(target)
+    token = _scoped.set(spec)
+    try:
+        yield spec
+    finally:
+        _scoped.reset(token)

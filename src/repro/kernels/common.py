@@ -23,7 +23,7 @@ import jax.numpy as jnp
 import numpy as np
 from jax.experimental.pallas import tpu as pltpu
 
-from repro.core.hw import TPU_V5E, TpuSpec, dtype_bytes
+from repro.core.hw import TpuSpec, dtype_bytes
 from repro.core.mix import InstructionMix
 from repro.core.occupancy import (TpuOccupancyBatch, tpu_occupancy,
                                   tpu_occupancy_batch)
@@ -75,11 +75,12 @@ def block_info(*,
                grid_steps: int = 1,
                scratch_bytes: int = 0,
                mix_scale: float | None = None,
-               spec: TpuSpec = TPU_V5E) -> KernelStaticInfo:
+               spec: TpuSpec | None = None) -> KernelStaticInfo:
     """Analytic KernelStaticInfo from block shapes + per-step op counts.
 
     ``mix_scale`` defaults to ``grid_steps`` (total work = per-step work
-    times the number of grid steps).
+    times the number of grid steps).  ``spec=None`` analyzes for the
+    process-default target (`repro.core.target.default_target`).
     """
     in_bytes = [int(np.prod(b)) * dtype_bytes(d)
                 for b, d in zip(in_blocks, in_dtypes)]
@@ -145,7 +146,7 @@ def block_info_batch(*,
                      grid_steps=1,
                      scratch_bytes=0,
                      mix_scale=None,
-                     spec: TpuSpec = TPU_V5E) -> BatchStaticInfo:
+                     spec: TpuSpec | None = None) -> BatchStaticInfo:
     """Vectorized `block_info`: one (N, 7) feature matrix + occupancy
     arrays for a whole config lattice in a single NumPy pass.
 

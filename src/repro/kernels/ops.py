@@ -1,11 +1,13 @@
 """Public jit'd entry points for the kernel layer.
 
 Each op resolves its launch configuration **at trace time** through the
-tuning database (`repro.tuning_cache.lookup_or_tune`): the first call
-for a given (kernel, shapes, dtype, chip) ranks the kernel's whole
-launch space with the static cost model in one vectorized pass; every
-later call — including across processes when a disk/pre-tuned database
-is configured — is a pure cache hit with zero model evaluations.
+tuning database (`repro.tuning_cache.lookup_or_tune`), tuned for the
+active hardware target (`repro.core.target.default_target` — pin it
+with ``use_target(...)`` / ``REPRO_TUNING_TARGET``): the first call for
+a given (kernel, shapes, dtype, chip) ranks the kernel's whole launch
+space with the static cost model in one vectorized pass; every later
+call — including across processes when a disk/pre-tuned database is
+configured — is a pure cache hit with zero model evaluations.
 
 ``tuned_params`` still lets a caller inject a
 :class:`~repro.core.autotuner.TuningReport`'s best_params explicitly,
@@ -21,6 +23,7 @@ from typing import Dict, Optional
 import jax
 
 from repro import tuning_cache
+from repro.core.target import default_target
 from repro.kernels.matmul import matmul_pallas
 from repro.kernels.matvec import matvec_pallas
 from repro.kernels.atax import atax_pallas
@@ -42,13 +45,28 @@ def _largest_divisor(n: int, candidates) -> int:
     return n
 
 
+# kernel_ids whose dispatch failure already produced a full traceback;
+# a persistently broken registry entry logs once per process, not once
+# per trace.
+_logged_dispatch_failures = set()
+
+
 def _resolve(kernel_id: str, **signature) -> Dict:
-    """Trace-time launch-config lookup; never raises (returns {} on
-    failure so the per-op fallback defaults apply)."""
+    """Trace-time launch-config lookup for the active hardware target;
+    never raises (returns {} on failure so the per-op fallback defaults
+    apply)."""
     try:
-        return tuning_cache.lookup_or_tune(kernel_id, **signature)
+        return tuning_cache.lookup_or_tune(
+            kernel_id, spec=default_target(), **signature)
     except Exception:
-        _log.exception("tuning-cache dispatch failed for %s %s; "
+        if kernel_id not in _logged_dispatch_failures:
+            _logged_dispatch_failures.add(kernel_id)
+            _log.exception("tuning-cache dispatch failed for %s %s; "
+                           "using fallback defaults (further failures "
+                           "for this kernel log at DEBUG)",
+                           kernel_id, signature)
+        else:
+            _log.debug("tuning-cache dispatch failed for %s %s; "
                        "using fallback defaults", kernel_id, signature)
         return {}
 

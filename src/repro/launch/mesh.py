@@ -25,6 +25,11 @@ def mesh_num_chips(mesh) -> int:
     return int(np.prod(mesh.devices.shape))
 
 
-def ici_links(mesh) -> int:
-    """Links per chip for the collective roofline term: v5e 2D torus -> 4."""
-    return 4
+def ici_links(mesh=None, spec=None) -> int:
+    """Links per chip for the collective roofline term, derived from the
+    target spec's ICI topology (v5e/v6e 2D torus -> 4, v4/v5p 3D torus
+    -> 6).  ``spec=None`` uses the process-default target; ``mesh`` is
+    accepted for call-site symmetry with `mesh_num_chips` but the link
+    count is a chip property, not a mesh property."""
+    from repro.core.hw import resolve_target
+    return resolve_target(spec).ici_links

@@ -13,8 +13,12 @@ compute them once and reuse them everywhere:
 
 The process-wide default database is memory-only unless the
 ``REPRO_TUNING_CACHE_DIR`` environment variable points at a directory;
-it is warmed at first use from the pre-tuned JSONL files shipped under
-``tuning_cache/pretuned/`` so common shapes dispatch warm out of the box.
+it is warmed at first use from the pre-tuned JSONL shipped for the
+active hardware target under ``tuning_cache/pretuned/`` (one
+``<target>.jsonl`` per chip), so common shapes dispatch warm out of the
+box.  Dispatching under another target (`repro.core.target.use_target`
+or ``REPRO_TUNING_TARGET``) lazily warms that target's file on first
+use.
 
 See DESIGN.md §6-§7 for the key schema and invalidation rules.
 """
@@ -38,6 +42,7 @@ __all__ = [
     "TuningProblem", "clear_dispatch_memo", "get_problem", "lookup_or_tune",
     "normalize_signature", "rank_space", "register", "registered",
     "get_default_db", "set_default_db", "reset_default_db", "pretuned_dir",
+    "pretuned_path", "warm_pretuned",
 ]
 
 ENV_DB_DIR = "REPRO_TUNING_CACHE_DIR"
@@ -50,23 +55,41 @@ def pretuned_dir() -> str:
     return os.path.join(os.path.dirname(__file__), "pretuned")
 
 
-def _warm_pretuned(db: TuningDatabase) -> int:
-    n = 0
-    root = pretuned_dir()
-    if os.path.isdir(root):
-        for name in sorted(os.listdir(root)):
-            if name.endswith(".jsonl"):
-                n += db.warm_jsonl(os.path.join(root, name))
-    return n
+def pretuned_path(target=None) -> str:
+    """Shipped JSONL for one hardware target: ``pretuned/<name>.jsonl``
+    (canonical name, '-' -> '_'; e.g. tpu-v5p -> tpu_v5p.jsonl)."""
+    from repro.core.hw import resolve_target
+    name = resolve_target(target).name.replace("-", "_")
+    return os.path.join(pretuned_dir(), f"{name}.jsonl")
+
+
+def warm_pretuned(db: TuningDatabase, target=None) -> int:
+    """Fold the target's shipped pretuned records into ``db`` (memory
+    only), once per (database, target) — repeat calls are a set probe.
+    Missing file (a target we ship no database for) warms nothing."""
+    from repro.core.hw import resolve_target
+    spec = resolve_target(target)
+    return _warm_pretuned_spec(db, spec)
+
+
+def _warm_pretuned_spec(db: TuningDatabase, spec) -> int:
+    if spec.name in db.warmed_targets:
+        return 0
+    db.warmed_targets.add(spec.name)
+    path = pretuned_path(spec)
+    if os.path.isfile(path):
+        return db.warm_jsonl(path)
+    return 0
 
 
 def get_default_db() -> TuningDatabase:
     """Process-wide database: LRU + optional env-configured disk root,
-    warmed once from the packaged pre-tuned JSONL files."""
+    warmed from the pre-tuned JSONL shipped for the default target
+    (other targets warm lazily at first dispatch)."""
     global _default_db
     if _default_db is None:
         _default_db = TuningDatabase(root=os.environ.get(ENV_DB_DIR))
-        _warm_pretuned(_default_db)
+        warm_pretuned(_default_db)
     return _default_db
 
 

@@ -13,28 +13,41 @@
     PYTHONPATH=src python -m repro.tuning_cache tune \
         --kernel matmul --sig m=1024 n=1024 k=1024 dtype=float32
 
-    # sweep the default shape grid over every registered kernel and
-    # regenerate the shipped database in one command
-    PYTHONPATH=src python -m repro.tuning_cache pretune \
-        --out src/repro/tuning_cache/pretuned/tpu_v5e.jsonl
+    # sweep the default shape grid for one chip and regenerate its
+    # shipped database (default --out: pretuned/<target>.jsonl)
+    PYTHONPATH=src python -m repro.tuning_cache pretune --target tpu-v5p
+
+    # regenerate every shipped per-target database in one command ...
+    PYTHONPATH=src python -m repro.tuning_cache pretune --all-targets
+
+    # ... or prove each shipped JSONL is regenerable bit-for-bit
+    PYTHONPATH=src python -m repro.tuning_cache pretune --verify --all-targets
 
 `pretune` (or `tune` + `export` per instance) is how the in-repo
 pre-tuned databases under ``src/repro/tuning_cache/pretuned/`` are
 produced; `import` (or `launch/serve.py --tuning-db`) is how they are
-consumed.
+consumed.  `tune` accepts ``--target`` too; omitted, every command runs
+against the process-default target (``REPRO_TUNING_TARGET`` / detected
+chip / v5e).
 """
 from __future__ import annotations
 
 import argparse
+import dataclasses
+import json
 import os
 import sys
 import time
 from typing import Any, Dict, List, Optional, Tuple
 
+from repro.core.hw import resolve_target
 from repro.tuning_cache import (ENV_DB_DIR, TuningDatabase, get_problem,
-                                lookup_or_tune, registered)
+                                lookup_or_tune, pretuned_path, registered)
 
 DEFAULT_DB_DIR = ".tuning_cache"
+
+# Chips we ship a pretuned database for (pretuned/<name>.jsonl each).
+SHIPPED_TARGETS = ("tpu-v5e", "tpu-v5p", "tpu-v6e")
 
 # The production shape grid behind `pretune`: every signature the
 # shipped pretuned database covers.  Each instance is one vectorized
@@ -63,6 +76,38 @@ def default_pretune_cases() -> List[Tuple[str, Dict[str, Any]]]:
                               dict(b=b, h=h, sq=s, skv=s, d=128,
                                    causal=causal, dtype=dt)))
     return cases
+
+
+def _render_jsonl(db: TuningDatabase) -> str:
+    """Deterministic JSONL rendering of a swept grid.
+
+    Creation timestamps are normalized to 0.0 — the only
+    non-reproducible field — so regenerating the same grid for the same
+    target yields byte-identical output (`pretune --verify` diffs
+    bit-for-bit against the shipped file).
+    """
+    lines = []
+    for rec in db.records():
+        rec = dataclasses.replace(rec, created_unix=0.0)
+        lines.append(json.dumps(rec.to_dict(), sort_keys=True))
+    return "".join(line + "\n" for line in lines)
+
+
+def _diff_shipped(path: str, text: str) -> Tuple[bool, str]:
+    """Bit-for-bit comparison of a regenerated grid against a shipped
+    JSONL; on mismatch, name the first differing line."""
+    try:
+        with open(path, "r", encoding="utf-8") as f:
+            shipped = f.read()
+    except OSError as e:
+        return False, f"cannot read shipped db: {e}"
+    if shipped == text:
+        return True, ""
+    a, b = shipped.splitlines(), text.splitlines()
+    for i, (la, lb) in enumerate(zip(a, b)):
+        if la != lb:
+            return False, f"first diff at line {i + 1}"
+    return False, f"line count {len(a)} (shipped) vs {len(b)} (regenerated)"
 
 
 def _open_db(path: Optional[str]) -> TuningDatabase:
@@ -117,17 +162,31 @@ def main(argv: Optional[List[str]] = None) -> int:
     p_tune.add_argument("--sig", nargs="+", default=[],
                         metavar="KEY=VALUE",
                         help="shape/dtype signature, e.g. m=1024 dtype=float32")
+    p_tune.add_argument("--target", default=None,
+                        help="hardware target name (default: the "
+                             "process-default target)")
 
     p_pre = add_sub("pretune",
                     help="sweep the default shape grid over every "
                          "registered kernel (one vectorized rank per "
                          "instance)")
     p_pre.add_argument("--out", default=None,
-                       help="also export the database to this JSONL "
-                            "(e.g. the shipped pretuned db)")
+                       help="also export the swept grid to this JSONL "
+                            "(default with --target/--all-targets: the "
+                            "shipped pretuned/<target>.jsonl)")
     p_pre.add_argument("--kernels", default=None,
                        help="comma-separated kernel_id filter "
                             "(default: all)")
+    p_pre.add_argument("--target", default=None,
+                       help="hardware target to pretune for (default: "
+                            "the process-default target)")
+    p_pre.add_argument("--all-targets", action="store_true",
+                       help=f"pretune every shipped target "
+                            f"{SHIPPED_TARGETS} in one run")
+    p_pre.add_argument("--verify", action="store_true",
+                       help="regenerate and diff bit-for-bit against "
+                            "the shipped JSONL instead of writing; "
+                            "exit 1 on any mismatch")
 
     args = ap.parse_args(argv)
     db = _open_db(args.db)
@@ -156,33 +215,65 @@ def main(argv: Optional[List[str]] = None) -> int:
             get_problem(args.kernel, **sig)  # fail fast on a bad signature
         except (KeyError, TypeError) as e:
             raise SystemExit(f"error: {e.args[0] if e.args else e}")
-        params = lookup_or_tune(args.kernel, db=db, **sig)
-        print(f"tuned {args.kernel} {sig} -> {params} "
+        spec = resolve_target(args.target)
+        params = lookup_or_tune(args.kernel, db=db, spec=spec, **sig)
+        print(f"tuned [{spec.name}] {args.kernel} {sig} -> {params} "
               f"(registered kernels: {registered()})")
     elif args.cmd == "pretune":
         import repro.kernels  # noqa: F401  (registers dispatch problems)
+        if args.all_targets and args.target:
+            raise SystemExit("--target and --all-targets are exclusive")
+        targets = (list(SHIPPED_TARGETS) if args.all_targets
+                   else [args.target])
+        if args.out and len(targets) > 1:
+            raise SystemExit("--out only applies to a single target; "
+                             "--all-targets writes each shipped path")
+        if args.verify and args.kernels:
+            raise SystemExit("--verify diffs the full shipped grid and "
+                             "cannot be combined with --kernels")
         keep = (set(args.kernels.split(",")) if args.kernels else None)
         cases = [(k, s) for k, s in default_pretune_cases()
                  if keep is None or k in keep]
         if not cases:
             raise SystemExit(f"no pretune cases match --kernels "
                              f"{args.kernels!r}; registered: {registered()}")
-        # Sweep into a private in-memory database so --out contains
-        # exactly the swept grid — a pre-existing disk database (stale
-        # shapes, other specs) must never leak into a shipped JSONL.
-        mem = TuningDatabase()
-        t0 = time.perf_counter()
-        for kernel_id, sig in cases:
-            params = lookup_or_tune(kernel_id, db=mem, **sig)
-            print(f"{kernel_id:<16} {sig} -> {params}")
-        dt = time.perf_counter() - t0
-        for rec in mem.records():        # write-through to the target db
-            db.put(rec)
-        print(f"pretuned {len(cases)} instances in {dt*1e3:.0f} ms "
-              f"-> {len(mem)} records into {db.disk.root}")
-        if args.out:
-            n = mem.export_jsonl(args.out)
-            print(f"exported {n} records -> {args.out}")
+        failures = []
+        for target in targets:
+            spec = resolve_target(target)
+            # Sweep into a private in-memory database so the export
+            # contains exactly the swept grid — a pre-existing disk
+            # database (stale shapes, other specs) must never leak into
+            # a shipped JSONL.
+            mem = TuningDatabase()
+            t0 = time.perf_counter()
+            for kernel_id, sig in cases:
+                params = lookup_or_tune(kernel_id, db=mem, spec=spec, **sig)
+                if not args.verify:
+                    print(f"[{spec.name}] {kernel_id:<16} {sig} -> {params}")
+            dt = time.perf_counter() - t0
+            text = _render_jsonl(mem)
+            if args.verify:
+                shipped = args.out or pretuned_path(spec)
+                ok, why = _diff_shipped(shipped, text)
+                print(f"[{spec.name}] verify {len(cases)} instances in "
+                      f"{dt*1e3:.0f} ms against {shipped}: "
+                      f"{'OK' if ok else 'MISMATCH (' + why + ')'}")
+                if not ok:
+                    failures.append(spec.name)
+                continue
+            for rec in mem.records():    # write-through to the target db
+                db.put(rec)
+            print(f"pretuned [{spec.name}] {len(cases)} instances in "
+                  f"{dt*1e3:.0f} ms -> {len(mem)} records into "
+                  f"{db.disk.root if db.disk else '<memory>'}")
+            out = args.out or (pretuned_path(spec)
+                               if args.all_targets or args.target else None)
+            if out:
+                with open(out, "w", encoding="utf-8") as f:
+                    f.write(text)
+                print(f"exported {len(mem)} records -> {out}")
+        if failures:
+            raise SystemExit(f"pretune --verify failed for: {failures}")
     return 0
 
 

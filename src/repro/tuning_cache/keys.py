@@ -17,7 +17,6 @@ alter a ranking, and every stale record silently becomes a miss.
 from __future__ import annotations
 
 import dataclasses
-import functools
 import hashlib
 import json
 from typing import Any, Dict, Optional
@@ -38,15 +37,21 @@ def canonical_json(obj: Any) -> str:
                       default=str)
 
 
-@functools.lru_cache(maxsize=None)
 def fingerprint_spec(spec: TpuSpec) -> str:
     """`<name>@<12-hex>` over every field of the hardware descriptor.
 
-    Memoized (TpuSpec is frozen/hashable): this runs on every
-    trace-time dispatch, and the hash of an immutable spec is constant.
+    Memoized on the instance (this runs on every trace-time dispatch,
+    and even hashing a frozen 20-field dataclass for an lru_cache probe
+    costs ~0.5 us): the fingerprint is pure content, so caching it on
+    the immutable spec is sound, and equal specs still produce equal
+    fingerprints because the digest covers the fields, not the id.
     """
-    payload = canonical_json(dataclasses.asdict(spec))
-    return f"{spec.name}@{hashlib.sha256(payload.encode()).hexdigest()[:12]}"
+    fp = spec.__dict__.get("_fp")
+    if fp is None:
+        payload = canonical_json(dataclasses.asdict(spec))
+        fp = f"{spec.name}@{hashlib.sha256(payload.encode()).hexdigest()[:12]}"
+        object.__setattr__(spec, "_fp", fp)     # frozen dataclass
+    return fp
 
 
 @dataclasses.dataclass(frozen=True)

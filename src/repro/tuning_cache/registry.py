@@ -22,9 +22,10 @@ from typing import Any, Callable, Dict, Optional, Tuple
 
 import numpy as np
 
-from repro.core.hw import TpuSpec, TPU_V5E
+from repro.core.hw import TpuSpec, resolve_target
 from repro.core.predict import CostModel, default_tpu_model, \
     static_times_batch
+from repro.core.target import use_target
 from repro.core.search import Params, SearchSpace
 from repro.tuning_cache.keys import CacheKey, fingerprint_spec, make_key
 from repro.tuning_cache.store import TuningDatabase, TuningRecord, now_unix
@@ -152,7 +153,7 @@ def _model_for(spec: TpuSpec) -> CostModel:
 
 
 def lookup_or_tune(kernel_id: str, *,
-                   spec: TpuSpec = TPU_V5E,
+                   spec: Optional[TpuSpec] = None,
                    mode: str = "static",
                    model: Optional[CostModel] = None,
                    db: Optional[TuningDatabase] = None,
@@ -160,35 +161,44 @@ def lookup_or_tune(kernel_id: str, *,
     """Resolve launch params for a kernel instance, cache-first.
 
     Returns a plain params dict ready to splat into the pallas_call
-    wrapper.  Identical ``(kernel_id, signature, spec)`` calls after the
-    first are pure cache hits: no space enumeration, no static_info
-    construction, no cost-model evaluation.  On the default db/model
-    path repeat calls are additionally memoized per process, skipping
-    even key construction — warm dispatch is a single dict probe.
+    wrapper.  ``spec=None`` tunes for the process-default target
+    (`repro.core.target.default_target`); the spec fingerprint is part
+    of the cache key and the dispatch memo, so per-target results are
+    fully isolated.  Identical ``(kernel_id, signature, spec)`` calls
+    after the first are pure cache hits: no space enumeration, no
+    static_info construction, no cost-model evaluation.  On the default
+    db/model path repeat calls are additionally memoized per process,
+    skipping even key construction — warm dispatch is a single dict
+    probe.
     """
+    if not isinstance(spec, TpuSpec):   # None or name: resolve once here
+        spec = resolve_target(spec)
     memo_key = None
-    if db is None and model is None:
-        from repro.tuning_cache import get_default_db
-        db = get_default_db()
-        try:
-            memo_key = (kernel_id, mode, fingerprint_spec(spec),
-                        tuple(sorted(signature.items())))
-            hit = _DISPATCH_MEMO.get(memo_key)
-            if hit is not None and hit[0] == db.generation:
-                return dict(hit[1])
-        except TypeError:       # unhashable signature value
-            memo_key = None
     if db is None:
-        from repro.tuning_cache import get_default_db
+        from repro.tuning_cache import _warm_pretuned_spec, get_default_db
         db = get_default_db()
+        if spec.name not in db.warmed_targets:     # once per (db, target)
+            _warm_pretuned_spec(db, spec)
+        if model is None:       # default db + default model: memo engages
+            try:
+                memo_key = (kernel_id, mode, fingerprint_spec(spec),
+                            tuple(sorted(signature.items())))
+                hit = _DISPATCH_MEMO.get(memo_key)
+                if hit is not None and hit[0] == db.generation:
+                    return dict(hit[1])
+            except TypeError:       # unhashable signature value
+                memo_key = None
     model = model or _model_for(spec)
     signature = normalize_signature(kernel_id, signature)
     key = make_key(kernel_id, spec=spec, mode=mode,
                    model_name=model.fingerprint(), **signature)
 
     def tune() -> TuningRecord:
-        problem = get_problem(kernel_id, **signature)
-        params, predicted, n = rank_space(problem, model)
+        # The problem's static_info builders resolve their own spec from
+        # the default target; pin it to the spec this key was built for.
+        with use_target(spec):
+            problem = get_problem(kernel_id, **signature)
+            params, predicted, n = rank_space(problem, model)
         return TuningRecord(key=key, params=dict(params),
                             predicted_s=predicted, space_size=n,
                             source=mode, created_unix=now_unix())

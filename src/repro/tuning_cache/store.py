@@ -141,6 +141,12 @@ class TuningDatabase:
         # clearing or re-warming the live default database invalidates
         # memoized answers instead of being silently shadowed.
         self.generation = 0
+        # Target names whose shipped pretuned JSONL has been folded in
+        # (`repro.tuning_cache.warm_pretuned`); per-instance so a fresh
+        # default database re-warms.  Deliberately NOT reset by clear():
+        # clearing a database must leave it empty, not silently
+        # re-warmed on the next lookup.
+        self.warmed_targets: set = set()
 
     # -- core ---------------------------------------------------------------
     def lookup(self, key: CacheKey) -> Optional[TuningRecord]:

@@ -94,3 +94,64 @@ def test_suggest_params_monotone_in_registers():
     lo = suggest_cuda_params(16, 0, MAXWELL_M40)
     hi = suggest_cuda_params(200, 0, MAXWELL_M40)
     assert lo["occ_star"] >= hi["occ_star"]
+
+
+# ---------------------------------------------------------------------------
+# All three Table I columns (not just the single-spec cases above)
+# ---------------------------------------------------------------------------
+
+_GPUS = [FERMI_M2050, KEPLER_K20, MAXWELL_M40]
+
+
+@pytest.mark.parametrize("gpu", _GPUS, ids=lambda g: g.name)
+def test_cuda_occupancy_over_every_table1_column(gpu):
+    """Eqs. 1-5 must be well-formed on every architecture: a modest
+    config reaches full occupancy, the three G_psi bounds are positive,
+    and occupancy is always active_warps / warps_per_mp."""
+    # 16 regs/thread keeps even Fermi's 32k register file off the
+    # critical path (32 regs already caps it at 32 of 48 warps).
+    occ = cuda_occupancy(256, 16, 0, gpu)
+    assert occ.occupancy == pytest.approx(1.0)
+    assert min(occ.g_warps, occ.g_regs, occ.g_shmem) > 0
+    for threads in (64, 128, 512, gpu.threads_per_block):
+        for regs in (0, 16, 63, gpu.regs_per_thread):
+            o = cuda_occupancy(threads, regs, 0, gpu)
+            assert 0.0 <= o.occupancy <= 1.0
+            assert o.occupancy == pytest.approx(
+                o.active_warps / gpu.warps_per_mp)
+            assert o.active_blocks <= gpu.blocks_per_mp
+
+
+@pytest.mark.parametrize("gpu", _GPUS, ids=lambda g: g.name)
+def test_cuda_occupancy_illegal_configs_per_column(gpu):
+    """Over-limit registers or shared memory zero the block count on
+    every column (Eq. 4 case 1 / Eq. 5 illegal case)."""
+    assert cuda_occupancy(256, gpu.regs_per_thread + 1, 0,
+                          gpu).active_blocks == 0
+    assert cuda_occupancy(256, 32, gpu.shmem_per_block + 1,
+                          gpu).active_blocks == 0
+
+
+@pytest.mark.parametrize("gpu", _GPUS, ids=lambda g: g.name)
+def test_suggest_cuda_params_over_every_table1_column(gpu):
+    """Table VII machinery on all three chips: a light kernel reaches
+    full occupancy with positive headroom; the register-heavy variant
+    never reports better occupancy than the light one."""
+    lo = suggest_cuda_params(16, 0, gpu)
+    assert lo["occ_star"] == pytest.approx(1.0)
+    assert lo["threads"], "no thread size achieved occ*"
+    assert lo["reg_headroom"] >= 0
+    assert lo["shmem_star"] > 0
+    hi = suggest_cuda_params(gpu.regs_per_thread, 1024, gpu)
+    assert 0.0 < hi["occ_star"] <= lo["occ_star"]
+    # every suggested thread size is a legal, warp-aligned block size
+    for t in lo["threads"] + hi["threads"]:
+        assert t % gpu.warp_size == 0
+        assert t <= gpu.threads_per_block
+
+
+def test_gpu_table_aliases_resolve_to_table1_columns():
+    assert GPU_TABLE["fermi"] is FERMI_M2050
+    assert GPU_TABLE["kepler"] is KEPLER_K20
+    assert GPU_TABLE["maxwell"] is MAXWELL_M40
+    assert len({id(GPU_TABLE[k]) for k in ("m2050", "k20", "m40")}) == 3
