@@ -12,8 +12,16 @@ Measures, per kernel instance, the trace-time cost of
 
 The ratio is the "tune once, serve millions" argument in one number —
 the warm path is what every production dispatch pays.
+
+The second section guards the `@tuned_kernel` redesign: it times the
+warm *memoized* dispatch (default-db path) of a kernel declared via the
+decorator (`stencil2d`) against a kernel registered as a hand-written
+legacy factory, and asserts the declarative path's warm overhead is
+within noise of the legacy one — the indirection must not hide a
+dispatch regression.
 """
 import statistics
+import sys
 import time
 
 from repro import tuning_cache
@@ -29,9 +37,35 @@ CASES = [
     ("jacobi3d", dict(z=128, y=128, x=128, dtype="float32")),
     ("flash_attention", dict(b=4, h=8, sq=2048, skv=2048, d=128,
                              causal=True, dtype="float32")),
+    ("stencil2d", dict(y=2048, x=2048, dtype="float32")),
 ]
 
 WARM_REPS = 200
+
+# A legacy-style hand-written factory for the same problem shape as
+# stencil2d, registered outside @tuned_kernel: the baseline the
+# decorated path is compared against.  Warm dispatch never calls the
+# factory at all, so any measured gap is pure indirection overhead.
+
+
+def _register_legacy_baseline():
+    import numpy as np
+    from repro.core.search import SearchSpace
+    from repro.kernels.common import pick_divisor_candidates
+    from repro.kernels.stencil2d import _stencil2d_analysis
+    from repro.kernels.common import block_info, block_info_batch
+
+    @tuning_cache.register("stencil2d_legacy")
+    def _factory(*, y: int, x: int, dtype: str = "float32"):
+        space = SearchSpace({
+            "by": pick_divisor_candidates(y, (8, 16, 32, 64, 128, 256)),
+        })
+        return tuning_cache.TuningProblem(
+            space=space,
+            static_info=lambda p: block_info(
+                **_stencil2d_analysis(p, y=y, x=x, dtype=dtype)),
+            static_info_batch=lambda c: block_info_batch(
+                **_stencil2d_analysis(c, y=y, x=x, dtype=dtype)))
 
 
 def bench_one(kernel_id, sig):
@@ -50,6 +84,17 @@ def bench_one(kernel_id, sig):
     return params, cold, warm
 
 
+def bench_memo(kernel_id, sig, reps=WARM_REPS):
+    """Warm dispatch through the default-db memo (the production path)."""
+    tuning_cache.lookup_or_tune(kernel_id, **sig)       # prime
+    warms = []
+    for _ in range(reps):
+        t0 = time.perf_counter()
+        tuning_cache.lookup_or_tune(kernel_id, **sig)
+        warms.append(time.perf_counter() - t0)
+    return statistics.median(warms)
+
+
 def main():
     print(f"{'kernel':<16} {'space tune (cold)':>18} {'cache hit (warm)':>17} "
           f"{'speedup':>8}   params")
@@ -58,6 +103,26 @@ def main():
         print(f"{kernel_id:<16} {cold*1e3:>15.2f} ms {warm*1e6:>14.1f} us "
               f"{cold/warm:>7.0f}x   {params}")
 
+    # -- decorated vs legacy-factory warm memo dispatch ----------------------
+    _register_legacy_baseline()
+    try:
+        sig = dict(y=2048, x=2048, dtype="float32")
+        t_decorated = bench_memo("stencil2d", sig)
+        t_legacy = bench_memo("stencil2d_legacy", sig)
+        ratio = t_decorated / t_legacy
+        print(f"\nwarm memoized dispatch: @tuned_kernel "
+              f"{t_decorated*1e6:.2f} us vs legacy factory "
+              f"{t_legacy*1e6:.2f} us ({ratio:.2f}x)")
+        # Both paths hit the identical memo probe; allow generous noise
+        # (CI boxes jitter) but catch a real regression hiding in the
+        # KernelSpec indirection.
+        assert t_decorated <= max(4.0 * t_legacy, 20e-6), (
+            f"decorated warm dispatch {t_decorated*1e6:.2f} us is not "
+            f"within noise of the legacy path {t_legacy*1e6:.2f} us")
+    finally:
+        tuning_cache.unregister("stencil2d_legacy")
+    return 0
+
 
 if __name__ == "__main__":
-    main()
+    sys.exit(main())

@@ -1,12 +1,15 @@
 """Quickstart: tune a CUDA-paper kernel on TPU rules, statically.
 
-    PYTHONPATH=src python examples/quickstart.py
+    PYTHONPATH=src python examples/quickstart.py [--smoke]
 
 Demonstrates the paper's headline capability: picking near-optimal
 launch parameters with ZERO kernel executions — plus the tuning
 database: the second identical tune is a pure cache hit — then
-verifies against an empirical sweep.
+verifies against an empirical sweep (``--smoke`` skips the sweep, for
+CI / interpret-mode runs).
 """
+import argparse
+
 import jax.numpy as jnp
 
 from repro import tuning_cache
@@ -14,7 +17,11 @@ from repro.core import KernelTuner
 from repro.kernels import make_tunable_atax
 
 
-def main():
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="skip the empirical sweep (CI / interpret mode)")
+    args = ap.parse_args(argv)
     # atax (paper Table IV): y = A^T (A x), fused single-pass kernel.
     kernel = make_tunable_atax(m=1024, n=512, dtype=jnp.float32)
     tuner = KernelTuner(kernel, repeats=3)
@@ -34,6 +41,10 @@ def main():
     print(f"   from_cache={rep_c.from_cache} params={rep_c.best_params} "
           f"db stats={stats}")
     assert rep_c.from_cache and rep_c.best_params == rep.best_params
+
+    if args.smoke:
+        print("\n(--smoke: skipping the hybrid/empirical sweeps)")
+        return
 
     print("\n== hybrid mode (static shortlist, measure top-2) ==")
     rep_h = tuner.tune(mode="hybrid", empirical_budget=2)

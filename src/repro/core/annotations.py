@@ -27,7 +27,7 @@ from typing import Callable, Dict, Optional
 from repro.core.autotuner import KernelStaticInfo, TunableKernel
 from repro.core.search import SearchSpace
 
-__all__ = ["parse_tuning_spec", "annotate"]
+__all__ = ["parse_tuning_spec", "annotate", "annotate_kernel"]
 
 _BLOCK_RE = re.compile(
     r"def\s+performance_params\s*\{(.*?)\}", re.DOTALL)
@@ -82,3 +82,22 @@ def annotate(name: str,
     return TunableKernel(name=name, space=parse_tuning_spec(spec),
                          build=build, static_info=static_info,
                          make_inputs=make_inputs, reference=reference)
+
+
+def annotate_kernel(kernel_id: str, spec: str, **declaration):
+    """Bridge to the declarative kernel API: mint a full
+    `repro.kernels.api.KernelSpec` registration from a PerfTuning
+    annotation string.
+
+    Returns a decorator equivalent to
+    ``@tuned_kernel(kernel_id, space=<parsed spec>, **declaration)`` —
+    the paper's annotation workflow (Fig. 3) front-ending the whole
+    static-tuning stack: trace-time dispatch, registry problem,
+    pretuning, and `KernelTuner` packaging all derive from it.  The
+    annotation's params become literal axes (``range(...)`` and
+    bracketed lists, upper-exclusive), validated eagerly here so a
+    typo'd spec fails at the declaration site.
+    """
+    parse_tuning_spec(spec)          # fail fast with the parser's error
+    from repro.kernels.api import tuned_kernel
+    return tuned_kernel(kernel_id, space=spec, **declaration)

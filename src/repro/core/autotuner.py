@@ -252,12 +252,14 @@ class KernelTuner:
         disambiguate without the factory having to name them all.
         """
         info = self._info(self._mid_params())
-        parts = [repr(getattr(info.mix, f)) for f in (
+        # normalize through float(): analytic builders may hand back
+        # numpy scalars, whose repr differs across numpy majors
+        parts = [repr(float(getattr(info.mix, f))) for f in (
             "mxu_flops", "vpu_flops", "trans_flops", "hbm_bytes",
             "vmem_bytes", "ctrl_ops", "reg_ops")]
         if info.occupancy is not None:
-            parts.append(repr(info.occupancy.predicted_step_time))
-            parts.append(repr(info.occupancy.grid_steps))
+            parts.append(repr(float(info.occupancy.predicted_step_time)))
+            parts.append(repr(int(info.occupancy.grid_steps)))
         import hashlib
         return hashlib.sha256("|".join(parts).encode()).hexdigest()[:12]
 

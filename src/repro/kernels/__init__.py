@@ -1,9 +1,30 @@
 """Pallas TPU kernels: the paper's Table IV benchmark kernels (atax,
 BiCG, jacobi3d/ex14FJ, matVec2D) plus the LM hot-spots (matmul, flash
-attention).  Each module ships the pallas_call, an analytic static_info
-for the tuner, and a TunableKernel factory; oracles live in ref.py and
-jit'd wrappers in ops.py."""
-from repro.kernels import ops, ref
+attention) and the post-redesign stencil2d.  Each module is one
+`@tuned_kernel` declaration (see `repro.kernels.api`): the pallas_call,
+an array-agnostic static analyzer, and the shapes to pre-tune — the
+dispatch wrapper, registry problem, and TunableKernel packaging are all
+derived.  Oracles live in ref.py; the generated dispatch entry points
+in ops.py.
+
+Every non-private module in this package is imported here (so its
+declaration registers), which is what makes "drop a decorated module in
+``kernels/`` and call ``ops.<kernel_id>``" work with zero edits to any
+other file.
+"""
+import importlib
+import pkgutil
+
+# ops re-exports the registry, so it must come after every declaration;
+# everything else registers (or is inert) on import.
+_DEFERRED = {"ops"}
+for _mod in pkgutil.iter_modules(__path__):
+    if _mod.name.startswith("_") or _mod.name in _DEFERRED:
+        continue
+    importlib.import_module(f"{__name__}.{_mod.name}")
+
+from repro.kernels import api, ops, ref
+from repro.kernels.api import tuned_kernel, divisors, KernelSpec
 from repro.kernels.matmul import matmul_pallas, make_tunable_matmul
 from repro.kernels.matvec import matvec_pallas, make_tunable_matvec
 from repro.kernels.atax import atax_pallas, make_tunable_atax
@@ -11,6 +32,8 @@ from repro.kernels.bicg import bicg_pallas, make_tunable_bicg
 from repro.kernels.jacobi3d import jacobi3d_pallas, make_tunable_jacobi3d
 from repro.kernels.flash_attention import (flash_attention_pallas,
                                            make_tunable_flash)
+from repro.kernels.stencil2d import (stencil2d_pallas,
+                                     make_tunable_stencil2d)
 
 TUNABLE_FACTORIES = {
     "matmul": make_tunable_matmul,
@@ -19,4 +42,5 @@ TUNABLE_FACTORIES = {
     "bicg": make_tunable_bicg,
     "jacobi3d": make_tunable_jacobi3d,
     "flash": make_tunable_flash,
+    "stencil2d": make_tunable_stencil2d,
 }

@@ -1,0 +1,496 @@
+"""`@tuned_kernel` — one declarative registration for the whole stack.
+
+The paper's front door is an *annotation*: an Orio user declares a
+tunable region plus its parameter space and the static analyzer does
+the rest.  This module is that posture made structural for Pallas
+kernels.  One declaration site::
+
+    @tuned_kernel(
+        "stencil2d",
+        space={"by": divisors("y", (8, 16, 32, 64, 128, 256))},
+        signature=lambda u, **_: dict(y=u.shape[0], x=u.shape[1],
+                                      dtype=str(u.dtype)),
+        static_info=_stencil2d_analysis,     # (p, *, y, x, dtype) -> kwargs
+        make_inputs=_stencil2d_inputs,
+        reference=stencil2d_ref,
+        pretune=(dict(y=512, x=512, dtype="float32"), ...),
+    )
+    def stencil2d_pallas(u, *, by=32, interpret=None): ...
+
+derives everything the six in-tree kernels used to wire by hand across
+four layers:
+
+* the **trace-time dispatch wrapper** (`KernelSpec.op`, re-exported as
+  ``repro.kernels.ops.<kernel_id>``): extracts the signature from the
+  call arguments, resolves launch params through the tuning database
+  for the active hardware target, falls back to largest-divisor
+  defaults if dispatch fails;
+* the **dispatch registry entry** (`TuningProblem` factory +
+  signature normalization) consumed by
+  `repro.tuning_cache.lookup_or_tune`;
+* **scalar and batched static analysis** from one array-agnostic
+  ``static_info`` builder — the same code path produces the
+  `KernelStaticInfo` object and the struct-of-arrays
+  `BatchStaticInfo`, so batch/scalar parity holds by construction;
+* **`TunableKernel` construction** (`KernelSpec.tunable`) for the full
+  `KernelTuner` (static / hybrid / empirical modes);
+* the **largest-divisor fallback params** and the kernel's entries in
+  the shipped per-target pre-tuned grid (``pretune=``).
+
+``space`` also accepts an Orio-style ``PerfTuning`` annotation string
+(paper Fig. 3); see `repro.core.annotations.parse_tuning_spec`.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+import inspect
+import logging
+import threading
+from typing import (Any, Callable, Dict, Mapping, Optional, Sequence,
+                    Tuple, Union)
+
+import numpy as np
+
+from repro import tuning_cache
+from repro.core.annotations import parse_tuning_spec
+from repro.core.autotuner import KernelStaticInfo, TunableKernel
+from repro.core.search import Params, SearchSpace
+from repro.core.target import default_target
+from repro.kernels.common import (BatchStaticInfo, block_info,
+                                  block_info_batch,
+                                  pick_divisor_candidates)
+
+__all__ = [
+    "KernelSpec", "tuned_kernel", "divisors", "Divisors",
+    "get_spec", "registered_kernels", "unregister",
+    "reset_dispatch_failure_log",
+]
+
+_log = logging.getLogger(__name__)
+
+
+# ---------------------------------------------------------------------------
+# Axis declarations
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class Divisors:
+    """A tunable axis whose candidates must tile a signature dimension.
+
+    At problem-construction time the candidate list is filtered to the
+    values that divide ``signature[dim]`` (BlockSpec-exact tiling); if
+    none divide, the dimension itself is the only candidate.  The
+    derived fallback param is the largest surviving candidate — the
+    same "largest divisor" rule the hand-written ops used.
+    """
+
+    dim: str
+    candidates: Tuple[int, ...]
+
+    def materialize(self, signature: Mapping[str, Any]) -> Tuple[int, ...]:
+        if self.dim not in signature:
+            raise KeyError(
+                f"axis is tied to signature dim {self.dim!r}, which the "
+                f"signature {dict(signature)} does not carry")
+        return pick_divisor_candidates(int(signature[self.dim]),
+                                       self.candidates)
+
+    def fallback(self, signature: Mapping[str, Any]) -> int:
+        return max(self.materialize(signature))
+
+
+def divisors(dim: str, candidates: Sequence[int]) -> Divisors:
+    """Declare an axis of block sizes that must divide ``dim``."""
+    return Divisors(dim=dim, candidates=tuple(candidates))
+
+
+class _Literal:
+    """A fixed candidate tuple (signature-independent axis)."""
+
+    __slots__ = ("values",)
+
+    def __init__(self, values: Sequence[Any]):
+        self.values = tuple(values)
+        if not self.values:
+            raise ValueError("literal axis needs at least one candidate")
+
+    def materialize(self, signature: Mapping[str, Any]) -> Tuple[Any, ...]:
+        return self.values
+
+    def fallback(self, signature: Mapping[str, Any]) -> Any:
+        return self.values[len(self.values) // 2]
+
+
+def _coerce_space(kernel_id: str, space) -> Dict[str, Any]:
+    """Accept {name: Divisors | sequence} or an Orio annotation string."""
+    if isinstance(space, str):
+        space = {name: tuple(vals)
+                 for name, vals in parse_tuning_spec(space).axes.items()}
+    if not isinstance(space, Mapping) or not space:
+        raise ValueError(
+            f"@tuned_kernel({kernel_id!r}): space must declare at least "
+            f"one tunable axis (a dict of axes or a PerfTuning "
+            f"annotation string), got {space!r}")
+    out: Dict[str, Any] = {}
+    for name, axis in space.items():
+        if isinstance(axis, Divisors):
+            out[name] = axis
+        elif isinstance(axis, (tuple, list)):
+            out[name] = _Literal(axis)
+        else:
+            raise ValueError(
+                f"@tuned_kernel({kernel_id!r}): axis {name!r} must be "
+                f"divisors(...) or a sequence of candidates, "
+                f"got {axis!r}")
+    return out
+
+
+# ---------------------------------------------------------------------------
+# Dispatch-failure log (shared by every generated op wrapper)
+# ---------------------------------------------------------------------------
+
+# kernel_ids whose dispatch failure already produced a full traceback; a
+# persistently broken registry entry logs once per process, not once per
+# trace.  Guarded by a lock (ops dispatch from model threads) and
+# cleared by `reset_dispatch_failure_log` / `clear_dispatch_memo`.
+_logged_dispatch_failures: set = set()
+_failures_lock = threading.Lock()
+
+
+def reset_dispatch_failure_log() -> None:
+    """Forget which kernels already logged a dispatch failure (tests)."""
+    with _failures_lock:
+        _logged_dispatch_failures.clear()
+
+
+tuning_cache.registry.on_dispatch_memo_clear(reset_dispatch_failure_log)
+
+
+def _resolve(kernel_id: str, **signature) -> Dict:
+    """Trace-time launch-config lookup for the active hardware target;
+    never raises (returns {} on failure so the fallback params apply)."""
+    try:
+        return tuning_cache.lookup_or_tune(
+            kernel_id, spec=default_target(), **signature)
+    except Exception:
+        with _failures_lock:
+            first = kernel_id not in _logged_dispatch_failures
+            if first:
+                _logged_dispatch_failures.add(kernel_id)
+        if first:
+            _log.exception("tuning-cache dispatch failed for %s %s; "
+                           "using fallback defaults (further failures "
+                           "for this kernel log at DEBUG)",
+                           kernel_id, signature)
+        else:
+            _log.debug("tuning-cache dispatch failed for %s %s; "
+                       "using fallback defaults", kernel_id, signature)
+        return {}
+
+
+# ---------------------------------------------------------------------------
+# KernelSpec
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass
+class KernelSpec:
+    """Everything the tuning stack derives from one `@tuned_kernel`.
+
+    Contract of the declared pieces (DESIGN.md §10):
+
+    * ``fn(*arrays, **launch_params)`` — the Pallas entry point; launch
+      params are keywords named exactly like the space axes.
+    * ``extract_signature(*args, **kwargs) -> dict`` — maps a concrete
+      call to the shape/dtype signature.  Works on tracers (shapes and
+      dtypes only).
+    * ``analysis(p, **signature) -> dict`` — array-agnostic static
+      analyzer: ``p`` maps axis names to scalars (one config) or (N,)
+      arrays (a whole lattice); the return value is splatted into
+      `repro.kernels.common.block_info` / `block_info_batch`.  Its
+      keyword parameters *are* the signature schema: required names
+      and defaults are taken from ``inspect.signature(analysis)``.
+    * ``make_inputs(key, **signature) -> tuple`` — random inputs for
+      empirical/hybrid tuning (optional; static-only kernels may omit
+      it).
+    * ``reference`` — the pure-jnp oracle (optional).
+    * ``pretune`` — signatures swept into the shipped per-target
+      pre-tuned databases by ``python -m repro.tuning_cache pretune``.
+    """
+
+    kernel_id: str
+    fn: Callable[..., Any]
+    space: Dict[str, Any]
+    extract_signature: Callable[..., Dict[str, Any]]
+    analysis: Callable[..., Dict[str, Any]]
+    fallback: Optional[Callable[..., Dict[str, Any]]] = None
+    make_inputs: Optional[Callable[..., tuple]] = None
+    reference: Optional[Callable[..., Any]] = None
+    pretune: Tuple[Dict[str, Any], ...] = ()
+
+    def __post_init__(self):
+        if not self.kernel_id or not isinstance(self.kernel_id, str):
+            raise ValueError(f"kernel_id must be a non-empty string, "
+                             f"got {self.kernel_id!r}")
+        self.space = _coerce_space(self.kernel_id, self.space)
+        # The analysis builder's keyword params are the signature
+        # schema — same binding semantics the old per-kernel factories
+        # got from inspect.signature(factory).
+        params = list(inspect.signature(self.analysis).parameters.values())
+        if not params:
+            raise ValueError(
+                f"@tuned_kernel({self.kernel_id!r}): static_info builder "
+                f"must take (params, **signature)")
+        self._sig_schema = inspect.Signature(params[1:])
+        self.pretune = tuple(dict(s) for s in self.pretune)
+        self._op = None
+        self._fn_kw = None
+        self._fallback_cache: Dict[Tuple, Dict[str, Any]] = {}
+
+    # -- signature plumbing -------------------------------------------------
+    def normalize(self, signature: Mapping[str, Any]) -> Dict[str, Any]:
+        """Bind a partial signature through the declared defaults.
+
+        Keys must be identical no matter how the signature was spelled:
+        ``tune --sig m=1024 ...`` (dtype omitted, default applies) has
+        to produce the same record as the op passing ``dtype='float32'``
+        explicitly, or CLI-produced databases would be permanent cache
+        misses at trace time.  Raises TypeError on missing or unknown
+        keys, like the old factory binding did.
+        """
+        ba = self._sig_schema.bind(**signature)
+        ba.apply_defaults()
+        return dict(ba.arguments)
+
+    # -- static analysis (scalar and batched, from one builder) -------------
+    def static_info(self, params: Params, **signature) -> KernelStaticInfo:
+        sig = self.normalize(signature)
+        return block_info(**self.analysis(params, **sig))
+
+    def static_info_batch(self, cols: Mapping[str, np.ndarray],
+                          **signature) -> BatchStaticInfo:
+        sig = self.normalize(signature)
+        return block_info_batch(**self.analysis(cols, **sig))
+
+    # -- derived artifacts ---------------------------------------------------
+    def search_space(self, **signature) -> SearchSpace:
+        sig = self.normalize(signature)
+        return SearchSpace({name: axis.materialize(sig)
+                            for name, axis in self.space.items()})
+
+    def fallback_params(self, **signature) -> Dict[str, Any]:
+        """Launch params used when database dispatch is unavailable.
+
+        Derived default: the largest dividing candidate per axis,
+        backed off (largest block first) until the kernel's own static
+        analysis says the working set fits VMEM — so the failure path
+        can never emit a launch the chip rejects.  Memoized per
+        signature; an explicit ``fallback=`` declaration overrides.
+        """
+        sig = self.normalize(signature)
+        if self.fallback is not None:
+            return dict(self.fallback(**sig))
+        try:
+            memo_key = tuple(sorted(sig.items()))
+            hit = self._fallback_cache.get(memo_key)
+            if hit is not None:
+                return dict(hit)
+        except TypeError:               # unhashable signature value
+            memo_key = None
+        cands = {name: axis.materialize(sig)
+                 for name, axis in self.space.items()}
+        numeric = all(isinstance(v, (int, np.integer))
+                      for vals in cands.values() for v in vals)
+        if not numeric:                  # literal axes: per-axis defaults
+            out = {name: axis.fallback(sig)
+                   for name, axis in self.space.items()}
+        else:
+            cands = {name: tuple(sorted(set(v)))
+                     for name, v in cands.items()}
+            idx = {name: len(v) - 1 for name, v in cands.items()}
+            current = lambda: {name: cands[name][i]
+                               for name, i in idx.items()}
+            try:
+                while not self.static_info(current(), **sig).feasible():
+                    movable = [n for n in idx if idx[n] > 0]
+                    if not movable:
+                        break            # smallest config; nothing left
+                    biggest = max(movable, key=lambda n: cands[n][idx[n]])
+                    idx[biggest] -= 1
+            except Exception:
+                # analyzer unavailable: the plain largest-divisor rule
+                # is still a valid tiling, just possibly large
+                idx = {name: len(v) - 1 for name, v in cands.items()}
+            out = current()
+        if memo_key is not None:
+            self._fallback_cache[memo_key] = dict(out)
+        return out
+
+    def problem(self, **signature) -> "tuning_cache.TuningProblem":
+        """The dispatch-registry factory the stack used to hand-write."""
+        sig = self.normalize(signature)
+        return tuning_cache.TuningProblem(
+            space=self.search_space(**sig),
+            static_info=lambda p: self.static_info(p, **sig),
+            static_info_batch=lambda c: self.static_info_batch(c, **sig))
+
+    def _fn_keywords(self) -> frozenset:
+        if self._fn_kw is None:
+            ps = inspect.signature(self.fn).parameters.values()
+            self._fn_kw = frozenset(
+                p.name for p in ps
+                if p.kind in (inspect.Parameter.POSITIONAL_OR_KEYWORD,
+                              inspect.Parameter.KEYWORD_ONLY))
+        return self._fn_kw
+
+    @property
+    def op(self) -> Callable[..., Any]:
+        """The trace-time dispatch wrapper (what ``ops.py`` re-exports).
+
+        Resolves launch params through the tuning database for the
+        active target on every trace; ``tuned_params`` injects a
+        :class:`~repro.core.autotuner.TuningReport`'s best_params
+        explicitly, bypassing the database.  If dispatch fails the
+        largest-divisor fallback applies, so dispatch can never break a
+        numerically-correct call.
+        """
+        if self._op is None:
+            axis_names = frozenset(self.space)
+
+            def op(*args, tuned_params: Optional[Dict] = None, **kw):
+                sig = self.extract_signature(*args, **kw)
+                p = tuned_params if tuned_params is not None \
+                    else _resolve(self.kernel_id, **sig)
+                launch = {k: v for k, v in p.items() if k in axis_names}
+                # dispatch failed or returned partial params: fill the
+                # gaps with the feasible largest-divisor fallback
+                if len(launch) < len(axis_names):
+                    launch = {**self.fallback_params(**sig), **launch}
+                return self.fn(*args, **launch, **kw)
+
+            op.__name__ = self.kernel_id
+            op.__qualname__ = self.kernel_id
+            op.__doc__ = (f"Tuning-database-dispatched entry point for "
+                          f"{self.kernel_id!r} (see repro.kernels.api)."
+                          + (f"\n\n{self.fn.__doc__}"
+                             if getattr(self.fn, "__doc__", None) else ""))
+            op.spec = self
+            self._op = op
+        return self._op
+
+    def tunable(self, *, seed: int = 0,
+                space: Optional[SearchSpace] = None,
+                name: Optional[str] = None, **signature) -> TunableKernel:
+        """Package this kernel as a `TunableKernel` for `KernelTuner`.
+
+        ``space`` narrows the search space (defaults to the full
+        dispatch space); static, hybrid, and empirical modes all work
+        when ``make_inputs`` was declared.
+        """
+        sig = self.normalize(signature)
+        sp = space if space is not None else self.search_space(**sig)
+        if isinstance(sp, Mapping):
+            sp = SearchSpace(dict(sp))
+        fwd = {k: v for k, v in sig.items() if k in self._fn_keywords()}
+
+        def build(p: Params) -> Callable[..., Any]:
+            return functools.partial(
+                self.fn, **fwd, **{k: p[k] for k in sp.names})
+
+        if self.make_inputs is None:
+            def make_inputs():
+                raise NotImplementedError(
+                    f"@tuned_kernel({self.kernel_id!r}) declared no "
+                    f"make_inputs=; empirical/hybrid tuning needs one")
+        else:
+            def make_inputs():
+                import jax
+                return self.make_inputs(jax.random.PRNGKey(seed), **sig)
+
+        if name is None:
+            dims = "x".join(str(v) for v in sig.values()
+                            if isinstance(v, (int, np.integer)))
+            name = f"{self.kernel_id}_{dims}" if dims else self.kernel_id
+        return TunableKernel(
+            name=name, space=sp, build=build,
+            static_info=lambda p: self.static_info(p, **sig),
+            make_inputs=make_inputs, reference=self.reference,
+            static_info_batch=lambda c: self.static_info_batch(c, **sig))
+
+
+# ---------------------------------------------------------------------------
+# The decorator + the spec registry
+# ---------------------------------------------------------------------------
+
+_SPECS: Dict[str, KernelSpec] = {}
+
+
+def tuned_kernel(kernel_id: str, *,
+                 space: Union[Mapping[str, Any], str],
+                 signature: Callable[..., Dict[str, Any]],
+                 static_info: Callable[..., Dict[str, Any]],
+                 fallback: Optional[Callable[..., Dict[str, Any]]] = None,
+                 make_inputs: Optional[Callable[..., tuple]] = None,
+                 reference: Optional[Callable[..., Any]] = None,
+                 pretune: Sequence[Mapping[str, Any]] = ()):
+    """Declare a Pallas kernel as a first-class tuning citizen.
+
+    Decorating ``<name>_pallas`` registers a :class:`KernelSpec` under
+    ``kernel_id`` and derives the dispatch wrapper, registry factory,
+    tunable-kernel packaging, and fallback params — see the module
+    docstring.  The decorated function is returned unchanged (with a
+    ``.spec`` attribute when the object allows it), so explicit-block
+    callers and tests keep working.
+    """
+    def deco(fn: Callable[..., Any]) -> Callable[..., Any]:
+        spec = KernelSpec(kernel_id=kernel_id, fn=fn, space=space,
+                          extract_signature=signature, analysis=static_info,
+                          fallback=fallback, make_inputs=make_inputs,
+                          reference=reference, pretune=tuple(pretune))
+        register_spec(spec)
+        try:
+            fn.spec = spec
+        except AttributeError:      # exotic callables may refuse attrs
+            pass
+        return fn
+    return deco
+
+
+def register_spec(spec: KernelSpec) -> KernelSpec:
+    """Register a `KernelSpec` with the dispatch registry (duplicate
+    kernel_ids raise — two declarations must not silently shadow)."""
+    tuning_cache.registry.register_entry(spec.kernel_id, spec)
+    _SPECS[spec.kernel_id] = spec
+    return spec
+
+
+def get_spec(kernel_id: str, default: Any = dataclasses.MISSING
+             ) -> KernelSpec:
+    spec = _SPECS.get(kernel_id)
+    if spec is None:
+        if default is not dataclasses.MISSING:
+            return default
+        raise KeyError(f"no @tuned_kernel declaration for {kernel_id!r}; "
+                       f"declared: {registered_kernels()}")
+    return spec
+
+
+def registered_kernels() -> Tuple[str, ...]:
+    """kernel_ids declared via `@tuned_kernel`, sorted."""
+    return tuple(sorted(_SPECS))
+
+
+def unregister(kernel_id: str) -> None:
+    """Remove a declaration (tests / benchmarks cleaning up after
+    themselves, or deliberately replacing one); missing ids are a
+    no-op.  Also evicts the op wrapper `ops.__getattr__` may have
+    memoized into the module, so a re-declaration under the same id
+    dispatches through the new spec rather than a stale global."""
+    import sys
+    _SPECS.pop(kernel_id, None)
+    tuning_cache.registry.unregister(kernel_id)
+    ops_mod = sys.modules.get("repro.kernels.ops")
+    if ops_mod is not None:
+        ops_mod.__dict__.pop(kernel_id, None)

@@ -5,8 +5,7 @@ sequential sweep over row blocks computes the fused result with A read
 exactly **once** — twice the arithmetic intensity of the two-matmul
 formulation.  x and the y accumulator live in VMEM for the whole sweep.
 
-Tunables: bm (row-block height), bn (column panel width; columns are a
-second sequential grid axis so wide matrices stream through VMEM).
+Tunables: bm (row-block height).
 """
 from __future__ import annotations
 
@@ -19,16 +18,15 @@ import numpy as np
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
-from repro import tuning_cache
 from repro.core.autotuner import KernelStaticInfo, TunableKernel
 from repro.core.search import SearchSpace
-from repro.kernels.common import (BatchStaticInfo, block_info,
-                                  block_info_batch, cdiv, default_interpret,
-                                  pick_divisor_candidates,
-                                  tpu_compiler_params)
+from repro.kernels.api import divisors, get_spec, tuned_kernel
+from repro.kernels.common import (block_info, cdiv, default_interpret,
+                                  pick_divisor_candidates, require_shape,
+                                  require_tiling, tpu_compiler_params)
+from repro.kernels.ref import atax_ref
 
-__all__ = ["atax_pallas", "atax_static_info", "atax_static_info_batch",
-           "make_tunable_atax"]
+__all__ = ["atax_pallas", "atax_static_info", "make_tunable_atax"]
 
 
 def _atax_kernel_rowsweep(a_ref, x_ref, y_ref, acc_ref):
@@ -50,6 +48,41 @@ def _atax_kernel_rowsweep(a_ref, x_ref, y_ref, acc_ref):
         y_ref[...] = acc_ref[...].astype(y_ref.dtype)
 
 
+def _atax_analysis(p, *, m: int, n: int, dtype: str = "float32"):
+    """Static analysis of one config (scalars) or a lattice ((N,) cols)."""
+    bm = np.minimum(np.asarray(p["bm"], dtype=np.int64), m)
+    steps = cdiv(m, bm)
+    return dict(
+        in_blocks=[(bm, n), (n, 1)],
+        out_blocks=[(n, 1)],
+        in_dtypes=[dtype, dtype],
+        out_dtypes=[dtype],
+        flops_per_step=2.0 * bm * n + 2.0 * n * bm,   # A@x then Aᵀ@t
+        grid_steps=steps,
+        scratch_bytes=n * 4,
+    )
+
+
+def _atax_inputs(key, *, m: int, n: int, dtype: str = "float32"):
+    ka, kx = jax.random.split(key)
+    dt = np.dtype(dtype)
+    return (jax.random.normal(ka, (m, n), dt) / (n ** 0.5),
+            jax.random.normal(kx, (n, 1), dt))
+
+
+@tuned_kernel(
+    "atax",
+    space={"bm": divisors("m", (16, 32, 64, 128, 256, 512, 1024))},
+    signature=lambda a, x, **_: dict(m=a.shape[0], n=a.shape[1],
+                                     dtype=str(a.dtype)),
+    static_info=_atax_analysis,
+    make_inputs=_atax_inputs,
+    reference=atax_ref,
+    pretune=tuple(dict(m=s, n=s, dtype=dt)
+                  for s in (512, 1024, 2048, 4096)
+                  for dt in ("float32", "bfloat16"))
+    + (dict(m=1024, n=512, dtype="float32"),),
+)
 @functools.partial(jax.jit, static_argnames=("bm", "interpret"))
 def atax_pallas(a: jax.Array, x: jax.Array, *, bm: int = 256,
                 interpret: bool | None = None) -> jax.Array:
@@ -61,9 +94,9 @@ def atax_pallas(a: jax.Array, x: jax.Array, *, bm: int = 256,
     if interpret is None:
         interpret = default_interpret()
     m, n = a.shape
-    assert x.shape == (n, 1)
+    require_shape("atax_pallas", "x", x.shape, (n, 1))
     bm = min(bm, m)
-    assert m % bm == 0
+    require_tiling("atax_pallas", {"m": m}, {"bm": bm})
     grid = (m // bm,)
     return pl.pallas_call(
         _atax_kernel_rowsweep,
@@ -80,33 +113,9 @@ def atax_pallas(a: jax.Array, x: jax.Array, *, bm: int = 256,
 
 def atax_static_info(m: int, n: int, dtype, params: Dict
                      ) -> KernelStaticInfo:
-    bm = min(params["bm"], m)
-    steps = cdiv(m, bm)
-    return block_info(
-        in_blocks=[(bm, n), (n, 1)],
-        out_blocks=[(n, 1)],
-        in_dtypes=[dtype, dtype],
-        out_dtypes=[dtype],
-        flops_per_step=2.0 * bm * n + 2.0 * n * bm,   # A@x then Aᵀ@t
-        grid_steps=steps,
-        scratch_bytes=n * 4,
-    )
-
-
-def atax_static_info_batch(m: int, n: int, dtype,
-                           cols) -> BatchStaticInfo:
-    """`atax_static_info` over a whole config lattice in one pass."""
-    bm = np.minimum(np.asarray(cols["bm"], dtype=np.int64), m)
-    steps = cdiv(m, bm)
-    return block_info_batch(
-        in_blocks=[(bm, n), (n, 1)],
-        out_blocks=[(n, 1)],
-        in_dtypes=[dtype, dtype],
-        out_dtypes=[dtype],
-        flops_per_step=2.0 * bm * n + 2.0 * n * bm,   # A@x then Aᵀ@t
-        grid_steps=steps,
-        scratch_bytes=n * 4,
-    )
+    """Scalar static info for one configuration (wrapper over the
+    declared analysis; kept as a stable public helper)."""
+    return block_info(**_atax_analysis(params, m=m, n=n, dtype=dtype))
 
 
 def make_tunable_atax(m: int = 2048, n: int = 2048,
@@ -114,36 +123,6 @@ def make_tunable_atax(m: int = 2048, n: int = 2048,
     space = SearchSpace({
         "bm": pick_divisor_candidates(m, (32, 64, 128, 256, 512, 1024)),
     })
-
-    def build(p):
-        return functools.partial(atax_pallas, bm=p["bm"])
-
-    def static_info(p):
-        return atax_static_info(m, n, dtype, p)
-
-    def static_info_batch(cols):
-        return atax_static_info_batch(m, n, dtype, cols)
-
-    def make_inputs():
-        kk = jax.random.PRNGKey(seed)
-        ka, kx = jax.random.split(kk)
-        return (jax.random.normal(ka, (m, n), dtype) / (n ** 0.5),
-                jax.random.normal(kx, (n, 1), dtype))
-
-    from repro.kernels.ref import atax_ref
-    return TunableKernel(name=f"atax_{m}x{n}", space=space, build=build,
-                         static_info=static_info, make_inputs=make_inputs,
-                         reference=atax_ref,
-                         static_info_batch=static_info_batch)
-
-
-@tuning_cache.register("atax")
-def _dispatch_atax(*, m: int, n: int,
-                   dtype: str = "float32") -> tuning_cache.TuningProblem:
-    space = SearchSpace({
-        "bm": pick_divisor_candidates(m, (16, 32, 64, 128, 256, 512, 1024)),
-    })
-    return tuning_cache.TuningProblem(
-        space=space,
-        static_info=lambda p: atax_static_info(m, n, dtype, p),
-        static_info_batch=lambda c: atax_static_info_batch(m, n, dtype, c))
+    return get_spec("atax").tunable(
+        m=m, n=n, dtype=np.dtype(dtype).name, seed=seed,
+        space=space, name=f"atax_{m}x{n}")

@@ -15,16 +15,15 @@ import numpy as np
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
-from repro import tuning_cache
 from repro.core.autotuner import KernelStaticInfo, TunableKernel
 from repro.core.search import SearchSpace
-from repro.kernels.common import (BatchStaticInfo, block_info,
-                                  block_info_batch, cdiv, default_interpret,
-                                  pick_divisor_candidates,
-                                  tpu_compiler_params)
+from repro.kernels.api import divisors, get_spec, tuned_kernel
+from repro.kernels.common import (block_info, cdiv, default_interpret,
+                                  pick_divisor_candidates, require_shape,
+                                  require_tiling, tpu_compiler_params)
+from repro.kernels.ref import bicg_ref
 
-__all__ = ["bicg_pallas", "bicg_static_info", "bicg_static_info_batch",
-           "make_tunable_bicg"]
+__all__ = ["bicg_pallas", "bicg_static_info", "make_tunable_bicg"]
 
 
 def _bicg_kernel(a_ref, p_ref, r_ref, q_ref, s_ref, acc_ref):
@@ -46,6 +45,41 @@ def _bicg_kernel(a_ref, p_ref, r_ref, q_ref, s_ref, acc_ref):
         s_ref[...] = acc_ref[...].astype(s_ref.dtype)
 
 
+def _bicg_analysis(p, *, m: int, n: int, dtype: str = "float32"):
+    """Static analysis of one config (scalars) or a lattice ((N,) cols)."""
+    bm = np.minimum(np.asarray(p["bm"], dtype=np.int64), m)
+    steps = cdiv(m, bm)
+    return dict(
+        in_blocks=[(bm, n), (n, 1), (bm, 1)],
+        out_blocks=[(bm, 1), (n, 1)],
+        in_dtypes=[dtype] * 3,
+        out_dtypes=[dtype] * 2,
+        flops_per_step=4.0 * bm * n,     # two mat-vec MACs over the block
+        grid_steps=steps,
+        scratch_bytes=n * 4,
+    )
+
+
+def _bicg_inputs(key, *, m: int, n: int, dtype: str = "float32"):
+    ka, kp, kr = jax.random.split(key, 3)
+    dt = np.dtype(dtype)
+    return (jax.random.normal(ka, (m, n), dt) / (n ** 0.5),
+            jax.random.normal(kp, (n, 1), dt),
+            jax.random.normal(kr, (m, 1), dt))
+
+
+@tuned_kernel(
+    "bicg",
+    space={"bm": divisors("m", (16, 32, 64, 128, 256, 512, 1024))},
+    signature=lambda a, p, r, **_: dict(m=a.shape[0], n=a.shape[1],
+                                        dtype=str(a.dtype)),
+    static_info=_bicg_analysis,
+    make_inputs=_bicg_inputs,
+    reference=bicg_ref,
+    pretune=tuple(dict(m=s, n=s, dtype=dt)
+                  for s in (512, 1024, 2048, 4096)
+                  for dt in ("float32", "bfloat16")),
+)
 @functools.partial(jax.jit, static_argnames=("bm", "interpret"))
 def bicg_pallas(a: jax.Array, p: jax.Array, r: jax.Array, *,
                 bm: int = 256, interpret: bool | None = None):
@@ -53,9 +87,10 @@ def bicg_pallas(a: jax.Array, p: jax.Array, r: jax.Array, *,
     if interpret is None:
         interpret = default_interpret()
     m, n = a.shape
-    assert p.shape == (n, 1) and r.shape == (m, 1)
+    require_shape("bicg_pallas", "p", p.shape, (n, 1))
+    require_shape("bicg_pallas", "r", r.shape, (m, 1))
     bm = min(bm, m)
-    assert m % bm == 0
+    require_tiling("bicg_pallas", {"m": m}, {"bm": bm})
     grid = (m // bm,)
     return pl.pallas_call(
         _bicg_kernel,
@@ -75,33 +110,9 @@ def bicg_pallas(a: jax.Array, p: jax.Array, r: jax.Array, *,
 
 def bicg_static_info(m: int, n: int, dtype, params: Dict
                      ) -> KernelStaticInfo:
-    bm = min(params["bm"], m)
-    steps = cdiv(m, bm)
-    return block_info(
-        in_blocks=[(bm, n), (n, 1), (bm, 1)],
-        out_blocks=[(bm, 1), (n, 1)],
-        in_dtypes=[dtype] * 3,
-        out_dtypes=[dtype] * 2,
-        flops_per_step=4.0 * bm * n,     # two mat-vec MACs over the block
-        grid_steps=steps,
-        scratch_bytes=n * 4,
-    )
-
-
-def bicg_static_info_batch(m: int, n: int, dtype,
-                           cols) -> BatchStaticInfo:
-    """`bicg_static_info` over a whole config lattice in one pass."""
-    bm = np.minimum(np.asarray(cols["bm"], dtype=np.int64), m)
-    steps = cdiv(m, bm)
-    return block_info_batch(
-        in_blocks=[(bm, n), (n, 1), (bm, 1)],
-        out_blocks=[(bm, 1), (n, 1)],
-        in_dtypes=[dtype] * 3,
-        out_dtypes=[dtype] * 2,
-        flops_per_step=4.0 * bm * n,     # two mat-vec MACs over the block
-        grid_steps=steps,
-        scratch_bytes=n * 4,
-    )
+    """Scalar static info for one configuration (wrapper over the
+    declared analysis; kept as a stable public helper)."""
+    return block_info(**_bicg_analysis(params, m=m, n=n, dtype=dtype))
 
 
 def make_tunable_bicg(m: int = 2048, n: int = 2048,
@@ -109,37 +120,6 @@ def make_tunable_bicg(m: int = 2048, n: int = 2048,
     space = SearchSpace({
         "bm": pick_divisor_candidates(m, (32, 64, 128, 256, 512, 1024)),
     })
-
-    def build(p):
-        return functools.partial(bicg_pallas, bm=p["bm"])
-
-    def static_info(p):
-        return bicg_static_info(m, n, dtype, p)
-
-    def static_info_batch(cols):
-        return bicg_static_info_batch(m, n, dtype, cols)
-
-    def make_inputs():
-        kk = jax.random.PRNGKey(seed)
-        ka, kp, kr = jax.random.split(kk, 3)
-        return (jax.random.normal(ka, (m, n), dtype) / (n ** 0.5),
-                jax.random.normal(kp, (n, 1), dtype),
-                jax.random.normal(kr, (m, 1), dtype))
-
-    from repro.kernels.ref import bicg_ref
-    return TunableKernel(name=f"bicg_{m}x{n}", space=space, build=build,
-                         static_info=static_info, make_inputs=make_inputs,
-                         reference=bicg_ref,
-                         static_info_batch=static_info_batch)
-
-
-@tuning_cache.register("bicg")
-def _dispatch_bicg(*, m: int, n: int,
-                   dtype: str = "float32") -> tuning_cache.TuningProblem:
-    space = SearchSpace({
-        "bm": pick_divisor_candidates(m, (16, 32, 64, 128, 256, 512, 1024)),
-    })
-    return tuning_cache.TuningProblem(
-        space=space,
-        static_info=lambda p: bicg_static_info(m, n, dtype, p),
-        static_info_batch=lambda c: bicg_static_info_batch(m, n, dtype, c))
+    return get_spec("bicg").tunable(
+        m=m, n=n, dtype=np.dtype(dtype).name, seed=seed,
+        space=space, name=f"bicg_{m}x{n}")

@@ -32,7 +32,7 @@ from repro.core.autotuner import KernelStaticInfo
 __all__ = ["cdiv", "default_interpret", "round_up", "block_info",
            "BatchStaticInfo", "block_info_batch",
            "pick_divisor_candidates", "CompilerParams",
-           "tpu_compiler_params"]
+           "tpu_compiler_params", "require_tiling", "require_shape"]
 
 # jax renamed pltpu.TPUCompilerParams -> pltpu.CompilerParams around 0.5;
 # resolve whichever this jax ships so kernels work on both sides.
@@ -62,6 +62,32 @@ def pick_divisor_candidates(n: int, candidates: Sequence[int]) -> tuple:
     """Keep candidates that divide n (BlockSpec-exact tiling)."""
     vals = tuple(c for c in candidates if c <= n and n % c == 0)
     return vals or (n,)
+
+
+def require_tiling(kernel: str, shape: "dict", block: "dict") -> None:
+    """ValueError when a launch block fails to tile its dimension.
+
+    ``shape`` and ``block`` are same-length mappings pairing each
+    dimension with its block size, in order.  These guard *user input*
+    at trace time, so they must be real exceptions — a bare ``assert``
+    vanishes under ``python -O``.
+    """
+    bad = [(dim, n, bname, b)
+           for (dim, n), (bname, b) in zip(shape.items(), block.items())
+           if n % b]
+    if bad:
+        detail = "; ".join(f"{bname}={b} does not divide {dim}={n}"
+                           for dim, n, bname, b in bad)
+        raise ValueError(
+            f"{kernel}: shape {tuple(shape.values())} is not tileable by "
+            f"block {dict(block)}: {detail}")
+
+
+def require_shape(kernel: str, name: str, got: tuple, want: tuple) -> None:
+    """ValueError (not assert) when an operand shape disagrees."""
+    if tuple(got) != tuple(want):
+        raise ValueError(f"{kernel}: {name} has shape {tuple(got)}, "
+                         f"expected {tuple(want)}")
 
 
 def block_info(*,

@@ -19,16 +19,16 @@ import numpy as np
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
-from repro import tuning_cache
 from repro.core.autotuner import KernelStaticInfo, TunableKernel
 from repro.core.search import SearchSpace
-from repro.kernels.common import (BatchStaticInfo, block_info,
-                                  block_info_batch, cdiv, default_interpret,
-                                  pick_divisor_candidates,
-                                  tpu_compiler_params)
+from repro.kernels.api import divisors, get_spec, tuned_kernel
+from repro.kernels.common import (block_info, cdiv, default_interpret,
+                                  pick_divisor_candidates, require_shape,
+                                  require_tiling, tpu_compiler_params)
+from repro.kernels.ref import attention_ref
 
 __all__ = ["flash_attention_pallas", "flash_static_info",
-           "flash_static_info_batch", "make_tunable_flash"]
+           "make_tunable_flash"]
 
 _NEG_INF = -1e30
 
@@ -71,10 +71,59 @@ def _flash_kernel(q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref,
         o_ref[0] = (acc_ref[...] / denom).astype(o_ref.dtype)
 
 
+def _flash_analysis(p, *, b: int, h: int, sq: int, skv: int, d: int,
+                    causal: bool = True, dtype: str = "float32"):
+    """Static analysis of one config (scalars) or a lattice ((N,) cols)."""
+    bq = np.minimum(np.asarray(p["bq"], dtype=np.int64), sq)
+    bkv = np.minimum(np.asarray(p["bkv"], dtype=np.int64), skv)
+    steps = (b * h) * cdiv(sq, bq) * cdiv(skv, bkv)
+    # causal masking skips ~half the logits -> effective FLOP discount.
+    eff = 0.5 if causal and sq == skv else 1.0
+    return dict(
+        in_blocks=[(bq, d), (bkv, d), (bkv, d)],
+        out_blocks=[(bq, d)],
+        in_dtypes=[dtype] * 3,
+        out_dtypes=[dtype],
+        flops_per_step=4.0 * bq * bkv * d * eff,   # QK^T + PV
+        vpu_per_step=6.0 * bq * bkv * eff,         # mask/max/sum/scale
+        trans_per_step=(bq * bkv + bq) * eff,      # exp
+        grid_steps=steps,
+        scratch_bytes=(bq * 2 + bq * d) * 4,
+    )
+
+
+def _flash_inputs(key, *, b: int, h: int, sq: int, skv: int, d: int,
+                  causal: bool = True, dtype: str = "float32"):
+    kq, kkey, kv = jax.random.split(key, 3)
+    dt = np.dtype(dtype)
+    return (jax.random.normal(kq, (b, h, sq, d), dt),
+            jax.random.normal(kkey, (b, h, skv, d), dt),
+            jax.random.normal(kv, (b, h, skv, d), dt))
+
+
+@tuned_kernel(
+    "flash_attention",
+    space={"bq": divisors("sq", (8, 16, 32, 64, 128, 256, 512)),
+           "bkv": divisors("skv", (8, 16, 32, 64, 128, 256, 512))},
+    # causal is positional-or-keyword so the dispatch wrapper keeps the
+    # old public signature flash_attention(q, k, v, causal=True, ...)
+    signature=lambda q, k, v, causal=True, **_: dict(
+        b=q.shape[0], h=q.shape[1], sq=q.shape[2], skv=k.shape[2],
+        d=q.shape[3], causal=causal, dtype=str(q.dtype)),
+    static_info=_flash_analysis,
+    make_inputs=_flash_inputs,
+    reference=attention_ref,
+    pretune=tuple(dict(b=b, h=h, sq=s, skv=s, d=128, causal=causal,
+                       dtype=dt)
+                  for (b, h, s) in [(2, 4, 1024), (4, 8, 2048),
+                                    (1, 8, 4096)]
+                  for causal in (True, False)
+                  for dt in ("float32", "bfloat16")),
+)
 @functools.partial(jax.jit,
                    static_argnames=("causal", "bq", "bkv", "interpret"))
-def flash_attention_pallas(q: jax.Array, k: jax.Array, v: jax.Array, *,
-                           causal: bool = True, bq: int = 128,
+def flash_attention_pallas(q: jax.Array, k: jax.Array, v: jax.Array,
+                           causal: bool = True, *, bq: int = 128,
                            bkv: int = 128,
                            interpret: bool | None = None) -> jax.Array:
     """q, k, v: (B, H, S, D) -> (B, H, S, D).  GQA callers broadcast KV."""
@@ -82,10 +131,12 @@ def flash_attention_pallas(q: jax.Array, k: jax.Array, v: jax.Array, *,
         interpret = default_interpret()
     b, h, sq, d = q.shape
     skv = k.shape[2]
-    assert k.shape == (b, h, skv, d) and v.shape == (b, h, skv, d)
+    require_shape("flash_attention_pallas", "k", k.shape, (b, h, skv, d))
+    require_shape("flash_attention_pallas", "v", v.shape, (b, h, skv, d))
     bq = min(bq, sq)
     bkv = min(bkv, skv)
-    assert sq % bq == 0 and skv % bkv == 0
+    require_tiling("flash_attention_pallas", {"sq": sq, "skv": skv},
+                   {"bq": bq, "bkv": bkv})
     scale = 1.0 / (d ** 0.5)
     qr = q.reshape(b * h, sq, d)
     kr = k.reshape(b * h, skv, d)
@@ -114,43 +165,10 @@ def flash_attention_pallas(q: jax.Array, k: jax.Array, v: jax.Array, *,
 
 def flash_static_info(b: int, h: int, sq: int, skv: int, d: int, dtype,
                       params: Dict, causal: bool = True) -> KernelStaticInfo:
-    bq = min(params["bq"], sq)
-    bkv = min(params["bkv"], skv)
-    steps = (b * h) * cdiv(sq, bq) * cdiv(skv, bkv)
-    # causal masking skips ~half the logits -> effective FLOP discount.
-    eff = 0.5 if causal and sq == skv else 1.0
-    return block_info(
-        in_blocks=[(bq, d), (bkv, d), (bkv, d)],
-        out_blocks=[(bq, d)],
-        in_dtypes=[dtype] * 3,
-        out_dtypes=[dtype],
-        flops_per_step=4.0 * bq * bkv * d * eff,   # QK^T + PV
-        vpu_per_step=6.0 * bq * bkv * eff,         # mask/max/sum/scale
-        trans_per_step=(bq * bkv + bq) * eff,      # exp
-        grid_steps=steps,
-        scratch_bytes=(bq * 2 + bq * d) * 4,
-    )
-
-
-def flash_static_info_batch(b: int, h: int, sq: int, skv: int, d: int,
-                            dtype, cols,
-                            causal: bool = True) -> BatchStaticInfo:
-    """`flash_static_info` over a whole config lattice in one pass."""
-    bq = np.minimum(np.asarray(cols["bq"], dtype=np.int64), sq)
-    bkv = np.minimum(np.asarray(cols["bkv"], dtype=np.int64), skv)
-    steps = (b * h) * cdiv(sq, bq) * cdiv(skv, bkv)
-    eff = 0.5 if causal and sq == skv else 1.0
-    return block_info_batch(
-        in_blocks=[(bq, d), (bkv, d), (bkv, d)],
-        out_blocks=[(bq, d)],
-        in_dtypes=[dtype] * 3,
-        out_dtypes=[dtype],
-        flops_per_step=4.0 * bq * bkv * d * eff,   # QK^T + PV
-        vpu_per_step=6.0 * bq * bkv * eff,         # mask/max/sum/scale
-        trans_per_step=(bq * bkv + bq) * eff,      # exp
-        grid_steps=steps,
-        scratch_bytes=(bq * 2 + bq * d) * 4,
-    )
+    """Scalar static info for one configuration (wrapper over the
+    declared analysis; kept as a stable public helper)."""
+    return block_info(**_flash_analysis(params, b=b, h=h, sq=sq, skv=skv,
+                                        d=d, causal=causal, dtype=dtype))
 
 
 def make_tunable_flash(b: int = 2, h: int = 4, s: int = 1024, d: int = 128,
@@ -160,44 +178,7 @@ def make_tunable_flash(b: int = 2, h: int = 4, s: int = 1024, d: int = 128,
         "bq": pick_divisor_candidates(s, (128, 256, 512)),
         "bkv": pick_divisor_candidates(s, (128, 256, 512)),
     })
-
-    def build(p):
-        return functools.partial(flash_attention_pallas, causal=causal,
-                                 bq=p["bq"], bkv=p["bkv"])
-
-    def static_info(p):
-        return flash_static_info(b, h, s, s, d, dtype, p, causal=causal)
-
-    def static_info_batch(cols):
-        return flash_static_info_batch(b, h, s, s, d, dtype, cols,
-                                       causal=causal)
-
-    def make_inputs():
-        kk = jax.random.PRNGKey(seed)
-        kq, kkey, kv = jax.random.split(kk, 3)
-        shp = (b, h, s, d)
-        return (jax.random.normal(kq, shp, dtype),
-                jax.random.normal(kkey, shp, dtype),
-                jax.random.normal(kv, shp, dtype))
-
-    from repro.kernels.ref import attention_ref
-    return TunableKernel(name=f"flash_{b}x{h}x{s}x{d}", space=space,
-                         build=build, static_info=static_info,
-                         make_inputs=make_inputs, reference=attention_ref,
-                         static_info_batch=static_info_batch)
-
-
-@tuning_cache.register("flash_attention")
-def _dispatch_flash(*, b: int, h: int, sq: int, skv: int, d: int,
-                    causal: bool = True,
-                    dtype: str = "float32") -> tuning_cache.TuningProblem:
-    space = SearchSpace({
-        "bq": pick_divisor_candidates(sq, (8, 16, 32, 64, 128, 256, 512)),
-        "bkv": pick_divisor_candidates(skv, (8, 16, 32, 64, 128, 256, 512)),
-    })
-    return tuning_cache.TuningProblem(
-        space=space,
-        static_info=lambda p: flash_static_info(b, h, sq, skv, d, dtype, p,
-                                                causal=causal),
-        static_info_batch=lambda c: flash_static_info_batch(
-            b, h, sq, skv, d, dtype, c, causal=causal))
+    return get_spec("flash_attention").tunable(
+        b=b, h=h, sq=s, skv=s, d=d, causal=causal,
+        dtype=np.dtype(dtype).name, seed=seed,
+        space=space, name=f"flash_{b}x{h}x{s}x{d}")

@@ -19,16 +19,16 @@ import jax.numpy as jnp
 import numpy as np
 from jax.experimental import pallas as pl
 
-from repro import tuning_cache
 from repro.core.autotuner import KernelStaticInfo, TunableKernel
 from repro.core.search import SearchSpace
-from repro.kernels.common import (BatchStaticInfo, block_info,
-                                  block_info_batch, cdiv, default_interpret,
-                                  pick_divisor_candidates,
+from repro.kernels.api import divisors, get_spec, tuned_kernel
+from repro.kernels.common import (block_info, cdiv, default_interpret,
+                                  pick_divisor_candidates, require_tiling,
                                   tpu_compiler_params)
+from repro.kernels.ref import jacobi3d_ref
 
 __all__ = ["jacobi3d_pallas", "jacobi3d_static_info",
-           "jacobi3d_static_info_batch", "make_tunable_jacobi3d"]
+           "make_tunable_jacobi3d"]
 
 C0_DEFAULT = 0.5
 C1_DEFAULT = 1.0 / 12.0
@@ -61,6 +61,42 @@ def _jacobi_kernel(prev_ref, cur_ref, next_ref, o_ref, *, bz, z, c0, c1):
     o_ref[...] = jnp.where(interior, out, cur).astype(o_ref.dtype)
 
 
+def _jacobi3d_analysis(p, *, z: int, y: int, x: int,
+                       dtype: str = "float32"):
+    """Static analysis of one config (scalars) or a lattice ((N,) cols).
+
+    7-point stencil: ~8 vector FLOPs/output; 3 block reads + 1 write.
+    """
+    bz = np.minimum(np.asarray(p["bz"], dtype=np.int64), z)
+    steps = cdiv(z, bz)
+    plane = y * x
+    return dict(
+        in_blocks=[(bz, y, x)] * 3,
+        out_blocks=[(bz, y, x)],
+        in_dtypes=[dtype] * 3,
+        out_dtypes=[dtype],
+        flops_per_step=0.0,
+        vpu_per_step=8.0 * bz * plane,
+        grid_steps=steps,
+    )
+
+
+def _jacobi3d_inputs(key, *, z: int, y: int, x: int,
+                     dtype: str = "float32"):
+    return (jax.random.normal(key, (z, y, x), np.dtype(dtype)),)
+
+
+@tuned_kernel(
+    "jacobi3d",
+    space={"bz": divisors("z", (1, 2, 4, 8, 16, 32, 64))},
+    signature=lambda u, **_: dict(z=u.shape[0], y=u.shape[1], x=u.shape[2],
+                                  dtype=str(u.dtype)),
+    static_info=_jacobi3d_analysis,
+    make_inputs=_jacobi3d_inputs,
+    reference=jacobi3d_ref,
+    pretune=tuple(dict(z=s, y=s, x=s, dtype="float32")
+                  for s in (64, 128, 256)),
+)
 @functools.partial(jax.jit,
                    static_argnames=("bz", "c0", "c1", "interpret"))
 def jacobi3d_pallas(u: jax.Array, *, bz: int = 8,
@@ -70,7 +106,7 @@ def jacobi3d_pallas(u: jax.Array, *, bz: int = 8,
         interpret = default_interpret()
     z, y, x = u.shape
     bz = min(bz, z)
-    assert z % bz == 0, (z, bz)
+    require_tiling("jacobi3d_pallas", {"z": z}, {"bz": bz})
     nb = z // bz
     kern = functools.partial(_jacobi_kernel, bz=bz, z=z, c0=c0, c1=c1)
     clamp = lambda v, hi: jnp.minimum(jnp.maximum(v, 0), hi)
@@ -91,36 +127,10 @@ def jacobi3d_pallas(u: jax.Array, *, bz: int = 8,
 
 def jacobi3d_static_info(z: int, y: int, x: int, dtype,
                          params: Dict) -> KernelStaticInfo:
-    bz = min(params["bz"], z)
-    steps = cdiv(z, bz)
-    plane = y * x
-    # 7-point stencil: ~8 vector FLOPs/output; 3 block reads + 1 write.
-    return block_info(
-        in_blocks=[(bz, y, x)] * 3,
-        out_blocks=[(bz, y, x)],
-        in_dtypes=[dtype] * 3,
-        out_dtypes=[dtype],
-        flops_per_step=0.0,
-        vpu_per_step=8.0 * bz * plane,
-        grid_steps=steps,
-    )
-
-
-def jacobi3d_static_info_batch(z: int, y: int, x: int, dtype,
-                               cols) -> BatchStaticInfo:
-    """`jacobi3d_static_info` over a whole config lattice in one pass."""
-    bz = np.minimum(np.asarray(cols["bz"], dtype=np.int64), z)
-    steps = cdiv(z, bz)
-    plane = y * x
-    return block_info_batch(
-        in_blocks=[(bz, y, x)] * 3,
-        out_blocks=[(bz, y, x)],
-        in_dtypes=[dtype] * 3,
-        out_dtypes=[dtype],
-        flops_per_step=0.0,
-        vpu_per_step=8.0 * bz * plane,
-        grid_steps=steps,
-    )
+    """Scalar static info for one configuration (wrapper over the
+    declared analysis; kept as a stable public helper)."""
+    return block_info(**_jacobi3d_analysis(params, z=z, y=y, x=x,
+                                           dtype=dtype))
 
 
 def make_tunable_jacobi3d(z: int = 128, y: int = 128, x: int = 128,
@@ -128,35 +138,6 @@ def make_tunable_jacobi3d(z: int = 128, y: int = 128, x: int = 128,
     space = SearchSpace({
         "bz": pick_divisor_candidates(z, (1, 2, 4, 8, 16, 32, 64)),
     })
-
-    def build(p):
-        return functools.partial(jacobi3d_pallas, bz=p["bz"])
-
-    def static_info(p):
-        return jacobi3d_static_info(z, y, x, dtype, p)
-
-    def static_info_batch(cols):
-        return jacobi3d_static_info_batch(z, y, x, dtype, cols)
-
-    def make_inputs():
-        kk = jax.random.PRNGKey(seed)
-        return (jax.random.normal(kk, (z, y, x), dtype),)
-
-    from repro.kernels.ref import jacobi3d_ref
-    return TunableKernel(name=f"jacobi3d_{z}x{y}x{x}", space=space,
-                         build=build, static_info=static_info,
-                         make_inputs=make_inputs, reference=jacobi3d_ref,
-                         static_info_batch=static_info_batch)
-
-
-@tuning_cache.register("jacobi3d")
-def _dispatch_jacobi3d(*, z: int, y: int, x: int,
-                       dtype: str = "float32") -> tuning_cache.TuningProblem:
-    space = SearchSpace({
-        "bz": pick_divisor_candidates(z, (1, 2, 4, 8, 16, 32, 64)),
-    })
-    return tuning_cache.TuningProblem(
-        space=space,
-        static_info=lambda p: jacobi3d_static_info(z, y, x, dtype, p),
-        static_info_batch=lambda c: jacobi3d_static_info_batch(z, y, x,
-                                                               dtype, c))
+    return get_spec("jacobi3d").tunable(
+        z=z, y=y, x=x, dtype=np.dtype(dtype).name, seed=seed,
+        space=space, name=f"jacobi3d_{z}x{y}x{x}")

@@ -4,7 +4,10 @@ Grid (M/bm, N/bn, K/bk) with an f32 VMEM accumulator tile; the K axis
 is the innermost, ``arbitrary`` (sequential) grid dimension so the
 accumulator carries across K steps — the canonical TPU tiling.
 
-Tunables (the Table III analogue): bm, bn, bk.
+Tunables (the Table III analogue): bm, bn, bk.  The whole tuning stack
+(dispatch wrapper, registry problem, tunable-kernel packaging, fallback
+params, pretune grid) derives from the single `@tuned_kernel`
+declaration below.
 """
 from __future__ import annotations
 
@@ -17,16 +20,15 @@ import numpy as np
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
-from repro import tuning_cache
 from repro.core.autotuner import KernelStaticInfo, TunableKernel
 from repro.core.search import SearchSpace
-from repro.kernels.common import (BatchStaticInfo, block_info,
-                                  block_info_batch, cdiv, default_interpret,
-                                  pick_divisor_candidates,
+from repro.kernels.api import divisors, get_spec, tuned_kernel
+from repro.kernels.common import (block_info, cdiv, default_interpret,
+                                  pick_divisor_candidates, require_tiling,
                                   tpu_compiler_params)
+from repro.kernels.ref import matmul_ref
 
-__all__ = ["matmul_pallas", "matmul_static_info",
-           "matmul_static_info_batch", "make_tunable_matmul"]
+__all__ = ["matmul_pallas", "matmul_static_info", "make_tunable_matmul"]
 
 
 def _mm_kernel(a_ref, b_ref, o_ref, acc_ref):
@@ -44,6 +46,46 @@ def _mm_kernel(a_ref, b_ref, o_ref, acc_ref):
         o_ref[...] = acc_ref[...].astype(o_ref.dtype)
 
 
+def _matmul_analysis(p, *, m: int, n: int, k: int, dtype: str = "float32"):
+    """Static analysis of one config (scalars) or a lattice ((N,) cols)."""
+    bm = np.minimum(np.asarray(p["bm"], dtype=np.int64), m)
+    bn = np.minimum(np.asarray(p["bn"], dtype=np.int64), n)
+    bk = np.minimum(np.asarray(p["bk"], dtype=np.int64), k)
+    steps = cdiv(m, bm) * cdiv(n, bn) * cdiv(k, bk)
+    return dict(
+        in_blocks=[(bm, bk), (bk, bn)],
+        out_blocks=[(bm, bn)],
+        in_dtypes=[dtype, dtype],
+        out_dtypes=[dtype],
+        flops_per_step=2.0 * bm * bn * bk,
+        grid_steps=steps,
+        scratch_bytes=bm * bn * 4,
+    )
+
+
+def _matmul_inputs(key, *, m: int, n: int, k: int, dtype: str = "float32"):
+    ka, kb = jax.random.split(key)
+    dt = np.dtype(dtype)
+    return (jax.random.normal(ka, (m, k), dt),
+            jax.random.normal(kb, (k, n), dt))
+
+
+@tuned_kernel(
+    "matmul",
+    space={"bm": divisors("m", (8, 16, 32, 64, 128, 256, 512)),
+           "bn": divisors("n", (8, 16, 32, 64, 128, 256, 512)),
+           "bk": divisors("k", (8, 16, 32, 64, 128, 256, 512))},
+    signature=lambda a, b, **_: dict(m=a.shape[0], n=b.shape[1],
+                                     k=a.shape[1], dtype=str(a.dtype)),
+    static_info=_matmul_analysis,
+    make_inputs=_matmul_inputs,
+    reference=matmul_ref,
+    pretune=tuple(dict(m=m, n=n, k=k, dtype=dt)
+                  for (m, n, k) in [(256,) * 3, (512,) * 3, (1024,) * 3,
+                                    (2048,) * 3, (1024, 1024, 4096),
+                                    (4096, 1024, 1024)]
+                  for dt in ("float32", "bfloat16")),
+)
 @functools.partial(jax.jit, static_argnames=("bm", "bn", "bk", "interpret"))
 def matmul_pallas(a: jax.Array, b: jax.Array, *,
                   bm: int = 256, bn: int = 256, bk: int = 256,
@@ -52,9 +94,12 @@ def matmul_pallas(a: jax.Array, b: jax.Array, *,
         interpret = default_interpret()
     m, k = a.shape
     k2, n = b.shape
-    assert k == k2, (a.shape, b.shape)
+    if k2 != k:
+        raise ValueError(f"matmul_pallas: inner dimensions disagree: "
+                         f"a.shape={tuple(a.shape)}, b.shape={tuple(b.shape)}")
     bm, bn, bk = min(bm, m), min(bn, n), min(bk, k)
-    assert m % bm == 0 and n % bn == 0 and k % bk == 0, (m, n, k, bm, bn, bk)
+    require_tiling("matmul_pallas", {"m": m, "n": n, "k": k},
+                   {"bm": bm, "bn": bn, "bk": bk})
     grid = (m // bm, n // bn, k // bk)
     return pl.pallas_call(
         _mm_kernel,
@@ -72,37 +117,9 @@ def matmul_pallas(a: jax.Array, b: jax.Array, *,
 
 def matmul_static_info(m: int, n: int, k: int, dtype,
                        params: Dict) -> KernelStaticInfo:
-    bm = min(params["bm"], m)
-    bn = min(params["bn"], n)
-    bk = min(params["bk"], k)
-    steps = cdiv(m, bm) * cdiv(n, bn) * cdiv(k, bk)
-    return block_info(
-        in_blocks=[(bm, bk), (bk, bn)],
-        out_blocks=[(bm, bn)],
-        in_dtypes=[dtype, dtype],
-        out_dtypes=[dtype],
-        flops_per_step=2.0 * bm * bn * bk,
-        grid_steps=steps,
-        scratch_bytes=bm * bn * 4,
-    )
-
-
-def matmul_static_info_batch(m: int, n: int, k: int, dtype,
-                             cols) -> BatchStaticInfo:
-    """`matmul_static_info` over a whole config lattice in one pass."""
-    bm = np.minimum(np.asarray(cols["bm"], dtype=np.int64), m)
-    bn = np.minimum(np.asarray(cols["bn"], dtype=np.int64), n)
-    bk = np.minimum(np.asarray(cols["bk"], dtype=np.int64), k)
-    steps = cdiv(m, bm) * cdiv(n, bn) * cdiv(k, bk)
-    return block_info_batch(
-        in_blocks=[(bm, bk), (bk, bn)],
-        out_blocks=[(bm, bn)],
-        in_dtypes=[dtype, dtype],
-        out_dtypes=[dtype],
-        flops_per_step=2.0 * bm * bn * bk,
-        grid_steps=steps,
-        scratch_bytes=bm * bn * 4,
-    )
+    """Scalar static info for one configuration (wrapper over the
+    declared analysis; kept as a stable public helper)."""
+    return block_info(**_matmul_analysis(params, m=m, n=n, k=k, dtype=dtype))
 
 
 def make_tunable_matmul(m: int = 1024, n: int = 1024, k: int = 1024,
@@ -113,40 +130,6 @@ def make_tunable_matmul(m: int = 1024, n: int = 1024, k: int = 1024,
         "bn": pick_divisor_candidates(n, sizes),
         "bk": pick_divisor_candidates(k, sizes),
     })
-
-    def build(p):
-        return functools.partial(matmul_pallas, bm=p["bm"], bn=p["bn"],
-                                 bk=p["bk"])
-
-    def static_info(p):
-        return matmul_static_info(m, n, k, dtype, p)
-
-    def static_info_batch(cols):
-        return matmul_static_info_batch(m, n, k, dtype, cols)
-
-    def make_inputs():
-        kk = jax.random.PRNGKey(seed)
-        ka, kb = jax.random.split(kk)
-        return (jax.random.normal(ka, (m, k), dtype),
-                jax.random.normal(kb, (k, n), dtype))
-
-    from repro.kernels.ref import matmul_ref
-    return TunableKernel(name=f"matmul_{m}x{n}x{k}", space=space,
-                         build=build, static_info=static_info,
-                         make_inputs=make_inputs, reference=matmul_ref,
-                         static_info_batch=static_info_batch)
-
-
-@tuning_cache.register("matmul")
-def _dispatch_matmul(*, m: int, n: int, k: int,
-                     dtype: str = "float32") -> tuning_cache.TuningProblem:
-    space = SearchSpace({
-        "bm": pick_divisor_candidates(m, (8, 16, 32, 64, 128, 256, 512)),
-        "bn": pick_divisor_candidates(n, (8, 16, 32, 64, 128, 256, 512)),
-        "bk": pick_divisor_candidates(k, (8, 16, 32, 64, 128, 256, 512)),
-    })
-    return tuning_cache.TuningProblem(
-        space=space,
-        static_info=lambda p: matmul_static_info(m, n, k, dtype, p),
-        static_info_batch=lambda c: matmul_static_info_batch(m, n, k,
-                                                             dtype, c))
+    return get_spec("matmul").tunable(
+        m=m, n=n, k=k, dtype=np.dtype(dtype).name, seed=seed,
+        space=space, name=f"matmul_{m}x{n}x{k}")

@@ -17,16 +17,15 @@ import numpy as np
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
-from repro import tuning_cache
 from repro.core.autotuner import KernelStaticInfo, TunableKernel
 from repro.core.search import SearchSpace
-from repro.kernels.common import (BatchStaticInfo, block_info,
-                                  block_info_batch, cdiv, default_interpret,
-                                  pick_divisor_candidates,
-                                  tpu_compiler_params)
+from repro.kernels.api import divisors, get_spec, tuned_kernel
+from repro.kernels.common import (block_info, cdiv, default_interpret,
+                                  pick_divisor_candidates, require_shape,
+                                  require_tiling, tpu_compiler_params)
+from repro.kernels.ref import matvec_ref
 
-__all__ = ["matvec_pallas", "matvec_static_info",
-           "matvec_static_info_batch", "make_tunable_matvec"]
+__all__ = ["matvec_pallas", "matvec_static_info", "make_tunable_matvec"]
 
 
 def _mv_kernel(a_ref, x_ref, y_ref, acc_ref):
@@ -44,6 +43,42 @@ def _mv_kernel(a_ref, x_ref, y_ref, acc_ref):
         y_ref[...] = acc_ref[...].astype(y_ref.dtype)
 
 
+def _matvec_analysis(p, *, m: int, n: int, dtype: str = "float32"):
+    """Static analysis of one config (scalars) or a lattice ((N,) cols)."""
+    bm = np.minimum(np.asarray(p["bm"], dtype=np.int64), m)
+    bk = np.minimum(np.asarray(p["bk"], dtype=np.int64), n)
+    steps = cdiv(m, bm) * cdiv(n, bk)
+    return dict(
+        in_blocks=[(bm, bk), (bk, 1)],
+        out_blocks=[(bm, 1)],
+        in_dtypes=[dtype, dtype],
+        out_dtypes=[dtype],
+        flops_per_step=2.0 * bm * bk,
+        grid_steps=steps,
+        scratch_bytes=bm * 4,
+    )
+
+
+def _matvec_inputs(key, *, m: int, n: int, dtype: str = "float32"):
+    ka, kx = jax.random.split(key)
+    dt = np.dtype(dtype)
+    return (jax.random.normal(ka, (m, n), dt),
+            jax.random.normal(kx, (n, 1), dt))
+
+
+@tuned_kernel(
+    "matvec",
+    space={"bm": divisors("m", (32, 64, 128, 256, 512, 1024)),
+           "bk": divisors("n", (32, 64, 128, 256, 512, 1024))},
+    signature=lambda a, x, **_: dict(m=a.shape[0], n=a.shape[1],
+                                     dtype=str(a.dtype)),
+    static_info=_matvec_analysis,
+    make_inputs=_matvec_inputs,
+    reference=matvec_ref,
+    pretune=tuple(dict(m=s, n=s, dtype=dt)
+                  for s in (512, 1024, 2048, 4096)
+                  for dt in ("float32", "bfloat16")),
+)
 @functools.partial(jax.jit, static_argnames=("bm", "bk", "interpret"))
 def matvec_pallas(a: jax.Array, x: jax.Array, *,
                   bm: int = 256, bk: int = 512,
@@ -51,9 +86,9 @@ def matvec_pallas(a: jax.Array, x: jax.Array, *,
     if interpret is None:
         interpret = default_interpret()
     m, n = a.shape
-    assert x.shape == (n, 1), x.shape
+    require_shape("matvec_pallas", "x", x.shape, (n, 1))
     bm, bk = min(bm, m), min(bk, n)
-    assert m % bm == 0 and n % bk == 0
+    require_tiling("matvec_pallas", {"m": m, "n": n}, {"bm": bm, "bk": bk})
     grid = (m // bm, n // bk)
     return pl.pallas_call(
         _mv_kernel,
@@ -70,34 +105,9 @@ def matvec_pallas(a: jax.Array, x: jax.Array, *,
 
 def matvec_static_info(m: int, n: int, dtype, params: Dict
                        ) -> KernelStaticInfo:
-    bm, bk = min(params["bm"], m), min(params["bk"], n)
-    steps = cdiv(m, bm) * cdiv(n, bk)
-    return block_info(
-        in_blocks=[(bm, bk), (bk, 1)],
-        out_blocks=[(bm, 1)],
-        in_dtypes=[dtype, dtype],
-        out_dtypes=[dtype],
-        flops_per_step=2.0 * bm * bk,
-        grid_steps=steps,
-        scratch_bytes=bm * 4,
-    )
-
-
-def matvec_static_info_batch(m: int, n: int, dtype,
-                             cols) -> BatchStaticInfo:
-    """`matvec_static_info` over a whole config lattice in one pass."""
-    bm = np.minimum(np.asarray(cols["bm"], dtype=np.int64), m)
-    bk = np.minimum(np.asarray(cols["bk"], dtype=np.int64), n)
-    steps = cdiv(m, bm) * cdiv(n, bk)
-    return block_info_batch(
-        in_blocks=[(bm, bk), (bk, 1)],
-        out_blocks=[(bm, 1)],
-        in_dtypes=[dtype, dtype],
-        out_dtypes=[dtype],
-        flops_per_step=2.0 * bm * bk,
-        grid_steps=steps,
-        scratch_bytes=bm * 4,
-    )
+    """Scalar static info for one configuration (wrapper over the
+    declared analysis; kept as a stable public helper)."""
+    return block_info(**_matvec_analysis(params, m=m, n=n, dtype=dtype))
 
 
 def make_tunable_matvec(m: int = 2048, n: int = 2048,
@@ -106,37 +116,6 @@ def make_tunable_matvec(m: int = 2048, n: int = 2048,
         "bm": pick_divisor_candidates(m, (64, 128, 256, 512, 1024)),
         "bk": pick_divisor_candidates(n, (128, 256, 512, 1024)),
     })
-
-    def build(p):
-        return functools.partial(matvec_pallas, bm=p["bm"], bk=p["bk"])
-
-    def static_info(p):
-        return matvec_static_info(m, n, dtype, p)
-
-    def static_info_batch(cols):
-        return matvec_static_info_batch(m, n, dtype, cols)
-
-    def make_inputs():
-        kk = jax.random.PRNGKey(seed)
-        ka, kx = jax.random.split(kk)
-        return (jax.random.normal(ka, (m, n), dtype),
-                jax.random.normal(kx, (n, 1), dtype))
-
-    from repro.kernels.ref import matvec_ref
-    return TunableKernel(name=f"matvec_{m}x{n}", space=space, build=build,
-                         static_info=static_info, make_inputs=make_inputs,
-                         reference=matvec_ref,
-                         static_info_batch=static_info_batch)
-
-
-@tuning_cache.register("matvec")
-def _dispatch_matvec(*, m: int, n: int,
-                     dtype: str = "float32") -> tuning_cache.TuningProblem:
-    space = SearchSpace({
-        "bm": pick_divisor_candidates(m, (32, 64, 128, 256, 512, 1024)),
-        "bk": pick_divisor_candidates(n, (32, 64, 128, 256, 512, 1024)),
-    })
-    return tuning_cache.TuningProblem(
-        space=space,
-        static_info=lambda p: matvec_static_info(m, n, dtype, p),
-        static_info_batch=lambda c: matvec_static_info_batch(m, n, dtype, c))
+    return get_spec("matvec").tunable(
+        m=m, n=n, dtype=np.dtype(dtype).name, seed=seed,
+        space=space, name=f"matvec_{m}x{n}")

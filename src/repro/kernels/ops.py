@@ -1,10 +1,16 @@
-"""Public jit'd entry points for the kernel layer.
+"""Public jit'd entry points for the kernel layer — generated, not
+hand-written.
 
-Each op resolves its launch configuration **at trace time** through the
-tuning database (`repro.tuning_cache.lookup_or_tune`), tuned for the
-active hardware target (`repro.core.target.default_target` — pin it
-with ``use_target(...)`` / ``REPRO_TUNING_TARGET``): the first call for
-a given (kernel, shapes, dtype, chip) ranks the kernel's whole launch
+Every attribute of this module is a re-export of a
+`repro.kernels.api.KernelSpec.op` dispatch wrapper: ``ops.matmul``,
+``ops.stencil2d``, ... exist because a module somewhere declared
+``@tuned_kernel("matmul", ...)`` / ``@tuned_kernel("stencil2d", ...)``,
+not because anyone edited this file.  Each op resolves its launch
+configuration **at trace time** through the tuning database
+(`repro.tuning_cache.lookup_or_tune`), tuned for the active hardware
+target (`repro.core.target.default_target` — pin it with
+``use_target(...)`` / ``REPRO_TUNING_TARGET``): the first call for a
+given (kernel, shapes, dtype, chip) ranks the kernel's whole launch
 space with the static cost model in one vectorized pass; every later
 call — including across processes when a disk/pre-tuned database is
 configured — is a pure cache hit with zero model evaluations.
@@ -12,125 +18,29 @@ configured — is a pure cache hit with zero model evaluations.
 ``tuned_params`` still lets a caller inject a
 :class:`~repro.core.autotuner.TuningReport`'s best_params explicitly,
 which bypasses the database entirely.  If the database/registry fails
-for any reason the op falls back to the legacy largest-divisor
-defaults, so dispatch can never break a numerically-correct call.
+for any reason the op falls back to the largest-divisor defaults
+derived from the kernel's declared space, so dispatch can never break a
+numerically-correct call.
 """
 from __future__ import annotations
 
-import logging
-from typing import Dict, Optional
-
-import jax
-
-from repro import tuning_cache
-from repro.core.target import default_target
-from repro.kernels.matmul import matmul_pallas
-from repro.kernels.matvec import matvec_pallas
-from repro.kernels.atax import atax_pallas
-from repro.kernels.bicg import bicg_pallas
-from repro.kernels.jacobi3d import jacobi3d_pallas
-from repro.kernels.flash_attention import flash_attention_pallas
-
-__all__ = ["matmul", "matvec", "atax", "bicg", "jacobi3d",
-           "flash_attention"]
-
-_P = Optional[Dict]
-_log = logging.getLogger(__name__)
+from repro.kernels import api
+from repro.kernels.api import (_logged_dispatch_failures,  # noqa: F401
+                               reset_dispatch_failure_log)
 
 
-def _largest_divisor(n: int, candidates) -> int:
-    for c in sorted(candidates, reverse=True):
-        if c <= n and n % c == 0:
-            return c
-    return n
+def __getattr__(name: str):
+    if name == "__all__":
+        return sorted(api.registered_kernels())
+    spec = api.get_spec(name, default=None)
+    if spec is None:
+        raise AttributeError(
+            f"module {__name__!r} has no attribute {name!r} "
+            f"(declared kernels: {api.registered_kernels()})")
+    op = spec.op
+    globals()[name] = op        # memoize: later lookups skip this hook
+    return op
 
 
-# kernel_ids whose dispatch failure already produced a full traceback;
-# a persistently broken registry entry logs once per process, not once
-# per trace.
-_logged_dispatch_failures = set()
-
-
-def _resolve(kernel_id: str, **signature) -> Dict:
-    """Trace-time launch-config lookup for the active hardware target;
-    never raises (returns {} on failure so the per-op fallback defaults
-    apply)."""
-    try:
-        return tuning_cache.lookup_or_tune(
-            kernel_id, spec=default_target(), **signature)
-    except Exception:
-        if kernel_id not in _logged_dispatch_failures:
-            _logged_dispatch_failures.add(kernel_id)
-            _log.exception("tuning-cache dispatch failed for %s %s; "
-                           "using fallback defaults (further failures "
-                           "for this kernel log at DEBUG)",
-                           kernel_id, signature)
-        else:
-            _log.debug("tuning-cache dispatch failed for %s %s; "
-                       "using fallback defaults", kernel_id, signature)
-        return {}
-
-
-def matmul(a, b, tuned_params: _P = None, **kw):
-    m, k = a.shape
-    n = b.shape[1]
-    p = tuned_params if tuned_params is not None else _resolve(
-        "matmul", m=m, n=n, k=k, dtype=str(a.dtype))
-    return matmul_pallas(
-        a, b,
-        bm=p.get("bm", _largest_divisor(m, (256, 128, 64, 32, 16, 8))),
-        bn=p.get("bn", _largest_divisor(n, (256, 128, 64, 32, 16, 8))),
-        bk=p.get("bk", _largest_divisor(k, (256, 128, 64, 32, 16, 8))),
-        **kw)
-
-
-def matvec(a, x, tuned_params: _P = None, **kw):
-    m, n = a.shape
-    p = tuned_params if tuned_params is not None else _resolve(
-        "matvec", m=m, n=n, dtype=str(a.dtype))
-    return matvec_pallas(
-        a, x,
-        bm=p.get("bm", _largest_divisor(m, (512, 256, 128, 64, 32))),
-        bk=p.get("bk", _largest_divisor(n, (512, 256, 128, 64, 32))),
-        **kw)
-
-
-def atax(a, x, tuned_params: _P = None, **kw):
-    m, n = a.shape
-    p = tuned_params if tuned_params is not None else _resolve(
-        "atax", m=m, n=n, dtype=str(a.dtype))
-    return atax_pallas(
-        a, x, bm=p.get("bm", _largest_divisor(m, (256, 128, 64, 32, 16))),
-        **kw)
-
-
-def bicg(a, p_vec, r, tuned_params: _P = None, **kw):
-    m, n = a.shape
-    p = tuned_params if tuned_params is not None else _resolve(
-        "bicg", m=m, n=n, dtype=str(a.dtype))
-    return bicg_pallas(
-        a, p_vec, r,
-        bm=p.get("bm", _largest_divisor(m, (256, 128, 64, 32, 16))),
-        **kw)
-
-
-def jacobi3d(u, tuned_params: _P = None, **kw):
-    z, y, x = u.shape
-    p = tuned_params if tuned_params is not None else _resolve(
-        "jacobi3d", z=z, y=y, x=x, dtype=str(u.dtype))
-    return jacobi3d_pallas(
-        u, bz=p.get("bz", _largest_divisor(z, (8, 4, 2, 1))), **kw)
-
-
-def flash_attention(q, k, v, causal: bool = True, tuned_params: _P = None,
-                    **kw):
-    b, h, s, d = q.shape
-    skv = k.shape[2]
-    p = tuned_params if tuned_params is not None else _resolve(
-        "flash_attention", b=b, h=h, sq=s, skv=skv, d=d, causal=causal,
-        dtype=str(q.dtype))
-    return flash_attention_pallas(
-        q, k, v, causal=causal,
-        bq=p.get("bq", _largest_divisor(s, (256, 128, 64, 32, 16, 8))),
-        bkv=p.get("bkv", _largest_divisor(skv, (256, 128, 64, 32, 16, 8))),
-        **kw)
+def __dir__():
+    return sorted(set(globals()) | set(api.registered_kernels()))

@@ -31,16 +31,20 @@ from repro.tuning_cache.keys import (CacheKey, MODEL_VERSION, canonical_json,
                                      fingerprint_spec, make_key)
 from repro.tuning_cache.store import (CacheStats, DiskStore, TuningDatabase,
                                       TuningRecord)
+from repro.tuning_cache import registry
 from repro.tuning_cache.registry import (TuningProblem, clear_dispatch_memo,
                                          get_problem, lookup_or_tune,
-                                         normalize_signature, rank_space,
-                                         register, registered)
+                                         normalize_signature,
+                                         on_dispatch_memo_clear, rank_space,
+                                         register, register_entry,
+                                         registered, unregister)
 
 __all__ = [
     "CacheKey", "MODEL_VERSION", "canonical_json", "fingerprint_spec",
     "make_key", "CacheStats", "DiskStore", "TuningDatabase", "TuningRecord",
     "TuningProblem", "clear_dispatch_memo", "get_problem", "lookup_or_tune",
-    "normalize_signature", "rank_space", "register", "registered",
+    "normalize_signature", "on_dispatch_memo_clear", "rank_space",
+    "register", "register_entry", "registered", "unregister",
     "get_default_db", "set_default_db", "reset_default_db", "pretuned_dir",
     "pretuned_path", "warm_pretuned",
 ]

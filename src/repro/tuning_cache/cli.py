@@ -49,33 +49,20 @@ DEFAULT_DB_DIR = ".tuning_cache"
 # Chips we ship a pretuned database for (pretuned/<name>.jsonl each).
 SHIPPED_TARGETS = ("tpu-v5e", "tpu-v5p", "tpu-v6e")
 
-# The production shape grid behind `pretune`: every signature the
-# shipped pretuned database covers.  Each instance is one vectorized
-# full-space rank (`rank_space` batch path), so regenerating the whole
-# grid is sub-second.
-_DTYPES = ("float32", "bfloat16")
+# The production shape grid behind `pretune` — every signature the
+# shipped pretuned databases cover — is *declared*, not listed here:
+# each `@tuned_kernel` carries its own ``pretune=`` signatures, so a
+# new decorated workload joins the shipped grid with zero CLI edits.
+# Each instance is one vectorized full-space rank (`rank_space` batch
+# path), so regenerating the whole grid is sub-second.
 
 
 def default_pretune_cases() -> List[Tuple[str, Dict[str, Any]]]:
-    cases: List[Tuple[str, Dict[str, Any]]] = []
-    for (m, n, k) in [(256,) * 3, (512,) * 3, (1024,) * 3, (2048,) * 3,
-                      (1024, 1024, 4096), (4096, 1024, 1024)]:
-        for dt in _DTYPES:
-            cases.append(("matmul", dict(m=m, n=n, k=k, dtype=dt)))
-    for s in (512, 1024, 2048, 4096):
-        for dt in _DTYPES:
-            for kid in ("matvec", "atax", "bicg"):
-                cases.append((kid, dict(m=s, n=s, dtype=dt)))
-    cases.append(("atax", dict(m=1024, n=512, dtype="float32")))
-    for s in (64, 128, 256):
-        cases.append(("jacobi3d", dict(z=s, y=s, x=s, dtype="float32")))
-    for (b, h, s) in [(2, 4, 1024), (4, 8, 2048), (1, 8, 4096)]:
-        for causal in (True, False):
-            for dt in _DTYPES:
-                cases.append(("flash_attention",
-                              dict(b=b, h=h, sq=s, skv=s, d=128,
-                                   causal=causal, dtype=dt)))
-    return cases
+    import repro.kernels  # noqa: F401  (runs every @tuned_kernel)
+    from repro.kernels import api
+    return [(kernel_id, dict(sig))
+            for kernel_id in api.registered_kernels()
+            for sig in api.get_spec(kernel_id).pretune]
 
 
 def _render_jsonl(db: TuningDatabase) -> str:

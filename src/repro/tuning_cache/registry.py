@@ -1,11 +1,19 @@
-"""Trace-time dispatch registry (DESIGN.md §7).
+"""Trace-time dispatch registry (DESIGN.md §7, §10).
 
-Kernel modules register a *dispatch problem factory* under a stable
-``kernel_id``: given concrete shapes/dtype keywords, the factory returns
-the kernel's launch-parameter `SearchSpace` plus an analytic
-``static_info(params)`` builder — the same static-analysis inputs the
-full `KernelTuner` uses, but with no inputs, no build function, and no
-reference, because dispatch only ever ranks statically.
+Kernel modules register under a stable ``kernel_id`` either
+
+* a :class:`~repro.kernels.api.KernelSpec` (the `@tuned_kernel`
+  declaration — the normal path: every in-tree kernel registers this
+  way), via :func:`register_entry`; or
+* a legacy *dispatch problem factory* ``(**signature) -> TuningProblem``
+  via the :func:`register` decorator (kept for hand-rolled problems;
+  signature normalization is derived from the factory's own
+  ``inspect.signature``).
+
+Both expose the same entry protocol — ``problem(**signature)`` and
+``normalize(signature)`` — which is all `get_problem` /
+`normalize_signature` consume, so the registry needs no import of the
+kernel layer.
 
 ``lookup_or_tune(kernel_id, m=.., n=.., dtype=..)`` is then the one call
 a kernel entry point makes at trace time: key the tuning database on
@@ -30,8 +38,9 @@ from repro.core.search import Params, SearchSpace
 from repro.tuning_cache.keys import CacheKey, fingerprint_spec, make_key
 from repro.tuning_cache.store import TuningDatabase, TuningRecord, now_unix
 
-__all__ = ["TuningProblem", "register", "get_problem", "registered",
-           "rank_space", "lookup_or_tune", "clear_dispatch_memo"]
+__all__ = ["TuningProblem", "register", "register_entry", "unregister",
+           "get_problem", "registered", "rank_space", "lookup_or_tune",
+           "clear_dispatch_memo", "on_dispatch_memo_clear"]
 
 
 @dataclasses.dataclass
@@ -50,22 +59,66 @@ class TuningProblem:
     static_info_batch: Optional[Callable[[Dict[str, np.ndarray]], Any]] = None
 
 
-_REGISTRY: Dict[str, Callable[..., TuningProblem]] = {}
+class _FactoryEntry:
+    """Adapter giving a legacy problem factory the entry protocol."""
+
+    __slots__ = ("factory", "_sig")
+
+    def __init__(self, factory: Callable[..., TuningProblem]):
+        self.factory = factory
+        self._sig: Optional[inspect.Signature] = None
+
+    def problem(self, **signature: Any) -> TuningProblem:
+        return self.factory(**signature)
+
+    def normalize(self, signature: Dict[str, Any]) -> Dict[str, Any]:
+        if self._sig is None:
+            self._sig = inspect.signature(self.factory)
+        ba = self._sig.bind(**signature)
+        ba.apply_defaults()
+        return dict(ba.arguments)
+
+
+# kernel_id -> entry with .problem(**sig) / .normalize(sig) — either a
+# KernelSpec or a _FactoryEntry; the registry is duck-typed so it never
+# has to import the kernel layer.
+_REGISTRY: Dict[str, Any] = {}
+
+
+def register_entry(kernel_id: str, entry: Any) -> Any:
+    """Register an entry object (``problem``/``normalize`` protocol).
+
+    Duplicate kernel_ids raise: two declarations silently shadowing each
+    other would make dispatch results dependent on import order.  Use
+    :func:`unregister` first to deliberately replace one.
+    """
+    if kernel_id in _REGISTRY:
+        raise ValueError(
+            f"kernel_id {kernel_id!r} is already registered; "
+            f"unregister({kernel_id!r}) first to replace it "
+            f"(registered: {registered()})")
+    _REGISTRY[kernel_id] = entry
+    return entry
 
 
 def register(kernel_id: str):
     """Decorator: register a ``(**signature) -> TuningProblem`` factory."""
     def deco(factory: Callable[..., TuningProblem]):
-        _REGISTRY[kernel_id] = factory
+        register_entry(kernel_id, _FactoryEntry(factory))
         return factory
     return deco
+
+
+def unregister(kernel_id: str) -> None:
+    """Remove a registration (no-op when absent)."""
+    _REGISTRY.pop(kernel_id, None)
 
 
 def registered() -> Tuple[str, ...]:
     return tuple(sorted(_REGISTRY))
 
 
-def _factory(kernel_id: str) -> Callable[..., TuningProblem]:
+def _entry(kernel_id: str) -> Any:
     try:
         return _REGISTRY[kernel_id]
     except KeyError:
@@ -75,29 +128,20 @@ def _factory(kernel_id: str) -> Callable[..., TuningProblem]:
 
 
 def get_problem(kernel_id: str, **signature: Any) -> TuningProblem:
-    return _factory(kernel_id)(**signature)
+    return _entry(kernel_id).problem(**signature)
 
 
 def normalize_signature(kernel_id: str,
                         signature: Dict[str, Any]) -> Dict[str, Any]:
-    """Bind a partial signature through the factory's defaults.
+    """Bind a partial signature through the entry's declared defaults.
 
     Keys must be identical no matter how the signature was spelled:
-    `tune --sig m=1024 ...` (dtype omitted, factory default applies)
-    has to produce the same record as `ops.matmul` passing
+    `tune --sig m=1024 ...` (dtype omitted, the declared default
+    applies) has to produce the same record as `ops.matmul` passing
     `dtype='float32'` explicitly, or CLI-produced databases would be
     permanent cache misses at trace time.
     """
-    factory = _factory(kernel_id)
-    sig = _SIG_CACHE.get(kernel_id)
-    if sig is None:
-        sig = _SIG_CACHE[kernel_id] = inspect.signature(factory)
-    ba = sig.bind(**signature)
-    ba.apply_defaults()
-    return dict(ba.arguments)
-
-
-_SIG_CACHE: Dict[str, inspect.Signature] = {}
+    return _entry(kernel_id).normalize(signature)
 
 
 def rank_space(problem: TuningProblem, model: CostModel
@@ -138,9 +182,24 @@ _DEFAULT_MODELS: Dict[str, CostModel] = {}
 # (`clear()` / `import_jsonl` / `warm_jsonl`).
 _DISPATCH_MEMO: Dict[Tuple, Tuple[int, Tuple[Tuple[str, Any], ...]]] = {}
 
+# Callbacks run by clear_dispatch_memo.  The kernel layer registers its
+# per-process dispatch state here (e.g. the once-per-kernel failure log
+# in repro.kernels.api) so tests that reset the memo reset everything,
+# without the registry importing the kernel layer.
+_MEMO_CLEAR_HOOKS: list = []
+
+
+def on_dispatch_memo_clear(hook: Callable[[], None]) -> Callable[[], None]:
+    """Register a callback invoked whenever the dispatch memo clears."""
+    if hook not in _MEMO_CLEAR_HOOKS:
+        _MEMO_CLEAR_HOOKS.append(hook)
+    return hook
+
 
 def clear_dispatch_memo() -> None:
     _DISPATCH_MEMO.clear()
+    for hook in list(_MEMO_CLEAR_HOOKS):
+        hook()
 
 
 def _model_for(spec: TpuSpec) -> CostModel:

@@ -43,6 +43,7 @@ CASES = [
                              causal=True, dtype="float32")),
     ("flash_attention", dict(b=1, h=8, sq=2048, skv=512, d=128,
                              causal=False, dtype="bfloat16")),
+    ("stencil2d", dict(y=1024, x=512, dtype="float32")),
 ]
 
 _IDS = [f"{k}-{'-'.join(str(v) for v in s.values())}" for k, s in CASES]

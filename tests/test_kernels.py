@@ -112,3 +112,56 @@ def test_ops_defaults_dispatch():
     u = jnp.asarray(RNG.standard_normal((12, 16, 128)), jnp.float32)
     np.testing.assert_allclose(ops.jacobi3d(u), ref.jacobi3d_ref(u),
                                rtol=1e-5, atol=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# input validation: real exceptions (asserts vanish under `python -O`)
+# ---------------------------------------------------------------------------
+
+
+def test_matmul_rejects_mismatched_inner_dims():
+    a = jnp.ones((128, 64), jnp.float32)
+    b = jnp.ones((128, 64), jnp.float32)      # 64 != 128
+    with pytest.raises(ValueError, match=r"inner dimensions.*128"):
+        matmul_pallas(a, b)
+
+
+def test_pallas_kernels_reject_non_dividing_blocks():
+    from repro.kernels.stencil2d import stencil2d_pallas
+    a = jnp.ones((96, 96), jnp.float32)
+    v = jnp.ones((96, 1), jnp.float32)
+    cases = [
+        (lambda: matmul_pallas(a, a, bm=40), "matmul_pallas"),
+        (lambda: matvec_pallas(a, v, bm=40), "matvec_pallas"),
+        (lambda: atax_pallas(a, v, bm=40), "atax_pallas"),
+        (lambda: bicg_pallas(a, v, jnp.ones((96, 1), jnp.float32), bm=40),
+         "bicg_pallas"),
+        (lambda: jacobi3d_pallas(jnp.ones((6, 8, 128), jnp.float32), bz=4),
+         "jacobi3d_pallas"),
+        (lambda: flash_attention_pallas(
+            jnp.ones((1, 1, 96, 64), jnp.float32),
+            jnp.ones((1, 1, 96, 64), jnp.float32),
+            jnp.ones((1, 1, 96, 64), jnp.float32), bq=40),
+         "flash_attention_pallas"),
+        (lambda: stencil2d_pallas(a, by=40), "stencil2d_pallas"),
+    ]
+    for call, name in cases:
+        with pytest.raises(ValueError, match=name) as exc:
+            call()
+        # the error names the offending (shape, block) pair
+        assert "does not divide" in str(exc.value), name
+
+
+def test_pallas_kernels_reject_wrong_operand_shapes():
+    a = jnp.ones((128, 64), jnp.float32)
+    bad = jnp.ones((32, 1), jnp.float32)
+    with pytest.raises(ValueError, match=r"x has shape \(32, 1\)"):
+        matvec_pallas(a, bad)
+    with pytest.raises(ValueError, match=r"x has shape"):
+        atax_pallas(a, bad)
+    with pytest.raises(ValueError, match=r"p has shape"):
+        bicg_pallas(a, bad, jnp.ones((128, 1), jnp.float32))
+    with pytest.raises(ValueError, match=r"k has shape"):
+        flash_attention_pallas(jnp.ones((1, 2, 128, 64), jnp.float32),
+                               jnp.ones((1, 1, 128, 64), jnp.float32),
+                               jnp.ones((1, 1, 128, 64), jnp.float32))
