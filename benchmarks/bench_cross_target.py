@@ -31,7 +31,7 @@ import numpy as np
 
 import repro.kernels  # noqa: F401  (registers dispatch problems)
 from repro import tuning_cache
-from repro.core import resolve_target, use_target
+from repro.core import TpuSpec, resolve_target, use_target
 from repro.core.predict import default_tpu_model, static_times_batch
 from repro.tuning_cache.cli import SHIPPED_TARGETS
 from repro.tuning_cache.registry import rank_space
@@ -99,7 +99,11 @@ def main() -> int:
     ap.add_argument("--out", default="BENCH_cross_target.json")
     args = ap.parse_args()
 
-    targets = list(SHIPPED_TARGETS)
+    # TPU family only: cross-family "portability" is meaningless (a
+    # GpuSpec ranks a threads space, not Pallas blocks); the CUDA side
+    # has its own benchmark (bench_cuda_dispatch.py).
+    targets = [t for t in SHIPPED_TARGETS
+               if isinstance(resolve_target(t), TpuSpec)]
     cases = SMOKE_CASES if args.smoke else CASES
     rows = [bench_case(k, s, targets) for k, s in cases]
 

@@ -1,0 +1,137 @@
+"""Paper Table VII through the *modern registry path* (zero program runs).
+
+    PYTHONPATH=src python benchmarks/bench_cuda_dispatch.py [--smoke] [--out F]
+
+`bench_table7_suggestions.py` validates the occupancy math by calling
+`suggest_cuda_params` directly — a standalone figure script.  This
+benchmark proves the same suggestions now flow through the production
+dispatch stack: for each paper kernel x Table I GPU,
+
+* ``lookup_or_tune(kernel, spec="kepler_k20", ...)`` ranks the CUDA
+  thread-block space under the faithful Eqs. 1-6 models and returns
+  ``{"threads": ...}`` — with **zero** kernel executions or
+  compilations, and *zero tunes* when the shipped per-GPU pretuned
+  database is warm;
+* the registry's pick must lie in `suggest_cuda_params`' max-occupancy
+  set T* (the Table VII column), and the achieved occ* must match the
+  paper's printed value under the same semantics the figure script
+  uses (exactly for register-limited/unconstrained rows, as an upper
+  bound where the paper's unpublished S^u binds);
+* the records round-trip through JSONL export/import bit-faithfully
+  (including the non-finite ``predicted_s`` -> null mapping).
+
+Results go to ``BENCH_cuda_dispatch.json``; ``--smoke`` (CI) asserts
+the invariants and prints a compact table.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import tempfile
+
+import repro.kernels  # noqa: F401  (registers dispatch problems)
+from repro import tuning_cache
+from repro.core import resolve_target, suggest_cuda_params
+from repro.kernels.api import get_spec
+from repro.tuning_cache import TuningDatabase, warm_pretuned
+
+# Paper kernel -> (our kernel_id, a shipped pretune signature).
+PAPER_KERNELS = {
+    "atax": ("atax", dict(m=4096, n=4096, dtype="float32")),
+    "bicg": ("bicg", dict(m=4096, n=4096, dtype="float32")),
+    "ex14FJ": ("jacobi3d", dict(z=128, y=128, x=128, dtype="float32")),
+    "matVec2D": ("matvec", dict(m=4096, n=4096, dtype="float32")),
+}
+
+GPUS = ("fermi-m2050", "kepler-k20", "maxwell-m40")
+
+# Paper's printed occ* (Table VII), same rows as bench_table7.
+PAPER_OCC = {
+    ("atax", "fermi-m2050"): 1.0, ("atax", "kepler-k20"): 1.0,
+    ("atax", "maxwell-m40"): 1.0,
+    ("bicg", "fermi-m2050"): 0.75, ("bicg", "kepler-k20"): 1.0,
+    ("bicg", "maxwell-m40"): 0.71,
+    ("ex14FJ", "fermi-m2050"): 0.71, ("ex14FJ", "kepler-k20"): 1.0,
+    ("ex14FJ", "maxwell-m40"): 1.0,
+    ("matVec2D", "fermi-m2050"): 0.92, ("matVec2D", "kepler-k20"): 1.0,
+    ("matVec2D", "maxwell-m40"): 1.0,
+}
+
+# Rows exactly reproducible from the published R^u alone; the rest
+# embed unpublished shared-memory usage, so our S^u = 0 model upper-
+# bounds them (see bench_table7_suggestions.py).
+EXACT_ROWS = {k for k, v in PAPER_OCC.items() if v == 1.0} | {
+    ("bicg", "fermi-m2050"), ("ex14FJ", "fermi-m2050")}
+
+
+def bench_row(paper_kernel: str, gpu_name: str, db: TuningDatabase) -> dict:
+    kernel_id, sig = PAPER_KERNELS[paper_kernel]
+    gpu = resolve_target(gpu_name)
+    params = tuning_cache.lookup_or_tune(kernel_id, db=db, spec=gpu, **sig)
+    prof = get_spec(kernel_id).cuda
+    sugg = suggest_cuda_params(prof.regs_for(gpu), prof.shmem_for(**sig),
+                               gpu)
+    paper = PAPER_OCC[(paper_kernel, gpu_name)]
+    exact = (paper_kernel, gpu_name) in EXACT_ROWS
+    return {
+        "kernel": paper_kernel, "kernel_id": kernel_id, "gpu": gpu.name,
+        "r_u": prof.regs_for(gpu), "threads": params["threads"],
+        "t_star": sugg["threads"][-5:], "occ_star": sugg["occ_star"],
+        "paper_occ_star": paper,
+        "occ_match": (abs(sugg["occ_star"] - paper) < 0.05 if exact
+                      else sugg["occ_star"] >= paper - 0.05),
+        "registry_in_t_star": params["threads"] in sugg["threads"],
+        "reg_headroom": sugg["reg_headroom"],
+        "shmem_star": sugg["shmem_star"],
+    }
+
+
+def run() -> dict:
+    db = TuningDatabase()
+    for gpu_name in GPUS:
+        warm_pretuned(db, gpu_name)       # the shipped per-GPU JSONLs
+    rows = [bench_row(pk, g, db) for pk in PAPER_KERNELS for g in GPUS]
+    # Round-trip: the ranked records must survive strict-JSON export.
+    with tempfile.TemporaryDirectory() as td:
+        path = os.path.join(td, "gpu.jsonl")
+        exported = db.export_jsonl(path)
+        for line in open(path, encoding="utf-8"):
+            json.loads(line, parse_constant=lambda c: (_ for _ in ()).throw(
+                ValueError(f"non-strict JSON constant {c!r} in export")))
+        reimported = TuningDatabase()
+        reimported.import_jsonl(path)
+    return {"rows": rows, "tunes": db.stats.tunes,
+            "exported": exported, "reimported": len(reimported)}
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="assert invariants (CI)")
+    ap.add_argument("--out", default="BENCH_cuda_dispatch.json")
+    args = ap.parse_args()
+    res = run()
+    for r in res["rows"]:
+        print(f"table7/{r['kernel']:<9}/{r['gpu']:<6} R^u={r['r_u']:<3} "
+              f"registry threads={r['threads']:<5} T*={r['t_star']} "
+              f"occ*={r['occ_star']:.2f} paper={r['paper_occ_star']:.2f} "
+              f"match={r['occ_match']} in_T*={r['registry_in_t_star']}")
+    print(f"tunes={res['tunes']} (0 = pure shipped-db hits), "
+          f"round-trip {res['exported']} -> {res['reimported']} records")
+    with open(args.out, "w", encoding="utf-8") as f:
+        json.dump(res, f, indent=2, sort_keys=True)
+    if args.smoke:
+        assert res["tunes"] == 0, \
+            f"expected zero tunes off the shipped GPU dbs, got {res['tunes']}"
+        bad = [r for r in res["rows"] if not r["registry_in_t_star"]]
+        assert not bad, f"registry pick outside Table VII T*: {bad}"
+        bad = [r for r in res["rows"] if not r["occ_match"]]
+        assert not bad, f"occ* disagrees with the paper: {bad}"
+        assert res["reimported"] == res["exported"]
+        print("smoke OK")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

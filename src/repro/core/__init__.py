@@ -12,9 +12,10 @@ Layers (paper §III):
   roofline   3-term roofline from compiled artifacts
 """
 from repro.core.hw import (GPU_TABLE, FERMI_M2050, KEPLER_K20, MAXWELL_M40,
-                           GpuSpec, TpuSpec, TPU_V4, TPU_V5E, TPU_V5P,
-                           TPU_V6E, TPU_TABLE, resolve_target, IPC_TABLE,
-                           cpi, tpu_rate_table, dtype_bytes)
+                           ChipSpec, GpuSpec, TpuSpec, TPU_V4, TPU_V5E,
+                           TPU_V5P, TPU_V6E, TPU_TABLE, resolve_target,
+                           require_tpu, IPC_TABLE, cpi, tpu_rate_table,
+                           dtype_bytes)
 from repro.core.target import (ENV_TARGET, default_target,
                                set_default_target, use_target,
                                detect_target)
@@ -22,9 +23,11 @@ from repro.core.mix import (InstructionMix, mix_from_jaxpr, mix_of_fn,
                             mix_from_hlo_text, mix_from_cost_analysis,
                             intensity, classify_boundedness)
 from repro.core.occupancy import (CudaOccupancy, cuda_occupancy,
+                                  CudaOccupancyBatch, cuda_occupancy_batch,
                                   suggest_cuda_params, TpuOccupancy,
                                   tpu_occupancy, suggest_block_shapes)
-from repro.core.predict import (CostModel, default_tpu_model, predict_time,
+from repro.core.predict import (CostModel, default_tpu_model,
+                                default_cuda_model, predict_time,
                                 cuda_eq6_time, calibrate, spearman,
                                 rank_candidates, features_matrix,
                                 static_times_batch)

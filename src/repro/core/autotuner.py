@@ -32,7 +32,7 @@ from typing import Any, Callable, Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
 
-from repro.core.hw import TpuSpec, resolve_target
+from repro.core.hw import TpuSpec, require_tpu, resolve_target
 from repro.core.mix import InstructionMix, intensity, classify_boundedness
 from repro.core.target import use_target
 from repro.core.occupancy import TpuOccupancy
@@ -182,7 +182,10 @@ class KernelTuner:
                  seed: int = 0,
                  db: Any = "default"):
         self.kernel = kernel
-        self.spec = resolve_target(spec)
+        # KernelTuner drives the Pallas pipeline model; a GpuSpec target
+        # must fail here with the family-check error, not deeper in
+        # default_tpu_model (GPU rankings go through lookup_or_tune)
+        self.spec = require_tpu(spec, type(self).__name__)
         self.model = model or default_tpu_model(self.spec, mode="max")
         self.repeats = repeats
         self.keep_frac = keep_frac
@@ -435,7 +438,7 @@ class GraphTuner:
         self.lower_fn = lower_fn
         self.chips = chips
         self.model_flops = model_flops
-        self.spec = resolve_target(spec)
+        self.spec = require_tpu(spec, type(self).__name__)
         self.ici_links = (self.spec.ici_links if ici_links is None
                           else ici_links)
         self.db = db

@@ -16,13 +16,37 @@ Two families live here:
    meaning the process default from :mod:`repro.core.target`) into a
    spec.
 
+Both families satisfy the :class:`ChipSpec` protocol (a ``name`` plus
+frozen-dataclass fields), which is all the tuning database, dispatch
+registry, and cache-key fingerprint require — the static-tuning stack
+is parametric over the *spec family*, not just the chip: a
+``GpuSpec`` target routes dispatch through the faithful CUDA
+occupancy/Eq. 6 models, a ``TpuSpec`` target through the Pallas
+pipeline model (DESIGN.md §11).
+
 Everything is a frozen dataclass so specs can be hashed into tuning
 cache keys.
 """
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, Optional, Union
+from typing import Dict, Optional, Protocol, Union, runtime_checkable
+
+
+@runtime_checkable
+class ChipSpec(Protocol):
+    """What every hardware target must expose to the tuning stack.
+
+    Satisfied structurally by both :class:`TpuSpec` and
+    :class:`GpuSpec`: a stable ``name`` and frozen-dataclass fields
+    (``dataclasses.asdict`` must work, so
+    `repro.tuning_cache.keys.fingerprint_spec` can content-address the
+    descriptor).  Family-specific rates (VMEM budgets, warp slots)
+    stay on the concrete classes — the shared stack never touches
+    them; only the per-family occupancy/cost models do.
+    """
+
+    name: str
 
 
 # ---------------------------------------------------------------------------
@@ -97,8 +121,11 @@ MAXWELL_M40 = GpuSpec(
 
 GPU_TABLE: Dict[str, GpuSpec] = {
     "m2050": FERMI_M2050, "fermi": FERMI_M2050,
+    "fermi-m2050": FERMI_M2050,
     "k20": KEPLER_K20, "kepler": KEPLER_K20,
+    "kepler-k20": KEPLER_K20,
     "m40": MAXWELL_M40, "maxwell": MAXWELL_M40,
+    "maxwell-m40": MAXWELL_M40,
 }
 
 
@@ -232,18 +259,23 @@ TPU_TABLE: Dict[str, TpuSpec] = {
 }
 
 
-def resolve_target(target: Optional[Union[str, TpuSpec]] = None) -> TpuSpec:
+def resolve_target(target: Optional[Union[str, "ChipSpec"]] = None
+                   ) -> "ChipSpec":
     """Name-or-spec -> spec; ``None`` -> the process default target.
 
-    Accepts canonical names ('tpu-v5p'), short aliases ('v5p'), and the
-    spellings jax's ``device_kind`` / env vars use ('TPU v5p',
-    'tpu_v5p', 'TPU v5 lite').  A `TpuSpec` passes through unchanged so
-    every ``spec=`` keyword in the stack takes either form.
+    One resolver for *both* spec families.  Accepts canonical TPU names
+    ('tpu-v5p'), short aliases ('v5p'), the spellings jax's
+    ``device_kind`` / env vars use ('TPU v5p', 'tpu_v5p',
+    'TPU v5 lite'), and the paper's Table I GPUs by part, family, or
+    family_part composite ('k20', 'kepler', 'kepler_k20',
+    'fermi-m2050', 'maxwell_m40').  A `TpuSpec` or `GpuSpec` passes
+    through unchanged so every ``spec=`` keyword in the stack takes
+    either form.
     """
     if target is None:
         from repro.core.target import default_target
         return default_target()
-    if isinstance(target, TpuSpec):
+    if isinstance(target, (TpuSpec, GpuSpec)):
         return target
     name = str(target).strip().lower().replace("_", "-").replace(" ", "-")
     # device_kind spellings: 'TPU v5 lite' / 'TPU v6 lite' are the
@@ -254,15 +286,35 @@ def resolve_target(target: Optional[Union[str, TpuSpec]] = None) -> TpuSpec:
     for key in (name, name[len("tpu-"):] if name.startswith("tpu-") else name):
         if key in TPU_TABLE:
             return TPU_TABLE[key]
+    if name in GPU_TABLE:
+        return GPU_TABLE[name]
     raise KeyError(
-        f"unknown TPU target {target!r}; known: "
-        f"{sorted(k for k in TPU_TABLE if k.startswith('tpu-'))}")
+        f"unknown hardware target {target!r}; known TPUs: "
+        f"{sorted(k for k in TPU_TABLE if k.startswith('tpu-'))}, "
+        f"GPUs: {sorted(k for k in GPU_TABLE if '-' in k)}")
+
+
+def require_tpu(spec: "ChipSpec", what: str) -> TpuSpec:
+    """Resolve + family-check for the TPU-only layers.
+
+    The Pallas pipeline model reads TPU-only fields (VMEM budget, MXU
+    rates); handing it a `GpuSpec` must fail with a pointer to the
+    CUDA-side model, not an AttributeError three frames down.
+    """
+    spec = resolve_target(spec)
+    if not isinstance(spec, TpuSpec):
+        raise TypeError(
+            f"{what} models the TPU pipeline and needs a TpuSpec; got the "
+            f"CUDA target {spec.name!r} — use the cuda_* analogue "
+            f"(repro.core.occupancy.cuda_occupancy / "
+            f"repro.core.predict.default_cuda_model) for GpuSpec targets")
+    return spec
 
 
 # Instruction-class peak rates for Eq. 6 on TPU (the Table II analogue).
 # Keys are the InstructionMix categories defined in repro.core.mix.
 def tpu_rate_table(spec: Optional[TpuSpec] = None) -> Dict[str, float]:
-    spec = resolve_target(spec)
+    spec = require_tpu(spec, "tpu_rate_table")
     return {
         # FLOP-like categories: events/sec.
         "mxu_flops": spec.peak_flops_bf16,

@@ -24,11 +24,13 @@ from typing import Dict, Iterable, List, Optional, Sequence, Tuple
 
 import numpy as np
 
-from repro.core.hw import GpuSpec, TpuSpec, dtype_bytes, resolve_target
+from repro.core.hw import (GpuSpec, TpuSpec, dtype_bytes, require_tpu,
+                           resolve_target)
 from repro.core.mix import InstructionMix
 
 __all__ = [
     "CudaOccupancy", "cuda_occupancy", "suggest_cuda_params",
+    "CudaOccupancyBatch", "cuda_occupancy_batch",
     "TpuOccupancy", "tpu_occupancy", "suggest_block_shapes",
     "TpuOccupancyBatch", "tpu_occupancy_batch",
 ]
@@ -147,6 +149,100 @@ def suggest_cuda_params(regs_per_thread: int,
 
 
 # ---------------------------------------------------------------------------
+# Batched CUDA occupancy (struct-of-arrays over a thread-size lattice)
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class CudaOccupancyBatch:
+    """`CudaOccupancy` over N configurations, one array per field.
+
+    Produced by :func:`cuda_occupancy_batch`; element ``i`` of every
+    field equals the corresponding scalar :func:`cuda_occupancy` field
+    for configuration ``i`` exactly (the parity tests compare with
+    ``==``, not a tolerance).  This is what keeps `rank_space` a single
+    vectorized pass for GPU targets, mirroring `tpu_occupancy_batch`.
+    """
+
+    active_blocks: np.ndarray   # (N,) int64
+    active_warps: np.ndarray    # (N,) int64
+    occupancy: np.ndarray       # (N,) float64
+    limiter: np.ndarray         # (N,) str ('warps'|'regs'|'shmem')
+    g_warps: np.ndarray         # (N,) int64
+    g_regs: np.ndarray          # (N,) int64
+    g_shmem: np.ndarray         # (N,) int64
+
+    def __len__(self) -> int:
+        return int(self.occupancy.shape[0])
+
+    def at(self, i: int) -> CudaOccupancy:
+        """Scalar view of configuration ``i`` (debugging / parity)."""
+        return CudaOccupancy(
+            active_blocks=int(self.active_blocks[i]),
+            active_warps=int(self.active_warps[i]),
+            occupancy=float(self.occupancy[i]),
+            limiter=str(self.limiter[i]),
+            g_warps=int(self.g_warps[i]),
+            g_regs=int(self.g_regs[i]),
+            g_shmem=int(self.g_shmem[i]))
+
+
+def _ceil_div(a: np.ndarray, b: int) -> np.ndarray:
+    return -(-a // b)
+
+
+def cuda_occupancy_batch(threads_per_block,
+                         regs_per_thread,
+                         shmem_per_block,
+                         gpu: GpuSpec) -> CudaOccupancyBatch:
+    """Vectorized :func:`cuda_occupancy` over whole candidate lattices.
+
+    Same contract, array-valued: each of the three resource-usage
+    inputs may be a scalar or an (N,) array (typically the ``threads``
+    column of `SearchSpace.enumerate_lattice`); they broadcast against
+    each other.  All arithmetic is integer, mirroring the scalar
+    ``math.ceil``/``math.floor`` over Python ints bit-for-bit.
+    """
+    t, r, s = np.broadcast_arrays(
+        np.asarray(threads_per_block, dtype=np.int64),
+        np.asarray(regs_per_thread, dtype=np.int64),
+        np.asarray(shmem_per_block, dtype=np.int64))
+    t, r, s = (np.atleast_1d(t), np.atleast_1d(r), np.atleast_1d(s))
+    b_mp = gpu.blocks_per_mp
+    tw = gpu.threads_per_warp
+    # Eq. 3 — warp-slot bound.  The scalar path divides by
+    # ceil(t / tw) with t > 0; clamp the denominator so the dead
+    # branch of the where() never divides by zero.
+    warps_per_block = np.maximum(_ceil_div(np.maximum(t, 1), tw), 1)
+    gw = np.where(t <= 0, b_mp,
+                  np.minimum(b_mp, gpu.warps_per_mp // warps_per_block))
+    # Eq. 4 — register-file bound.
+    regs_per_warp = _ceil_div(r * tw, gpu.reg_alloc_size) \
+        * gpu.reg_alloc_size
+    warps_limited = gpu.regs_per_block // np.maximum(regs_per_warp, 1)
+    gr = np.where(r > gpu.regs_per_thread, 0,
+                  np.where(r > 0,
+                           np.maximum(0, warps_limited // warps_per_block),
+                           b_mp))
+    # Eq. 5 — shared-memory bound.
+    gs = np.where(s > gpu.shmem_per_block, 0,
+                  np.where(s > 0, gpu.shmem_per_mp // np.maximum(s, 1),
+                           b_mp))
+    bounds = np.stack([gw, gr, gs])              # same order as the
+    limiter_ix = np.argmin(bounds, axis=0)       # scalar dict-min tie rule
+    active = np.maximum(0, bounds.min(axis=0))   # Eq. 1
+    aw = np.minimum(active * warps_per_block, gpu.warps_per_mp)
+    return CudaOccupancyBatch(
+        active_blocks=active.astype(np.int64),
+        active_warps=aw.astype(np.int64),
+        occupancy=aw / gpu.warps_per_mp,         # Eq. 2
+        limiter=np.array(["warps", "regs", "shmem"])[limiter_ix],
+        g_warps=gw.astype(np.int64),
+        g_regs=gr.astype(np.int64),
+        g_shmem=gs.astype(np.int64))
+
+
+# ---------------------------------------------------------------------------
 # TPU occupancy (the adaptation)
 # ---------------------------------------------------------------------------
 
@@ -211,7 +307,7 @@ def tpu_occupancy(block_in_bytes: Sequence[int],
     spec:
         chip to model; ``None`` = the process default target.
     """
-    spec = resolve_target(spec)
+    spec = require_tpu(spec, "tpu_occupancy")
     moved = float(sum(block_in_bytes) + sum(block_out_bytes))
     vmem = int(moved * buffering + scratch_bytes)
     budget = spec.vmem_bytes
@@ -316,7 +412,7 @@ def tpu_occupancy_batch(block_in_bytes: Sequence,
     may mix int dims with (N,) array dims.  One NumPy pass computes the
     step time, grid steps, and VMEM feasibility of all N configurations.
     """
-    spec = resolve_target(spec)
+    spec = require_tpu(spec, "tpu_occupancy_batch")
     moved = np.asarray(sum(np.asarray(b, dtype=np.float64)
                            for b in list(block_in_bytes)
                            + list(block_out_bytes)), dtype=np.float64)
@@ -364,7 +460,7 @@ def suggest_block_shapes(m: int, n: int, k: int,
                          ) -> List[Tuple[Tuple[int, int, int], TpuOccupancy]]:
     """Table VII analogue for TPU matmul tiles: rank (bm, bn, bk)
     candidates by static occupancy (no compilation, no execution)."""
-    spec = resolve_target(spec)
+    spec = require_tpu(spec, "suggest_block_shapes")
     if candidates is None:
         sizes = [128, 256, 512, 1024]
         candidates = [(bm, bn, bk) for bm in sizes for bn in sizes

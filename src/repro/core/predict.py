@@ -23,18 +23,18 @@ measured (mix, time) pairs by non-negative least squares — the paper's
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, Optional, Sequence, Tuple
+from typing import Dict, Optional, Sequence, Tuple, Union
 
 import numpy as np
 
-from repro.core.hw import (GpuSpec, TpuSpec, cpi, resolve_target,
-                           tpu_rate_table)
+from repro.core.hw import (GpuSpec, TpuSpec, cpi, require_tpu,
+                           resolve_target, tpu_rate_table)
 from repro.core.mix import InstructionMix
 
 __all__ = [
-    "CostModel", "default_tpu_model", "predict_time", "cuda_eq6_time",
-    "calibrate", "rank_candidates", "spearman", "features_matrix",
-    "static_times_batch",
+    "CostModel", "default_tpu_model", "default_cuda_model", "predict_time",
+    "cuda_eq6_time", "calibrate", "rank_candidates", "spearman",
+    "features_matrix", "static_times_batch",
 ]
 
 _FEATURES = ("mxu_flops", "vpu_flops", "trans_flops", "hbm_bytes",
@@ -126,13 +126,43 @@ class CostModel:
 
 def default_tpu_model(spec: Optional[TpuSpec] = None,
                       mode: str = "sum") -> CostModel:
-    rates = tpu_rate_table(resolve_target(spec))
+    rates = tpu_rate_table(require_tpu(spec, "default_tpu_model"))
     coeffs = {k: (1.0 / v if v else 0.0) for k, v in rates.items()
               if k in _FEATURES}
     # vmem traffic overlaps aggressively with compute; damp its serial cost
     coeffs["vmem_bytes"] = coeffs.get("vmem_bytes", 0.0)
     return CostModel(coeffs=coeffs, mode=mode,
                      name=f"tpu-eq6-{mode}")
+
+
+def default_cuda_model(spec: Union[str, GpuSpec, None] = None) -> CostModel:
+    """The paper's Eq. 6 as a `CostModel` (the GpuSpec counterpart of
+    :func:`default_tpu_model`, used by registry dispatch).
+
+    The four CUDA instruction classes ride the shared 7-feature layout
+    under a fixed column mapping — O_fl -> ``mxu_flops``, O_mem ->
+    ``hbm_bytes``, O_ctrl -> ``ctrl_ops``, O_reg -> ``reg_ops`` (the
+    remaining TPU-only columns get zero weight) — so `time_batch` /
+    `static_times_batch` / `rank_space` score CUDA candidate sets with
+    the exact same vectorized pass TPU targets use.  Coefficients are
+    CPI (reciprocal Table II throughput) over the class representatives
+    of :func:`cuda_eq6_time`, divided by the core clock: seconds per
+    event, paper-faithful serial composition (``mode='sum'``).
+    """
+    spec = resolve_target(spec)
+    if not isinstance(spec, GpuSpec):
+        raise TypeError(
+            f"default_cuda_model needs a GpuSpec; got {spec.name!r} — "
+            f"use default_tpu_model for TPU targets")
+    hz = spec.gpu_clock_mhz * 1e6
+    coeffs = {
+        "mxu_flops": cpi("FPIns32", spec) / hz,   # O_fl
+        "hbm_bytes": cpi("LdStIns", spec) / hz,   # O_mem
+        "ctrl_ops": cpi("CtrlIns", spec) / hz,    # O_ctrl
+        "reg_ops": cpi("Regs", spec) / hz,        # O_reg
+    }
+    return CostModel(coeffs=coeffs, mode="sum",
+                     name=f"cuda-eq6-{spec.name}")
 
 
 def predict_time(mix: InstructionMix,

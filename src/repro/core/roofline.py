@@ -20,7 +20,7 @@ import dataclasses
 import json
 from typing import Dict, Optional
 
-from repro.core.hw import TpuSpec, resolve_target
+from repro.core.hw import TpuSpec, require_tpu, resolve_target
 from repro.core.hlo import (CollectiveStats, collective_stats, module_mix,
                             parse_hlo)
 from repro.core.mix import InstructionMix
@@ -75,7 +75,7 @@ def roofline_from_artifacts(name: str,
     ``ici_links`` — links per chip (``None`` = from the spec's ICI
     topology: 2D torus 4, 3D torus 6).
     """
-    spec = resolve_target(spec)
+    spec = require_tpu(spec, "roofline_from_artifacts")
     if ici_links is None:
         ici_links = spec.ici_links
     if mix is None and hlo_text is not None:

@@ -8,8 +8,9 @@ active.  Resolution order:
 1. a scoped :func:`use_target` override (context-local: threads and
    async tasks scope independently), then an explicit process-wide
    :func:`set_default_target` pin,
-2. the ``REPRO_TUNING_TARGET`` environment variable (a
-   `repro.core.hw.TPU_TABLE` name, e.g. ``tpu-v5p``),
+2. the ``REPRO_TUNING_TARGET`` environment variable (any name
+   `repro.core.hw.resolve_target` accepts — a TPU table entry like
+   ``tpu-v5p`` or a paper Table I GPU like ``kepler_k20``),
 3. best-effort auto-detection from ``jax.devices()[0].device_kind``
    (memoized; CPU/GPU backends simply don't match),
 4. the v5e fallback, so behaviour without any configuration is
@@ -28,7 +29,7 @@ import logging
 import os
 from typing import Iterator, Optional, Union
 
-from repro.core.hw import TPU_V5E, TpuSpec, resolve_target
+from repro.core.hw import ChipSpec, TPU_V5E, resolve_target
 
 __all__ = ["ENV_TARGET", "default_target", "set_default_target",
            "use_target", "detect_target"]
@@ -41,11 +42,11 @@ _log = logging.getLogger(__name__)
 # concurrent threads / async tasks each see their own scope, so one
 # trace pinning v5p around a cold rank can never leak v5p into another
 # thread's v5e analysis (and vice versa).
-_scoped: "contextvars.ContextVar[Optional[TpuSpec]]" = \
+_scoped: "contextvars.ContextVar[Optional[ChipSpec]]" = \
     contextvars.ContextVar("repro_target_scoped", default=None)
 # Process-wide pin (set_default_target) — deliberately global: it must
 # be visible to threads spawned before or after the call.
-_explicit: Optional[TpuSpec] = None
+_explicit: Optional[ChipSpec] = None
 # Memoized auto-detection result; None = not attempted yet.  Holds
 # (spec_or_None,) so a failed detection is remembered as (None,).
 _detected: Optional[tuple] = None
@@ -54,10 +55,10 @@ _detected: Optional[tuple] = None
 _env_cache: Optional[tuple] = None
 
 
-def detect_target() -> Optional[TpuSpec]:
+def detect_target() -> Optional[ChipSpec]:
     """Best-effort chip detection from the local jax backend.
 
-    Returns the matching `TpuSpec`, or ``None`` when there is no TPU
+    Returns the matching spec, or ``None`` when there is no TPU
     (CPU/GPU backend) or jax is unavailable.  The first call may
     initialize the jax backend; results — including failures — are
     memoized for the life of the process.
@@ -76,7 +77,7 @@ def detect_target() -> Optional[TpuSpec]:
     return _detected[0]
 
 
-def default_target() -> TpuSpec:
+def default_target() -> ChipSpec:
     """The chip every ``spec=None`` in the stack resolves to."""
     spec = _scoped.get()
     if spec is not None:
@@ -97,7 +98,7 @@ def default_target() -> TpuSpec:
     return TPU_V5E
 
 
-def set_default_target(target: Optional[Union[str, TpuSpec]]) -> TpuSpec:
+def set_default_target(target: Optional[Union[str, ChipSpec]]) -> ChipSpec:
     """Pin the process-default target (``None`` restores env/auto/v5e
     resolution).  Returns the now-active target."""
     global _explicit
@@ -106,7 +107,7 @@ def set_default_target(target: Optional[Union[str, TpuSpec]]) -> TpuSpec:
 
 
 @contextlib.contextmanager
-def use_target(target: Union[str, TpuSpec]) -> Iterator[TpuSpec]:
+def use_target(target: Union[str, ChipSpec]) -> Iterator[ChipSpec]:
     """Scoped default target; restores the prior default on exit, even
     when the body raises.  Nests (inner targets shadow outer ones) and
     is context-local: concurrent threads/tasks scope independently."""

@@ -55,14 +55,17 @@ import numpy as np
 from repro import tuning_cache
 from repro.core.annotations import parse_tuning_spec
 from repro.core.autotuner import KernelStaticInfo, TunableKernel
+from repro.core.hw import GpuSpec
 from repro.core.search import Params, SearchSpace
 from repro.core.target import default_target
 from repro.kernels.common import (BatchStaticInfo, block_info,
-                                  block_info_batch,
+                                  block_info_batch, cuda_info,
+                                  cuda_info_batch,
                                   pick_divisor_candidates)
 
 __all__ = [
     "KernelSpec", "tuned_kernel", "divisors", "Divisors",
+    "CudaProfile", "cuda_profile",
     "get_spec", "registered_kernels", "unregister",
     "reset_dispatch_failure_log",
 ]
@@ -148,6 +151,89 @@ def _coerce_space(kernel_id: str, space) -> Dict[str, Any]:
 
 
 # ---------------------------------------------------------------------------
+# CUDA-side declaration (GpuSpec targets)
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class CudaProfile:
+    """What the faithful CUDA models need to know about one kernel.
+
+    The paper's static analysis reads three things off a compiled CUDA
+    kernel: its register pressure R^u (per compute capability — the
+    same source compiles to different pressures per chip generation,
+    which is why Table VII prints one R^u per column), its shared
+    memory per block S^u, and its instruction-class counts (Eq. 6's
+    O_fl / O_mem / O_ctrl / O_reg).  A Pallas reproduction has no CUDA
+    compiler to ask, so the declaration carries them:
+
+    * ``regs`` — R^u as a flat int, or a ``{family: R^u}`` mapping
+      keyed by `GpuSpec.family` ('Fermi' / 'Kepler' / 'Maxwell');
+      a missing family falls back to the ``'default'`` key, then to
+      the mapping's max (conservative pressure).
+    * ``shmem_per_block`` — S^u bytes, an int or a
+      ``(**signature) -> int`` callable.
+    * ``workload`` — ``(**signature) -> {o_fl, o_mem, o_ctrl, o_reg}``
+      whole-kernel class counts; omitted counts default to 1.0 (the
+      occupancy term alone then drives the ranking, which is exactly
+      Table VII's rule: prefer max occupancy).
+    * ``threads`` — candidate T^u override; default: every warp
+      multiple up to the chip's block limit, the same lattice
+      `repro.core.occupancy.suggest_cuda_params` sweeps.
+    """
+
+    regs: Union[int, Mapping[str, int]] = 32
+    shmem_per_block: Union[int, Callable[..., int]] = 0
+    workload: Optional[Callable[..., Mapping[str, float]]] = None
+    threads: Optional[Tuple[int, ...]] = None
+
+    _COUNTS = ("o_fl", "o_mem", "o_ctrl", "o_reg")
+
+    def regs_for(self, gpu: GpuSpec) -> int:
+        if isinstance(self.regs, Mapping):
+            v = self.regs.get(gpu.family, self.regs.get("default"))
+            return int(v if v is not None else max(self.regs.values()))
+        return int(self.regs)
+
+    def shmem_for(self, **signature) -> int:
+        if callable(self.shmem_per_block):
+            return int(self.shmem_per_block(**signature))
+        return int(self.shmem_per_block)
+
+    def counts(self, **signature) -> Dict[str, float]:
+        out = dict.fromkeys(self._COUNTS, 1.0)
+        if self.workload is not None:
+            declared = dict(self.workload(**signature))
+            unknown = set(declared) - set(self._COUNTS)
+            if unknown:
+                raise ValueError(
+                    f"cuda workload returned unknown instruction "
+                    f"classes {sorted(unknown)}; expected a subset of "
+                    f"{list(self._COUNTS)}")
+            out.update({k: float(v) for k, v in declared.items()})
+        return out
+
+    def thread_candidates(self, gpu: GpuSpec) -> Tuple[int, ...]:
+        if self.threads is not None:
+            return self.threads
+        return tuple(range(gpu.warp_size, gpu.threads_per_block + 1,
+                           gpu.warp_size))
+
+
+def cuda_profile(**kwargs) -> CudaProfile:
+    """Declare a kernel's CUDA-side analysis inputs (``cuda=`` of
+    `tuned_kernel`); see :class:`CudaProfile` for the fields."""
+    return CudaProfile(**kwargs)
+
+
+# The profile used when a kernel declares no ``cuda=``: moderate
+# register pressure, no shared memory, unit instruction counts — every
+# `@tuned_kernel` dispatches under a GpuSpec target out of the box, and
+# a declaration refines the numbers.
+_GENERIC_CUDA = CudaProfile()
+
+
+# ---------------------------------------------------------------------------
 # Dispatch-failure log (shared by every generated op wrapper)
 # ---------------------------------------------------------------------------
 
@@ -218,6 +304,11 @@ class KernelSpec:
     * ``reference`` — the pure-jnp oracle (optional).
     * ``pretune`` — signatures swept into the shipped per-target
       pre-tuned databases by ``python -m repro.tuning_cache pretune``.
+    * ``cuda`` — optional :class:`CudaProfile`: register pressure,
+      shared memory, and Eq. 6 instruction counts for `GpuSpec`
+      targets.  Omitted, a generic profile applies (see
+      ``_GENERIC_CUDA``), so every declared kernel is dispatchable
+      under a CUDA target either way.
     """
 
     kernel_id: str
@@ -229,6 +320,7 @@ class KernelSpec:
     make_inputs: Optional[Callable[..., tuple]] = None
     reference: Optional[Callable[..., Any]] = None
     pretune: Tuple[Dict[str, Any], ...] = ()
+    cuda: Optional[CudaProfile] = None
 
     def __post_init__(self):
         if not self.kernel_id or not isinstance(self.kernel_id, str):
@@ -329,12 +421,35 @@ class KernelSpec:
         return out
 
     def problem(self, **signature) -> "tuning_cache.TuningProblem":
-        """The dispatch-registry factory the stack used to hand-write."""
+        """The dispatch-registry factory the stack used to hand-write.
+
+        Family-polymorphic over the *active* target
+        (`repro.core.target.default_target` — `lookup_or_tune` pins it
+        to the spec the cache key was built for): a `TpuSpec` yields
+        the declared Pallas block space with the VMEM-feasibility
+        analyzers, a `GpuSpec` yields the CUDA thread-block space with
+        the faithful Eqs. 1-5 occupancy + Eq. 6 feasibility/cost
+        analyzers (threads/regs/shmem axes instead of VMEM blocks).
+        """
         sig = self.normalize(signature)
+        spec = default_target()
+        if isinstance(spec, GpuSpec):
+            return self._cuda_problem(spec, sig)
         return tuning_cache.TuningProblem(
             space=self.search_space(**sig),
             static_info=lambda p: self.static_info(p, **sig),
             static_info_batch=lambda c: self.static_info_batch(c, **sig))
+
+    def _cuda_problem(self, gpu: GpuSpec,
+                      sig: Dict[str, Any]) -> "tuning_cache.TuningProblem":
+        prof = self.cuda if self.cuda is not None else _GENERIC_CUDA
+        kw = dict(regs_per_thread=prof.regs_for(gpu),
+                  shmem_per_block=prof.shmem_for(**sig),
+                  spec=gpu, **prof.counts(**sig))
+        return tuning_cache.TuningProblem(
+            space=SearchSpace({"threads": prof.thread_candidates(gpu)}),
+            static_info=lambda p: cuda_info(p["threads"], **kw),
+            static_info_batch=lambda c: cuda_info_batch(c["threads"], **kw))
 
     def _fn_keywords(self) -> frozenset:
         if self._fn_kw is None:
@@ -355,6 +470,14 @@ class KernelSpec:
         explicitly, bypassing the database.  If dispatch fails the
         largest-divisor fallback applies, so dispatch can never break a
         numerically-correct call.
+
+        Under a `GpuSpec` target (an *analysis-only* backend: there is
+        no CUDA executable to launch from jax_pallas) dispatch still
+        records and returns the CUDA ``{"threads": ...}`` ranking, but
+        none of those params name a Pallas axis — the wrapper then
+        runs the Pallas body with the feasible fallback tiling, so a
+        program stays numerically correct while its launch analysis is
+        being done for a GPU.
         """
         if self._op is None:
             axis_names = frozenset(self.space)
@@ -434,7 +557,8 @@ def tuned_kernel(kernel_id: str, *,
                  fallback: Optional[Callable[..., Dict[str, Any]]] = None,
                  make_inputs: Optional[Callable[..., tuple]] = None,
                  reference: Optional[Callable[..., Any]] = None,
-                 pretune: Sequence[Mapping[str, Any]] = ()):
+                 pretune: Sequence[Mapping[str, Any]] = (),
+                 cuda: Optional[CudaProfile] = None):
     """Declare a Pallas kernel as a first-class tuning citizen.
 
     Decorating ``<name>_pallas`` registers a :class:`KernelSpec` under
@@ -448,7 +572,8 @@ def tuned_kernel(kernel_id: str, *,
         spec = KernelSpec(kernel_id=kernel_id, fn=fn, space=space,
                           extract_signature=signature, analysis=static_info,
                           fallback=fallback, make_inputs=make_inputs,
-                          reference=reference, pretune=tuple(pretune))
+                          reference=reference, pretune=tuple(pretune),
+                          cuda=cuda)
         register_spec(spec)
         try:
             fn.spec = spec

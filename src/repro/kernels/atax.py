@@ -20,7 +20,7 @@ from jax.experimental.pallas import tpu as pltpu
 
 from repro.core.autotuner import KernelStaticInfo, TunableKernel
 from repro.core.search import SearchSpace
-from repro.kernels.api import divisors, get_spec, tuned_kernel
+from repro.kernels.api import cuda_profile, divisors, get_spec, tuned_kernel
 from repro.kernels.common import (block_info, cdiv, default_interpret,
                                   pick_divisor_candidates, require_shape,
                                   require_tiling, tpu_compiler_params)
@@ -82,6 +82,14 @@ def _atax_inputs(key, *, m: int, n: int, dtype: str = "float32"):
                   for s in (512, 1024, 2048, 4096)
                   for dt in ("float32", "bfloat16"))
     + (dict(m=1024, n=512, dtype="float32"),),
+    # Paper Table VII row: R^u per compiled compute capability; no
+    # shared memory.  Whole-kernel Eq. 6 counts: A read once, fused
+    # A@x then A^T@t (4 flops/element), y accumulated in registers.
+    cuda=cuda_profile(
+        regs={"Fermi": 21, "Kepler": 27, "Maxwell": 30},
+        workload=lambda m, n, **_: dict(
+            o_fl=4.0 * m * n, o_mem=1.0 * m * n + m + 2.0 * n,
+            o_ctrl=1.0 * m, o_reg=4.0 * m * n)),
 )
 @functools.partial(jax.jit, static_argnames=("bm", "interpret"))
 def atax_pallas(a: jax.Array, x: jax.Array, *, bm: int = 256,

@@ -17,7 +17,7 @@ from jax.experimental.pallas import tpu as pltpu
 
 from repro.core.autotuner import KernelStaticInfo, TunableKernel
 from repro.core.search import SearchSpace
-from repro.kernels.api import divisors, get_spec, tuned_kernel
+from repro.kernels.api import cuda_profile, divisors, get_spec, tuned_kernel
 from repro.kernels.common import (block_info, cdiv, default_interpret,
                                   pick_divisor_candidates, require_shape,
                                   require_tiling, tpu_compiler_params)
@@ -79,6 +79,14 @@ def _bicg_inputs(key, *, m: int, n: int, dtype: str = "float32"):
     pretune=tuple(dict(m=s, n=s, dtype=dt)
                   for s in (512, 1024, 2048, 4096)
                   for dt in ("float32", "bfloat16")),
+    # Paper Table VII row (BiCG kernel of the sub-solver): R^u per
+    # compute capability, no shared memory; A read once for both
+    # products (4 flops/element), two vector reads + two writes.
+    cuda=cuda_profile(
+        regs={"Fermi": 27, "Kepler": 28, "Maxwell": 32},
+        workload=lambda m, n, **_: dict(
+            o_fl=4.0 * m * n, o_mem=1.0 * m * n + 2.0 * (m + n),
+            o_ctrl=1.0 * m, o_reg=4.0 * m * n)),
 )
 @functools.partial(jax.jit, static_argnames=("bm", "interpret"))
 def bicg_pallas(a: jax.Array, p: jax.Array, r: jax.Array, *,

@@ -23,14 +23,19 @@ import jax.numpy as jnp
 import numpy as np
 from jax.experimental.pallas import tpu as pltpu
 
-from repro.core.hw import TpuSpec, dtype_bytes
+from repro.core.hw import GpuSpec, TpuSpec, dtype_bytes
 from repro.core.mix import InstructionMix
-from repro.core.occupancy import (TpuOccupancyBatch, tpu_occupancy,
+from repro.core.occupancy import (CudaOccupancy, CudaOccupancyBatch,
+                                  TpuOccupancyBatch, cuda_occupancy,
+                                  cuda_occupancy_batch, tpu_occupancy,
                                   tpu_occupancy_batch)
+from repro.core.predict import cuda_eq6_time
 from repro.core.autotuner import KernelStaticInfo
 
 __all__ = ["cdiv", "default_interpret", "round_up", "block_info",
            "BatchStaticInfo", "block_info_batch",
+           "CudaStaticInfo", "cuda_info",
+           "CudaBatchStaticInfo", "cuda_info_batch",
            "pick_divisor_candidates", "CompilerParams",
            "tpu_compiler_params", "require_tiling", "require_shape"]
 
@@ -213,3 +218,129 @@ def block_info_batch(*,
         col(0.0),
     ])
     return BatchStaticInfo(F=F, occupancy=occ)
+
+
+# ---------------------------------------------------------------------------
+# CUDA static info (the faithful paper model behind GpuSpec targets)
+# ---------------------------------------------------------------------------
+
+# Occupancy floor when turning the Eq. 6 serial estimate into a launch-
+# configuration cost: infeasible configs (occ == 0) are cut by the
+# feasibility mask, so this only guards the division itself.
+_CUDA_OCC_FLOOR = 1e-6
+
+
+def _cuda_serial_seconds(o_fl, o_mem, o_ctrl, o_reg, gpu: GpuSpec):
+    """Eq. 6 cycles at the core clock, as seconds (scalar or (N,))."""
+    return cuda_eq6_time(o_fl, o_mem, o_ctrl, o_reg, gpu) \
+        / (gpu.gpu_clock_mhz * 1e6)
+
+
+@dataclasses.dataclass(frozen=True)
+class CudaStaticInfo:
+    """`KernelStaticInfo` analogue for one CUDA launch configuration.
+
+    Duck-typed for `repro.core.predict.static_times_batch`: carries a
+    ``mix`` (the Eq. 6 instruction classes on the shared feature
+    columns, matching `default_cuda_model`), a ``feasible()`` cut
+    (illegal launches: zero resident blocks, or a block wider than the
+    chip's thread limit), and an ``occupancy`` view exposing
+    ``predicted_step_time`` / ``grid_steps`` — the Eq. 6 serial time
+    stretched by the occupancy deficit, which is the ranking signal
+    across thread-block candidates (Table VII: prefer max occupancy).
+    """
+
+    mix: InstructionMix
+    cuda: CudaOccupancy
+    threads: int
+    predicted_step_time: float
+    thread_cap: int             # chip T_B^cc the launch must respect
+    grid_steps: int = 1
+
+    @property
+    def occupancy(self):
+        # static_times_batch reads .occupancy.predicted_step_time and
+        # .occupancy.grid_steps; this object carries both itself.
+        return self
+
+    def feasible(self) -> bool:
+        return bool(self.cuda.active_blocks > 0
+                    and 0 < self.threads <= self.thread_cap)
+
+
+def cuda_info(threads, *,
+              regs_per_thread: int,
+              shmem_per_block: int,
+              o_fl: float = 1.0,
+              o_mem: float = 1.0,
+              o_ctrl: float = 1.0,
+              o_reg: float = 1.0,
+              spec: GpuSpec) -> CudaStaticInfo:
+    """Analytic `CudaStaticInfo` for one (T^u, R^u, S^u) configuration.
+
+    The CUDA counterpart of :func:`block_info`: instruction-class
+    counts (whole-kernel O_fl / O_mem / O_ctrl / O_reg) plus the
+    paper's occupancy calculation, no compilation, no execution.
+    """
+    t = int(threads)
+    occ = cuda_occupancy(t, regs_per_thread, shmem_per_block, spec)
+    serial = _cuda_serial_seconds(o_fl, o_mem, o_ctrl, o_reg, spec)
+    step = serial / max(occ.occupancy, _CUDA_OCC_FLOOR)
+    mix = InstructionMix(mxu_flops=o_fl, hbm_bytes=o_mem,
+                         ctrl_ops=o_ctrl, reg_ops=o_reg)
+    return CudaStaticInfo(mix=mix, cuda=occ, threads=t,
+                          predicted_step_time=step,
+                          thread_cap=spec.threads_per_block)
+
+
+@dataclasses.dataclass(frozen=True)
+class CudaBatchStaticInfo:
+    """Struct-of-arrays `CudaStaticInfo` over N thread-block candidates.
+
+    Same field contract `rank_space` consumes from `BatchStaticInfo`:
+    ``F`` is the (N, 7) feature matrix in `features_matrix` column
+    order (CUDA classes on the mapped columns), ``pipe`` the per-config
+    occupancy-stretched Eq. 6 floor, ``feasible`` the legality mask.
+    Row ``i`` matches the scalar :func:`cuda_info` exactly.
+    """
+
+    F: np.ndarray                   # (N, 7) float64
+    occupancy: CudaOccupancyBatch
+    pipe: np.ndarray                # (N,) float64
+    feasible: np.ndarray            # (N,) bool
+
+    def __len__(self) -> int:
+        return int(self.F.shape[0])
+
+
+def cuda_info_batch(threads, *,
+                    regs_per_thread,
+                    shmem_per_block,
+                    o_fl: float = 1.0,
+                    o_mem: float = 1.0,
+                    o_ctrl: float = 1.0,
+                    o_reg: float = 1.0,
+                    spec: GpuSpec) -> CudaBatchStaticInfo:
+    """Vectorized :func:`cuda_info` over a whole thread-size lattice.
+
+    ``threads`` (and, if per-config, ``regs_per_thread`` /
+    ``shmem_per_block``) are (N,) arrays — typically the ``threads``
+    column of `SearchSpace.enumerate_lattice`; the occupancy pass is
+    one `cuda_occupancy_batch` call and the instruction-class counts
+    broadcast, so ranking a GPU space is array math end to end, just
+    like the TPU path.
+    """
+    t = np.atleast_1d(np.asarray(threads, dtype=np.int64))
+    occ = cuda_occupancy_batch(t, regs_per_thread, shmem_per_block, spec)
+    n = len(occ)
+    serial = _cuda_serial_seconds(float(o_fl), float(o_mem), float(o_ctrl),
+                                  float(o_reg), spec)
+    pipe = serial / np.maximum(occ.occupancy, _CUDA_OCC_FLOOR)
+    tb = np.broadcast_to(t, (n,))
+    feasible = (occ.active_blocks > 0) & (tb > 0) \
+        & (tb <= spec.threads_per_block)
+    col = lambda a: np.broadcast_to(np.asarray(a, dtype=np.float64), (n,))
+    F = np.column_stack([col(o_fl), col(0.0), col(0.0), col(o_mem),
+                         col(0.0), col(o_ctrl), col(o_reg)])
+    return CudaBatchStaticInfo(F=F, occupancy=occ, pipe=pipe,
+                               feasible=feasible)

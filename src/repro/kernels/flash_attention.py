@@ -21,7 +21,7 @@ from jax.experimental.pallas import tpu as pltpu
 
 from repro.core.autotuner import KernelStaticInfo, TunableKernel
 from repro.core.search import SearchSpace
-from repro.kernels.api import divisors, get_spec, tuned_kernel
+from repro.kernels.api import cuda_profile, divisors, get_spec, tuned_kernel
 from repro.kernels.common import (block_info, cdiv, default_interpret,
                                   pick_divisor_candidates, require_shape,
                                   require_tiling, tpu_compiler_params)
@@ -119,6 +119,18 @@ def _flash_inputs(key, *, b: int, h: int, sq: int, skv: int, d: int,
                                     (1, 8, 4096)]
                   for causal in (True, False)
                   for dt in ("float32", "bfloat16")),
+    # Not a paper kernel.  Register-heavy (online-softmax accumulators
+    # per row): R^u = 64 exceeds Fermi's 63-register architectural cap,
+    # so every Fermi launch is infeasible by Eq. 4 — the ranked record
+    # carries predicted_s = +inf (serialized as null in JSONL).  One
+    # K/V stage pair in shared memory; causal halves the score work.
+    cuda=cuda_profile(
+        regs=64, shmem_per_block=16384,
+        workload=lambda b, h, sq, skv, d, causal=True, **_: dict(
+            o_fl=(2.0 if causal else 4.0) * b * h * sq * skv * d,
+            o_mem=2.0 * b * h * (sq + skv) * d,
+            o_ctrl=1.0 * b * h * sq,
+            o_reg=(2.0 if causal else 4.0) * b * h * sq * skv * d)),
 )
 @functools.partial(jax.jit,
                    static_argnames=("causal", "bq", "bkv", "interpret"))

@@ -21,7 +21,7 @@ from jax.experimental import pallas as pl
 
 from repro.core.autotuner import KernelStaticInfo, TunableKernel
 from repro.core.search import SearchSpace
-from repro.kernels.api import divisors, get_spec, tuned_kernel
+from repro.kernels.api import cuda_profile, divisors, get_spec, tuned_kernel
 from repro.kernels.common import (block_info, cdiv, default_interpret,
                                   pick_divisor_candidates, require_tiling,
                                   tpu_compiler_params)
@@ -96,6 +96,14 @@ def _jacobi3d_inputs(key, *, z: int, y: int, x: int,
     reference=jacobi3d_ref,
     pretune=tuple(dict(z=s, y=s, x=s, dtype="float32")
                   for s in (64, 128, 256)),
+    # Paper Table VII row (ex14FJ, the finite-difference Jacobi
+    # kernel): R^u per compute capability, no shared memory; 7-point
+    # stencil = 8 flops/point, read + write per point.
+    cuda=cuda_profile(
+        regs={"Fermi": 30, "Kepler": 31, "Maxwell": 28},
+        workload=lambda z, y, x, **_: dict(
+            o_fl=8.0 * z * y * x, o_mem=2.0 * z * y * x,
+            o_ctrl=1.0 * z, o_reg=8.0 * z * y * x)),
 )
 @functools.partial(jax.jit,
                    static_argnames=("bz", "c0", "c1", "interpret"))

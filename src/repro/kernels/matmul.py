@@ -22,7 +22,7 @@ from jax.experimental.pallas import tpu as pltpu
 
 from repro.core.autotuner import KernelStaticInfo, TunableKernel
 from repro.core.search import SearchSpace
-from repro.kernels.api import divisors, get_spec, tuned_kernel
+from repro.kernels.api import cuda_profile, divisors, get_spec, tuned_kernel
 from repro.kernels.common import (block_info, cdiv, default_interpret,
                                   pick_divisor_candidates, require_tiling,
                                   tpu_compiler_params)
@@ -85,6 +85,14 @@ def _matmul_inputs(key, *, m: int, n: int, k: int, dtype: str = "float32"):
                                     (2048,) * 3, (1024, 1024, 4096),
                                     (4096, 1024, 1024)]
                   for dt in ("float32", "bfloat16")),
+    # Not a paper kernel; classic shared-memory-tiled SGEMM numbers:
+    # two 16x16 f32 operand tiles staged per block, moderate register
+    # pressure (accumulator + tile indices).
+    cuda=cuda_profile(
+        regs=32, shmem_per_block=2 * 16 * 16 * 4,
+        workload=lambda m, n, k, **_: dict(
+            o_fl=2.0 * m * n * k, o_mem=1.0 * (m * k + k * n + m * n),
+            o_ctrl=1.0 * m * n, o_reg=2.0 * m * n * k)),
 )
 @functools.partial(jax.jit, static_argnames=("bm", "bn", "bk", "interpret"))
 def matmul_pallas(a: jax.Array, b: jax.Array, *,

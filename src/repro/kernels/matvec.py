@@ -19,7 +19,7 @@ from jax.experimental.pallas import tpu as pltpu
 
 from repro.core.autotuner import KernelStaticInfo, TunableKernel
 from repro.core.search import SearchSpace
-from repro.kernels.api import divisors, get_spec, tuned_kernel
+from repro.kernels.api import cuda_profile, divisors, get_spec, tuned_kernel
 from repro.kernels.common import (block_info, cdiv, default_interpret,
                                   pick_divisor_candidates, require_shape,
                                   require_tiling, tpu_compiler_params)
@@ -78,6 +78,13 @@ def _matvec_inputs(key, *, m: int, n: int, dtype: str = "float32"):
     pretune=tuple(dict(m=s, n=s, dtype=dt)
                   for s in (512, 1024, 2048, 4096)
                   for dt in ("float32", "bfloat16")),
+    # Paper Table VII row (matVec2D): R^u per compute capability, no
+    # shared memory; one multiply-add per matrix element.
+    cuda=cuda_profile(
+        regs={"Fermi": 20, "Kepler": 20, "Maxwell": 13},
+        workload=lambda m, n, **_: dict(
+            o_fl=2.0 * m * n, o_mem=1.0 * m * n + m + n,
+            o_ctrl=1.0 * m, o_reg=2.0 * m * n)),
 )
 @functools.partial(jax.jit, static_argnames=("bm", "bk", "interpret"))
 def matvec_pallas(a: jax.Array, x: jax.Array, *,

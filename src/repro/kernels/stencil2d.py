@@ -27,7 +27,7 @@ import jax.numpy as jnp
 import numpy as np
 from jax.experimental import pallas as pl
 
-from repro.kernels.api import divisors, get_spec, tuned_kernel
+from repro.kernels.api import cuda_profile, divisors, get_spec, tuned_kernel
 from repro.kernels.common import (cdiv, default_interpret, require_tiling,
                                   tpu_compiler_params)
 
@@ -105,6 +105,13 @@ def _stencil2d_inputs(key, *, y: int, x: int, dtype: str = "float32"):
              dict(y=1024, x=1024, dtype="float32"),
              dict(y=2048, x=2048, dtype="float32"),
              dict(y=1024, x=1024, dtype="bfloat16")),
+    # 5-point Jacobi: 6 flops/point, read + write per point, light
+    # register pressure (no staging).
+    cuda=cuda_profile(
+        regs=24,
+        workload=lambda y, x, **_: dict(
+            o_fl=6.0 * y * x, o_mem=2.0 * y * x,
+            o_ctrl=1.0 * y, o_reg=6.0 * y * x)),
 )
 @functools.partial(jax.jit,
                    static_argnames=("by", "c0", "c1", "interpret"))

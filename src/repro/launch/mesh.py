@@ -31,5 +31,5 @@ def ici_links(mesh=None, spec=None) -> int:
     -> 6).  ``spec=None`` uses the process-default target; ``mesh`` is
     accepted for call-site symmetry with `mesh_num_chips` but the link
     count is a chip property, not a mesh property."""
-    from repro.core.hw import resolve_target
-    return resolve_target(spec).ici_links
+    from repro.core.hw import require_tpu
+    return require_tpu(spec, "launch.mesh.ici_links").ici_links

@@ -77,13 +77,17 @@ def warm_pretuned(db: TuningDatabase, target=None) -> int:
 
 
 def _warm_pretuned_spec(db: TuningDatabase, spec) -> int:
-    if spec.name in db.warmed_targets:
+    # check-then-add under the database lock: two threads taking their
+    # first dispatch for the same target must not double-import (and
+    # double-bump the generation, spuriously invalidating the memo)
+    with db.lock:
+        if spec.name in db.warmed_targets:
+            return 0
+        db.warmed_targets.add(spec.name)
+        path = pretuned_path(spec)
+        if os.path.isfile(path):
+            return db.warm_jsonl(path)
         return 0
-    db.warmed_targets.add(spec.name)
-    path = pretuned_path(spec)
-    if os.path.isfile(path):
-        return db.warm_jsonl(path)
-    return 0
 
 
 def get_default_db() -> TuningDatabase:

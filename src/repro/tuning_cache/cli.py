@@ -47,7 +47,10 @@ from repro.tuning_cache import (ENV_DB_DIR, TuningDatabase, get_problem,
 DEFAULT_DB_DIR = ".tuning_cache"
 
 # Chips we ship a pretuned database for (pretuned/<name>.jsonl each).
-SHIPPED_TARGETS = ("tpu-v5e", "tpu-v5p", "tpu-v6e")
+# Both spec families: TPU targets rank Pallas block spaces, the paper's
+# Table I GPUs rank CUDA thread-block spaces (DESIGN.md §11).
+SHIPPED_TARGETS = ("tpu-v5e", "tpu-v5p", "tpu-v6e",
+                   "fermi-m2050", "kepler-k20", "maxwell-m40")
 
 # The production shape grid behind `pretune` — every signature the
 # shipped pretuned databases cover — is *declared*, not listed here:
@@ -76,7 +79,8 @@ def _render_jsonl(db: TuningDatabase) -> str:
     lines = []
     for rec in db.records():
         rec = dataclasses.replace(rec, created_unix=0.0)
-        lines.append(json.dumps(rec.to_dict(), sort_keys=True))
+        lines.append(json.dumps(rec.to_dict(), sort_keys=True,
+                                allow_nan=False))
     return "".join(line + "\n" for line in lines)
 
 

@@ -21,7 +21,7 @@ import hashlib
 import json
 from typing import Any, Dict, Optional
 
-from repro.core.hw import TpuSpec
+from repro.core.hw import ChipSpec
 
 __all__ = ["MODEL_VERSION", "CacheKey", "canonical_json",
            "fingerprint_spec", "make_key"]
@@ -37,8 +37,13 @@ def canonical_json(obj: Any) -> str:
                       default=str)
 
 
-def fingerprint_spec(spec: TpuSpec) -> str:
+def fingerprint_spec(spec: ChipSpec) -> str:
     """`<name>@<12-hex>` over every field of the hardware descriptor.
+
+    Works for either spec family (`TpuSpec` or `GpuSpec` — anything
+    satisfying the `ChipSpec` protocol): the digest covers the frozen
+    dataclass fields, so a CUDA target and a TPU target can never
+    collide on one cache entry even if someone names them alike.
 
     Memoized on the instance (this runs on every trace-time dispatch,
     and even hashing a frozen 20-field dataclass for an lru_cache probe
@@ -78,7 +83,7 @@ class CacheKey:
                         model_version=d.get("model_version", MODEL_VERSION))
 
 
-def make_key(kernel_id: str, *, spec: TpuSpec, mode: str = "static",
+def make_key(kernel_id: str, *, spec: ChipSpec, mode: str = "static",
              model_name: Optional[str] = None,
              **signature: Any) -> CacheKey:
     """Build a key from keyword signature parts (shapes, dtype, knobs)."""

@@ -26,13 +26,14 @@ from __future__ import annotations
 
 import dataclasses
 import inspect
-from typing import Any, Callable, Dict, Optional, Tuple
+import threading
+from typing import Any, Callable, Dict, Optional, Tuple, Union
 
 import numpy as np
 
-from repro.core.hw import TpuSpec, resolve_target
-from repro.core.predict import CostModel, default_tpu_model, \
-    static_times_batch
+from repro.core.hw import ChipSpec, GpuSpec, TpuSpec, resolve_target
+from repro.core.predict import CostModel, default_cuda_model, \
+    default_tpu_model, static_times_batch
 from repro.core.target import use_target
 from repro.core.search import Params, SearchSpace
 from repro.tuning_cache.keys import CacheKey, fingerprint_spec, make_key
@@ -40,7 +41,7 @@ from repro.tuning_cache.store import TuningDatabase, TuningRecord, now_unix
 
 __all__ = ["TuningProblem", "register", "register_entry", "unregister",
            "get_problem", "registered", "rank_space", "lookup_or_tune",
-           "clear_dispatch_memo", "on_dispatch_memo_clear"]
+           "clear_dispatch_memo", "on_dispatch_memo_clear", "reset_models"]
 
 
 @dataclasses.dataclass
@@ -169,6 +170,16 @@ def rank_space(problem: TuningProblem, model: CostModel
     return pts[i], float(times[i]), len(pts)
 
 
+# Guards the check-then-set on _DEFAULT_MODELS and inserts into
+# _DISPATCH_MEMO (plus clear_dispatch_memo/reset_models): two threads
+# cold-tuning the same kernel must not build duplicate cost models or
+# interleave an insert with a concurrent clear.  The warm-path memo
+# *read* stays a bare dict probe on purpose — dict get/set are atomic
+# under the GIL, entries are immutable tuples tagged with the database
+# generation (so a stale probe self-invalidates), and taking a lock
+# there would put a contended acquire on every repeat trace.
+_models_lock = threading.Lock()
+
 _DEFAULT_MODELS: Dict[str, CostModel] = {}
 
 # Warm-dispatch memo: (kernel_id, mode, spec fingerprint, raw signature
@@ -196,23 +207,50 @@ def on_dispatch_memo_clear(hook: Callable[[], None]) -> Callable[[], None]:
     return hook
 
 
+def reset_models() -> None:
+    """Drop the per-spec default-model memo (`_model_for`) — without
+    this the memo grows one entry per distinct spec fingerprint forever
+    and keeps serving stale models after a spec-table change.
+
+    :func:`clear_dispatch_memo` performs the same sweep itself,
+    atomically with the memo clear (it cannot call this helper: the
+    module lock is not reentrant); this standalone hook is for callers
+    that want fresh models without discarding the warm memo."""
+    with _models_lock:
+        _DEFAULT_MODELS.clear()
+
+
 def clear_dispatch_memo() -> None:
-    _DISPATCH_MEMO.clear()
-    for hook in list(_MEMO_CLEAR_HOOKS):
+    with _models_lock:
+        _DISPATCH_MEMO.clear()
+        _DEFAULT_MODELS.clear()
+        hooks = list(_MEMO_CLEAR_HOOKS)
+    # hooks run unlocked: they may take their own locks (e.g. the
+    # kernel layer's failure-log lock) and must not nest under ours
+    for hook in hooks:
         hook()
 
 
-def _model_for(spec: TpuSpec) -> CostModel:
+def _model_for(spec: ChipSpec) -> CostModel:
     # memoized on the full-field fingerprint: a modified spec that keeps
-    # the default name must still get its own rate coefficients
+    # the default name must still get its own rate coefficients.  The
+    # fast path is a lock-free probe; the build is double-checked under
+    # the module lock so concurrent cold tunes share one model instance.
     fp = fingerprint_spec(spec)
-    if fp not in _DEFAULT_MODELS:
-        _DEFAULT_MODELS[fp] = default_tpu_model(spec, mode="max")
-    return _DEFAULT_MODELS[fp]
+    model = _DEFAULT_MODELS.get(fp)
+    if model is None:
+        with _models_lock:
+            model = _DEFAULT_MODELS.get(fp)
+            if model is None:
+                model = (default_cuda_model(spec)
+                         if isinstance(spec, GpuSpec)
+                         else default_tpu_model(spec, mode="max"))
+                _DEFAULT_MODELS[fp] = model
+    return model
 
 
 def lookup_or_tune(kernel_id: str, *,
-                   spec: Optional[TpuSpec] = None,
+                   spec: Union[str, ChipSpec, None] = None,
                    mode: str = "static",
                    model: Optional[CostModel] = None,
                    db: Optional[TuningDatabase] = None,
@@ -221,16 +259,20 @@ def lookup_or_tune(kernel_id: str, *,
 
     Returns a plain params dict ready to splat into the pallas_call
     wrapper.  ``spec=None`` tunes for the process-default target
-    (`repro.core.target.default_target`); the spec fingerprint is part
-    of the cache key and the dispatch memo, so per-target results are
-    fully isolated.  Identical ``(kernel_id, signature, spec)`` calls
-    after the first are pure cache hits: no space enumeration, no
+    (`repro.core.target.default_target`); either spec family works —
+    a `GpuSpec` (``spec="kepler_k20"``) ranks the kernel's CUDA
+    thread-block space under the faithful Eqs. 1-6 models and yields
+    Table-VII-consistent ``{"threads": ...}`` params, a `TpuSpec`
+    ranks the Pallas block space.  The spec fingerprint is part of the
+    cache key and the dispatch memo, so per-target results are fully
+    isolated.  Identical ``(kernel_id, signature, spec)`` calls after
+    the first are pure cache hits: no space enumeration, no
     static_info construction, no cost-model evaluation.  On the default
     db/model path repeat calls are additionally memoized per process,
     skipping even key construction — warm dispatch is a single dict
     probe.
     """
-    if not isinstance(spec, TpuSpec):   # None or name: resolve once here
+    if not isinstance(spec, (TpuSpec, GpuSpec)):  # None or name: resolve once
         spec = resolve_target(spec)
     memo_key = None
     if db is None:
@@ -266,6 +308,9 @@ def lookup_or_tune(kernel_id: str, *,
     if memo_key is not None:
         # snapshot as items so a caller mutating the returned dict can
         # never poison later dispatches; tagged with the database
-        # generation so bulk db mutation invalidates the entry
-        _DISPATCH_MEMO[memo_key] = (db.generation, tuple(params.items()))
+        # generation so bulk db mutation invalidates the entry.  Insert
+        # under the module lock so it cannot interleave with a
+        # concurrent clear_dispatch_memo half-way through its sweep.
+        with _models_lock:
+            _DISPATCH_MEMO[memo_key] = (db.generation, tuple(params.items()))
     return params

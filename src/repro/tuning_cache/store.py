@@ -23,8 +23,9 @@ import dataclasses
 import json
 import math
 import os
+import threading
 import time
-from typing import Any, Callable, Dict, Iterator, Optional
+from typing import Any, Callable, Dict, Iterator, List, Optional
 
 from repro.tuning_cache.keys import CacheKey
 
@@ -47,6 +48,15 @@ class TuningRecord:
     def to_dict(self) -> Dict[str, Any]:
         d = dataclasses.asdict(self)
         d["key"] = self.key.to_dict()
+        # Non-finite floats serialize as null: the default predicted_s
+        # is +inf (e.g. fallback-params provenance, or an all-infeasible
+        # CUDA space), and bare ``Infinity``/``NaN`` in a JSON/JSONL
+        # export is invalid JSON that breaks strict parsers downstream.
+        # `from_dict` restores null -> the field's non-finite default.
+        if not math.isfinite(self.predicted_s):
+            d["predicted_s"] = None
+        if self.measured_s is not None and not math.isfinite(self.measured_s):
+            d["measured_s"] = None
         return d
 
     @staticmethod
@@ -54,7 +64,8 @@ class TuningRecord:
         return TuningRecord(
             key=CacheKey.from_dict(d["key"]),
             params=dict(d["params"]),
-            predicted_s=float(d.get("predicted_s", math.inf)),
+            predicted_s=(math.inf if d.get("predicted_s") is None
+                         else float(d["predicted_s"])),
             measured_s=(None if d.get("measured_s") is None
                         else float(d["measured_s"])),
             space_size=int(d.get("space_size", 0)),
@@ -108,7 +119,11 @@ class DiskStore:
         path = self.path_for(record.key.digest)
         tmp = path + ".tmp"
         with open(tmp, "w", encoding="utf-8") as f:
-            json.dump(record.to_dict(), f, sort_keys=True)
+            # allow_nan=False: to_dict already mapped non-finite floats
+            # to null; anything that still sneaks through (e.g. a NaN
+            # inside extras) must fail loudly here, not emit a file no
+            # strict JSON parser can read back.
+            json.dump(record.to_dict(), f, sort_keys=True, allow_nan=False)
         os.replace(tmp, path)
 
     def iter_records(self) -> Iterator[TuningRecord]:
@@ -127,6 +142,14 @@ class TuningDatabase:
 
     `lookup` / `put` / `lookup_or_tune` are the whole API surface the
     tuner layer needs; everything else is import/export plumbing.
+
+    Thread-safe: one reentrant ``lock`` guards every mutating path
+    (concurrent trace-time dispatch from model threads would otherwise
+    corrupt the `OrderedDict` mid-``move_to_end`` and miscount
+    `CacheStats`).  ``lookup_or_tune`` holds the lock across the tune
+    callback on purpose: a cold key is tuned exactly once no matter how
+    many threads race to it, and every racer returns the one stored
+    record.
     """
 
     def __init__(self, root: Optional[str] = None, capacity: int = 4096):
@@ -135,6 +158,7 @@ class TuningDatabase:
             collections.OrderedDict()
         self.disk = DiskStore(root) if root else None
         self.stats = CacheStats()
+        self.lock = threading.RLock()
         self._disk_corrupt_synced = 0
         # Bulk-mutation counter: bumped by clear() and import_jsonl()
         # (incl. warm_jsonl).  The dispatch memo snapshots it so that
@@ -151,40 +175,43 @@ class TuningDatabase:
     # -- core ---------------------------------------------------------------
     def lookup(self, key: CacheKey) -> Optional[TuningRecord]:
         digest = key.digest
-        rec = self._lru.get(digest)
-        if rec is not None:
-            self._lru.move_to_end(digest)
-            self.stats.hits += 1
-            return rec
-        if self.disk is not None:
-            rec = self.disk.load(digest)
-            # fold in only the delta so corrupt JSONL lines counted by
-            # import_jsonl are not clobbered
-            self.stats.corrupt += (self.disk.corrupt_seen
-                                   - self._disk_corrupt_synced)
-            self._disk_corrupt_synced = self.disk.corrupt_seen
+        with self.lock:
+            rec = self._lru.get(digest)
             if rec is not None:
-                self._remember(digest, rec)
+                self._lru.move_to_end(digest)
                 self.stats.hits += 1
                 return rec
-        self.stats.misses += 1
-        return None
+            if self.disk is not None:
+                rec = self.disk.load(digest)
+                # fold in only the delta so corrupt JSONL lines counted
+                # by import_jsonl are not clobbered
+                self.stats.corrupt += (self.disk.corrupt_seen
+                                       - self._disk_corrupt_synced)
+                self._disk_corrupt_synced = self.disk.corrupt_seen
+                if rec is not None:
+                    self._remember(digest, rec)
+                    self.stats.hits += 1
+                    return rec
+            self.stats.misses += 1
+            return None
 
     def put(self, record: TuningRecord) -> None:
-        self._remember(record.key.digest, record)
-        if self.disk is not None:
-            self.disk.save(record)
-        self.stats.puts += 1
+        with self.lock:
+            self._remember(record.key.digest, record)
+            if self.disk is not None:
+                self.disk.save(record)
+            self.stats.puts += 1
 
     def lookup_or_tune(self, key: CacheKey,
                        tune: Callable[[], TuningRecord]) -> TuningRecord:
-        rec = self.lookup(key)
-        if rec is not None:
+        with self.lock:
+            rec = self.lookup(key)
+            if rec is not None:
+                return rec
+            rec = tune()
+            self.stats.tunes += 1
+            self.put(rec)
             return rec
-        rec = tune()
-        self.stats.tunes += 1
-        self.put(rec)
-        return rec
 
     def _remember(self, digest: str, rec: TuningRecord) -> None:
         self._lru[digest] = rec
@@ -196,9 +223,10 @@ class TuningDatabase:
         return len(self._lru)
 
     def clear(self) -> None:
-        self._lru.clear()
-        self.stats = CacheStats()
-        self.generation += 1
+        with self.lock:
+            self._lru.clear()
+            self.stats = CacheStats()
+            self.generation += 1
 
     # -- interchange --------------------------------------------------------
     def records(self) -> Iterator[TuningRecord]:
@@ -212,43 +240,53 @@ class TuningDatabase:
                 if rec.key.digest not in seen:
                     yield rec
 
+    def snapshot(self) -> List[TuningRecord]:
+        """`records()` materialized under the lock — a consistent view
+        even while other threads keep dispatching."""
+        with self.lock:
+            return list(self.records())
+
     def export_jsonl(self, path: str) -> int:
+        recs = self.snapshot()
         n = 0
         with open(path, "w", encoding="utf-8") as f:
-            for rec in self.records():
-                f.write(json.dumps(rec.to_dict(), sort_keys=True) + "\n")
+            for rec in recs:
+                f.write(json.dumps(rec.to_dict(), sort_keys=True,
+                                   allow_nan=False) + "\n")
                 n += 1
         return n
 
     def import_jsonl(self, path: str, source: Optional[str] = None) -> int:
         """Load records from a JSONL file; bad lines are skipped."""
         n = 0
-        with open(path, "r", encoding="utf-8") as f:
-            for line in f:
-                line = line.strip()
-                if not line:
-                    continue
-                try:
-                    rec = TuningRecord.from_dict(json.loads(line))
-                except (json.JSONDecodeError, KeyError, TypeError,
-                        ValueError):
-                    self.stats.corrupt += 1
-                    continue
-                if source is not None:
-                    rec.source = source
-                self.put(rec)
-                n += 1
-        if n:
-            self.generation += 1
+        with self.lock:
+            with open(path, "r", encoding="utf-8") as f:
+                for line in f:
+                    line = line.strip()
+                    if not line:
+                        continue
+                    try:
+                        rec = TuningRecord.from_dict(json.loads(line))
+                    except (json.JSONDecodeError, KeyError, TypeError,
+                            ValueError):
+                        self.stats.corrupt += 1
+                        continue
+                    if source is not None:
+                        rec.source = source
+                    self.put(rec)
+                    n += 1
+            if n:
+                self.generation += 1
         return n
 
     def warm_jsonl(self, path: str) -> int:
         """import_jsonl into memory only (no disk write-back)."""
-        disk, self.disk = self.disk, None
-        try:
-            return self.import_jsonl(path)
-        finally:
-            self.disk = disk
+        with self.lock:       # the disk handle swap must not interleave
+            disk, self.disk = self.disk, None
+            try:
+                return self.import_jsonl(path)
+            finally:
+                self.disk = disk
 
 
 def now_unix() -> float:

@@ -1,0 +1,245 @@
+"""Backend-polymorphic target tests (ISSUE 5 acceptance).
+
+Covers: GPU name resolution through the unified target table, ChipSpec
+fingerprints across families, bitwise scalar/batch parity of the CUDA
+occupancy equations, `lookup_or_tune` under a `GpuSpec` returning
+Table-VII-consistent params with zero program runs, cache-key /
+dispatch-memo isolation between a GPU and a TPU target, the per-GPU
+shipped pretuned databases (`pretune --verify` bit-identical), and the
+non-finite ``predicted_s`` JSON round-trip the CUDA path exercises
+organically (all-infeasible spaces rank to +inf).
+"""
+import json
+import math
+
+import pytest
+
+from repro import tuning_cache
+from repro.core import (FERMI_M2050, GPU_TABLE, KEPLER_K20, MAXWELL_M40,
+                        TPU_V5E, GpuSpec, TpuSpec, default_target,
+                        resolve_target, set_default_target,
+                        suggest_cuda_params, use_target)
+from repro.core.hw import ChipSpec
+from repro.core.occupancy import cuda_occupancy, cuda_occupancy_batch
+from repro.core.predict import default_cuda_model, default_tpu_model
+from repro.tuning_cache import TuningDatabase, fingerprint_spec
+from repro.tuning_cache import registry as registry_mod
+from repro.tuning_cache.cli import SHIPPED_TARGETS
+from repro.tuning_cache.cli import main as cli_main
+
+import repro.kernels  # noqa: F401  (registers dispatch problems)
+from repro.kernels.api import get_spec
+
+
+@pytest.fixture(autouse=True)
+def _fresh_target_and_db():
+    set_default_target(None)
+    tuning_cache.set_default_db(TuningDatabase())
+    yield
+    set_default_target(None)
+    tuning_cache.reset_default_db()
+
+
+# ---------------------------------------------------------------------------
+# Resolution + the unified table
+# ---------------------------------------------------------------------------
+
+
+def test_resolve_gpu_aliases():
+    assert resolve_target("kepler_k20") is KEPLER_K20
+    assert resolve_target("kepler-k20") is KEPLER_K20
+    assert resolve_target("k20") is KEPLER_K20
+    assert resolve_target("kepler") is KEPLER_K20
+    assert resolve_target("fermi_m2050") is FERMI_M2050
+    assert resolve_target("MAXWELL_M40") is MAXWELL_M40
+    # spec passthrough, both families
+    assert resolve_target(KEPLER_K20) is KEPLER_K20
+    assert resolve_target(TPU_V5E) is TPU_V5E
+    with pytest.raises(KeyError):
+        resolve_target("pascal_p100")
+
+
+def test_chipspec_protocol_and_fingerprints():
+    assert isinstance(KEPLER_K20, ChipSpec)
+    assert isinstance(TPU_V5E, ChipSpec)
+    fps = {fingerprint_spec(s) for s in
+           (FERMI_M2050, KEPLER_K20, MAXWELL_M40, TPU_V5E)}
+    assert len(fps) == 4               # no cross-family collision
+    assert fingerprint_spec(KEPLER_K20).startswith("k20@")
+
+
+def test_gpu_names_work_in_target_stack():
+    set_default_target("kepler_k20")
+    assert default_target() is KEPLER_K20
+    set_default_target(None)
+    with use_target("maxwell_m40") as spec:
+        assert spec is MAXWELL_M40
+        assert default_target() is MAXWELL_M40
+    assert default_target() is TPU_V5E
+
+
+def test_tpu_layers_reject_gpu_specs():
+    from repro.core.occupancy import tpu_occupancy
+    with pytest.raises(TypeError, match="cuda"):
+        tpu_occupancy([1024], [1024], 1e6, spec=KEPLER_K20)
+    with pytest.raises(TypeError):
+        default_tpu_model(KEPLER_K20)
+    with pytest.raises(TypeError):
+        default_cuda_model(TPU_V5E)
+
+
+# ---------------------------------------------------------------------------
+# Scalar / batch parity of the faithful equations
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("gpu_name", ["m2050", "k20", "m40"])
+def test_cuda_occupancy_batch_bitwise_parity(gpu_name):
+    gpu = GPU_TABLE[gpu_name]
+    cases = [(t, r, s)
+             for t in (0, 32, 96, 128, 256, 1024, 1056)
+             for r in (0, 13, 27, 63, 64, 255, 256)
+             for s in (0, 2048, 16384, 49152, 65536)]
+    ts, rs, ss = zip(*cases)
+    batch = cuda_occupancy_batch(list(ts), list(rs), list(ss), gpu)
+    assert len(batch) == len(cases)
+    for i, (t, r, s) in enumerate(cases):
+        assert batch.at(i) == cuda_occupancy(t, r, s, gpu), (t, r, s)
+
+
+# ---------------------------------------------------------------------------
+# Dispatch under a GpuSpec: Table VII consistency, zero program runs
+# ---------------------------------------------------------------------------
+
+_PAPER_CASES = [
+    ("atax", dict(m=2048, n=2048, dtype="float32")),
+    ("bicg", dict(m=2048, n=2048, dtype="float32")),
+    ("matvec", dict(m=2048, n=2048, dtype="float32")),
+    ("jacobi3d", dict(z=64, y=64, x=64, dtype="float32")),
+]
+
+
+@pytest.mark.parametrize("kernel_id,sig", _PAPER_CASES)
+@pytest.mark.parametrize("gpu_name", ["fermi_m2050", "kepler_k20",
+                                      "maxwell_m40"])
+def test_registry_params_match_suggest_cuda_params(kernel_id, sig, gpu_name):
+    """The registry path and the standalone Table VII calculator must
+    agree: the ranked winner is a member of the max-occupancy set T*."""
+    gpu = resolve_target(gpu_name)
+    db = TuningDatabase()
+    params = tuning_cache.lookup_or_tune(kernel_id, db=db, spec=gpu, **sig)
+    prof = get_spec(kernel_id).cuda
+    sugg = suggest_cuda_params(prof.regs_for(gpu), prof.shmem_for(**sig),
+                               gpu)
+    assert params["threads"] in sugg["threads"]
+    assert db.stats.tunes == 1
+    # repeat dispatch is a pure cache hit — zero additional tunes
+    again = tuning_cache.lookup_or_tune(kernel_id, db=db, spec=gpu, **sig)
+    assert again == params and db.stats.tunes == 1
+
+
+def test_gpu_and_tpu_targets_fully_isolated():
+    """One kernel/signature under kepler_k20 and tpu_v5e: two records,
+    two spec fingerprints, two memo entries, disjoint param spaces."""
+    sig = dict(m=512, n=512, k=512, dtype="float32")
+    db = TuningDatabase()
+    p_gpu = tuning_cache.lookup_or_tune("matmul", db=db, spec="kepler_k20",
+                                        **sig)
+    p_tpu = tuning_cache.lookup_or_tune("matmul", db=db, spec="tpu-v5e",
+                                        **sig)
+    assert set(p_gpu) == {"threads"}
+    assert set(p_tpu) == {"bm", "bn", "bk"}
+    recs = list(db.records())
+    assert len(recs) == 2
+    assert len({r.key.spec_fingerprint for r in recs}) == 2
+    # the warm-dispatch memo (default-db path) keys on the fingerprint
+    tuning_cache.clear_dispatch_memo()
+    with use_target("kepler_k20"):
+        tuning_cache.lookup_or_tune("matmul", **sig)
+    with use_target("tpu-v5e"):
+        tuning_cache.lookup_or_tune("matmul", **sig)
+    fps = {k[2] for k in registry_mod._DISPATCH_MEMO}
+    assert fingerprint_spec(KEPLER_K20) in fps
+    assert fingerprint_spec(TPU_V5E) in fps
+
+
+def test_winning_threads_differ_across_gpu_generations():
+    """The paper's core observation — the suggested launch params are
+    chip-specific — must survive the registry path."""
+    sig = dict(y=1024, x=1024, dtype="float32")
+    db = TuningDatabase()
+    winners = {g: tuning_cache.lookup_or_tune("stencil2d", db=db, spec=g,
+                                              **sig)["threads"]
+               for g in ("fermi_m2050", "kepler_k20", "maxwell_m40")}
+    assert len(set(winners.values())) >= 2, winners
+
+
+def test_all_infeasible_space_exports_strict_json(tmp_path):
+    """flash_attention's R^u=64 exceeds Fermi's 63-register cap: every
+    candidate is infeasible, the record ranks to predicted_s=+inf, and
+    the JSONL export must still be strict JSON (null, not Infinity)."""
+    sig = dict(b=2, h=4, sq=1024, skv=1024, d=128, causal=True,
+               dtype="float32")
+    db = TuningDatabase()
+    params = tuning_cache.lookup_or_tune("flash_attention", db=db,
+                                         spec="fermi_m2050", **sig)
+    assert params["threads"] >= 32
+    rec = next(iter(db.records()))
+    assert math.isinf(rec.predicted_s)
+    out = tmp_path / "fermi.jsonl"
+    db.export_jsonl(str(out))
+    boom = lambda c: (_ for _ in ()).throw(ValueError(c))
+    payload = json.loads(out.read_text().splitlines()[0],
+                         parse_constant=boom)
+    assert payload["predicted_s"] is None
+    db2 = TuningDatabase()
+    assert db2.import_jsonl(str(out)) == 1
+    rec2 = next(iter(db2.records()))
+    assert math.isinf(rec2.predicted_s) and rec2.params == rec.params
+
+
+# ---------------------------------------------------------------------------
+# Shipped per-GPU databases
+# ---------------------------------------------------------------------------
+
+
+def test_gpu_targets_are_shipped():
+    assert {"fermi-m2050", "kepler-k20", "maxwell-m40"} <= set(
+        SHIPPED_TARGETS)
+
+
+def test_gpu_pretune_verify_bit_identical(tmp_path):
+    assert cli_main(["--db", str(tmp_path / "db"), "pretune", "--verify",
+                     "--target", "kepler_k20"]) == 0
+
+
+def test_gpu_dispatch_warms_from_shipped_db():
+    db = tuning_cache.get_default_db()
+    sig = dict(m=1024, n=1024, k=1024, dtype="float32")
+    with use_target("kepler_k20"):
+        params = tuning_cache.lookup_or_tune("matmul", **sig)
+    assert "k20" in db.warmed_targets
+    assert db.stats.tunes == 0            # served from pretuned/k20.jsonl
+    assert set(params) == {"threads"}
+
+
+# ---------------------------------------------------------------------------
+# Pallas ops keep running while a GPU target is active (analysis-only)
+# ---------------------------------------------------------------------------
+
+
+def test_ops_run_correctly_under_gpu_target():
+    import numpy as np
+    from repro.kernels import ops, ref
+    rng = np.random.default_rng(0)
+    a = rng.standard_normal((64, 64), dtype=np.float32)
+    x = rng.standard_normal((64, 1), dtype=np.float32)
+    with use_target("kepler_k20"):
+        y = ops.atax(a, x)
+    np.testing.assert_allclose(np.asarray(y), np.asarray(ref.atax_ref(a, x)),
+                               rtol=2e-4, atol=2e-4)
+    # dispatch did record the CUDA ranking for the active GPU target
+    db = tuning_cache.get_default_db()
+    fps = {r.key.spec_fingerprint for r in db.records()
+           if r.key.kernel_id == "atax"}
+    assert fingerprint_spec(KEPLER_K20) in fps

@@ -1,0 +1,154 @@
+"""Concurrency tests for the tuning database + dispatch registry.
+
+The seed bug (ISSUE 5): `TuningDatabase.lookup` mutated the LRU
+`OrderedDict` (``move_to_end`` / ``_remember``) with no lock, and the
+registry's `_model_for` / dispatch-memo insert were unsynchronized
+check-then-set — concurrent trace-time dispatch from multiple threads
+could corrupt the dict, miscount `CacheStats`, duplicate cost models,
+and interleave with `clear_dispatch_memo`.  These tests hammer the
+stack from many threads and assert the invariants the locks now
+guarantee: no exceptions, identical params across threads, and exactly
+one tune per cold key.
+"""
+import threading
+
+import pytest
+
+from repro import tuning_cache
+from repro.core import set_default_target
+from repro.core.hw import TPU_V5E, TPU_V5P, KEPLER_K20
+from repro.tuning_cache import TuningDatabase
+from repro.tuning_cache import registry as registry_mod
+
+import repro.kernels  # noqa: F401  (registers dispatch problems)
+
+
+@pytest.fixture(autouse=True)
+def _fresh_state():
+    set_default_target(None)
+    tuning_cache.set_default_db(TuningDatabase())
+    yield
+    set_default_target(None)
+    tuning_cache.reset_default_db()
+
+
+# Signatures deliberately absent from the shipped pretune grids, so
+# every key is cold and must be tuned exactly once no matter how many
+# threads race to it.  Mixed families: the CUDA path shares the same
+# database and locks.
+_CASES = [
+    ("matmul", dict(m=384, n=384, k=384, dtype="float32"), None),
+    ("matmul", dict(m=768, n=768, k=768, dtype="bfloat16"), None),
+    ("atax", dict(m=768, n=768, dtype="float32"), None),
+    ("matvec", dict(m=1536, n=1536, dtype="float32"), None),
+    ("stencil2d", dict(y=768, x=768, dtype="float32"), None),
+    ("atax", dict(m=768, n=768, dtype="float32"), KEPLER_K20),
+    ("matmul", dict(m=384, n=384, k=384, dtype="float32"), TPU_V5P),
+]
+
+
+def _run_threads(n, fn):
+    errors = []
+    barrier = threading.Barrier(n)
+
+    def wrapped(i):
+        try:
+            barrier.wait(timeout=30)
+            fn(i)
+        except Exception as e:          # pragma: no cover - failure path
+            errors.append(e)
+
+    threads = [threading.Thread(target=wrapped, args=(i,)) for i in range(n)]
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join(timeout=120)
+    assert not errors, errors
+    assert not any(t.is_alive() for t in threads)
+
+
+def test_threaded_lookup_or_tune_one_tune_per_key():
+    """N threads hammering overlapping cold signatures against one
+    default database: no exceptions, consistent params, one tune per
+    distinct key."""
+    db = TuningDatabase()
+    tuning_cache.set_default_db(db)
+    n_threads, reps = 8, 3
+    results = [dict() for _ in range(n_threads)]
+
+    def worker(i):
+        for _ in range(reps):
+            for j, (kernel_id, sig, spec) in enumerate(_CASES):
+                p = tuning_cache.lookup_or_tune(kernel_id, spec=spec, **sig)
+                prev = results[i].setdefault(j, p)
+                assert prev == p        # stable within a thread
+
+    _run_threads(n_threads, worker)
+    # identical params across threads for every case
+    for j in range(len(_CASES)):
+        assert len({tuple(sorted(r[j].items())) for r in results}) == 1
+    # exactly one tune per distinct (kernel, signature, spec) key
+    assert db.stats.tunes == len(_CASES)
+    # LRU survived the hammering: the tuned records are all resident
+    # (alongside the lazily-warmed pretuned ones) and well-formed
+    assert len(db) >= len(_CASES)
+    assert all(r.params for r in db.records())
+
+
+def test_threaded_model_memo_single_instance():
+    """Racing cold dispatches must share one memoized cost model per
+    spec fingerprint (the old check-then-set built duplicates)."""
+    registry_mod.clear_dispatch_memo()
+    seen = []
+
+    def worker(i):
+        spec = (TPU_V5E, TPU_V5P, KEPLER_K20)[i % 3]
+        seen.append(registry_mod._model_for(spec))
+
+    _run_threads(12, worker)
+    ids = {fp: {id(m) for m in seen if m.fingerprint() == fp}
+           for fp in {m.fingerprint() for m in seen}}
+    assert len(ids) == 3                       # one model per chip...
+    assert all(len(v) == 1 for v in ids.values())   # ...one instance each
+
+
+def test_clear_dispatch_memo_races_with_warm_dispatch():
+    """clear_dispatch_memo concurrent with warm dispatch: no exceptions,
+    and dispatch keeps returning the correct params throughout."""
+    kernel_id, sig = "matmul", dict(m=384, n=384, k=384, dtype="float32")
+    expected = tuning_cache.lookup_or_tune(kernel_id, **sig)
+    stop = threading.Event()
+
+    def clearer(_):
+        while not stop.is_set():
+            tuning_cache.clear_dispatch_memo()
+
+    def dispatcher(_):
+        try:
+            for _ in range(300):
+                assert tuning_cache.lookup_or_tune(kernel_id,
+                                                   **sig) == expected
+        finally:
+            stop.set()
+
+    _run_threads(4, lambda i: (clearer if i == 0 else dispatcher)(i))
+
+
+def test_concurrent_export_while_dispatching(tmp_path):
+    """export_jsonl snapshots under the lock: exporting while other
+    threads tune must neither crash nor emit torn records."""
+    db = TuningDatabase()
+    tuning_cache.set_default_db(db)
+
+    def worker(i):
+        if i == 0:
+            for k in range(20):
+                db.export_jsonl(str(tmp_path / f"dump_{k}.jsonl"))
+        else:
+            for kernel_id, sig, spec in _CASES:
+                tuning_cache.lookup_or_tune(kernel_id, spec=spec, **sig)
+
+    _run_threads(5, worker)
+    fresh = TuningDatabase()
+    assert fresh.import_jsonl(str(tmp_path / "dump_19.jsonl")) >= 0
+    assert fresh.stats.corrupt == 0

@@ -197,6 +197,37 @@ def test_export_import_roundtrip(tmp_path):
         assert db2.lookup(k).params == {"bm": 8 << i}
 
 
+def test_nonfinite_floats_roundtrip_as_strict_json(tmp_path):
+    """A record with the default predicted_s=inf (fallback-params
+    provenance) must export as null — bare ``Infinity`` is invalid
+    JSON — and restore to inf on import; a NaN measured_s likewise."""
+    db = TuningDatabase(root=str(tmp_path / "disk"))
+    rec = TuningRecord(key=_key(), params={"bm": 64},
+                       predicted_s=math.inf, measured_s=math.nan,
+                       source="fallback", created_unix=now_unix())
+    db.put(rec)
+    out = str(tmp_path / "db.jsonl")
+    assert db.export_jsonl(out) == 1
+    boom = lambda c: (_ for _ in ()).throw(
+        ValueError(f"non-strict JSON constant {c!r}"))
+    # both the JSONL export and the one-file-per-record disk backend
+    # must be parseable by a strict JSON reader
+    paths = [out] + [os.path.join(db.disk.root, f)
+                     for f in os.listdir(db.disk.root)
+                     if f.endswith(".json")]
+    for p in paths:
+        payload = json.loads(open(p, encoding="utf-8").read().splitlines()[0],
+                             parse_constant=boom)
+        assert payload["predicted_s"] is None
+        assert payload["measured_s"] is None
+    db2 = TuningDatabase()
+    assert db2.import_jsonl(out) == 1
+    back = db2.lookup(_key())
+    assert math.isinf(back.predicted_s) and back.predicted_s > 0
+    assert back.measured_s is None      # non-finite measurement drops
+    assert back.params == {"bm": 64}
+
+
 # ---------------------------------------------------------------------------
 # zero model evaluations on the second lookup
 # ---------------------------------------------------------------------------
@@ -413,7 +444,15 @@ def test_pretuned_database_parses():
     for name in files:
         with open(os.path.join(root, name)) as f:
             for line in f:
-                rec = TuningRecord.from_dict(json.loads(line))
+                payload = json.loads(line)
+                rec = TuningRecord.from_dict(payload)
                 assert rec.params
                 assert rec.key.model_version == tuning_cache.MODEL_VERSION
-                assert math.isfinite(rec.predicted_s)
+                # predicted_s is finite for every feasible ranking; the
+                # only non-finite records are all-infeasible CUDA spaces
+                # (flash_attention's R^u exceeds Fermi's register cap),
+                # which must serialize as null — never a bare Infinity
+                # literal, which is not valid JSON
+                if not math.isfinite(rec.predicted_s):
+                    assert payload["predicted_s"] is None
+                    assert rec.key.spec_fingerprint.startswith("m2050@")
