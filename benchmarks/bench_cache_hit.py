@@ -1,6 +1,6 @@
 """Cold-vs-warm dispatch latency for the tuning database.
 
-    PYTHONPATH=src python benchmarks/bench_cache_hit.py
+    PYTHONPATH=src python benchmarks/bench_cache_hit.py [--smoke]
 
 Measures, per kernel instance, the trace-time cost of
 `tuning_cache.lookup_or_tune`:
@@ -8,7 +8,8 @@ Measures, per kernel instance, the trace-time cost of
 * **cold** — first call: enumerate the launch space, build every
   configuration's static info, score the whole batch with the cost
   model, store the winner;
-* **warm** — every later call: key construction + one LRU probe.
+* **warm** — every later call: one generation-checked probe of the
+  per-kernel dispatch memo.
 
 The ratio is the "tune once, serve millions" argument in one number —
 the warm path is what every production dispatch pays.
@@ -19,7 +20,18 @@ decorator (`stencil2d`) against a kernel registered as a hand-written
 legacy factory, and asserts the declarative path's warm overhead is
 within noise of the legacy one — the indirection must not hide a
 dispatch regression.
+
+The third section guards the frozen warm-dispatch tier (DESIGN.md §12):
+after `freeze()`, a dispatch is one probe of an immutable compiled
+table — no lock, no generation check, no signature normalization.  It
+times that probe (the exact callable op wrappers cache and call in the
+serving hot loop, via `frozen_table`) against the live memo path,
+asserts the params are bit-identical across live, `frozen_lookup`, and
+the frozen `lookup_or_tune` fast path, and enforces the >=10x speedup
+floor.  `--smoke` shrinks rep counts for CI while keeping every
+assertion.
 """
+import argparse
 import statistics
 import sys
 import time
@@ -49,7 +61,6 @@ WARM_REPS = 200
 
 
 def _register_legacy_baseline():
-    import numpy as np
     from repro.core.search import SearchSpace
     from repro.kernels.common import pick_divisor_candidates
     from repro.kernels.stencil2d import _stencil2d_analysis
@@ -68,19 +79,19 @@ def _register_legacy_baseline():
                 **_stencil2d_analysis(c, y=y, x=x, dtype=dtype)))
 
 
-def bench_one(kernel_id, sig):
+def bench_one(kernel_id, sig, warm_reps):
     db = TuningDatabase()          # private, unwarmed: first call is cold
     t0 = time.perf_counter()
     params = tuning_cache.lookup_or_tune(kernel_id, db=db, **sig)
     cold = time.perf_counter() - t0
 
     warms = []
-    for _ in range(WARM_REPS):
+    for _ in range(warm_reps):
         t0 = time.perf_counter()
         tuning_cache.lookup_or_tune(kernel_id, db=db, **sig)
         warms.append(time.perf_counter() - t0)
     warm = statistics.median(warms)
-    assert db.stats.tunes == 1 and db.stats.hits == WARM_REPS
+    assert db.stats.tunes == 1 and db.stats.hits == warm_reps
     return params, cold, warm
 
 
@@ -95,11 +106,74 @@ def bench_memo(kernel_id, sig, reps=WARM_REPS):
     return statistics.median(warms)
 
 
-def main():
+def _timed(fn, reps, inner):
+    """Min-of-chunks per-call latency: each sample amortizes the timer
+    over ``inner`` back-to-back calls, and the minimum over ``reps``
+    samples filters scheduler noise — the right estimator for a path
+    whose true cost is well under the clock resolution."""
+    best = float("inf")
+    r = range(inner)
+    for _ in range(reps):
+        t0 = time.perf_counter()
+        for _ in r:
+            fn()
+        dt = (time.perf_counter() - t0) / inner
+        if dt < best:
+            best = dt
+    return best
+
+
+def bench_frozen(smoke):
+    """Frozen-table probe vs live memo dispatch; returns worst ratio."""
+    reps, inner = (20, 100) if smoke else (50, 200)
+    rows = [
+        ("matmul", dict(m=1024, n=1024, k=1024, dtype="float32")),
+        ("stencil2d", dict(y=2048, x=2048, dtype="float32")),
+    ]
+    tuning_cache.thaw()
+    live = {kid: tuning_cache.lookup_or_tune(kid, **sig)
+            for kid, sig in rows}
+
+    t_live = {kid: _timed(lambda k=kid, s=sig:
+                          tuning_cache.lookup_or_tune(k, **s), reps, inner)
+              for kid, sig in rows}
+
+    n = tuning_cache.freeze()
+    print(f"\nfrozen dispatch tables: {n} entries")
+    print(f"{'kernel':<16} {'live memo':>12} {'frozen probe':>13} "
+          f"{'speedup':>8}")
+    ratios = {}
+    for kid, sig in rows:
+        probe = tuning_cache.frozen_table(kid)
+        assert probe is not None, f"{kid} missing from frozen tables"
+        # bit-identical params across every frozen entry point
+        assert probe(dict(sig)) == live[kid]
+        assert tuning_cache.frozen_lookup(kid, sig) == live[kid]
+        assert tuning_cache.lookup_or_tune(kid, **sig) == live[kid]
+        t_frozen = _timed(lambda p=probe, s=sig: p(s), reps, inner)
+        ratios[kid] = t_live[kid] / t_frozen
+        print(f"{kid:<16} {t_live[kid]*1e9:>9.0f} ns {t_frozen*1e9:>10.0f} ns "
+              f"{ratios[kid]:>7.1f}x")
+    # The headline gate: the serving hot path (the probe op wrappers
+    # cache) must be at least 10x cheaper than the live memo dispatch.
+    assert ratios["matmul"] >= 10.0, (
+        f"frozen dispatch only {ratios['matmul']:.1f}x faster than the "
+        f"live memo path (floor: 10x)")
+    tuning_cache.thaw()
+    return min(ratios.values())
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="shrink rep counts for CI; keeps all assertions")
+    args = ap.parse_args(argv)
+    warm_reps = 50 if args.smoke else WARM_REPS
+
     print(f"{'kernel':<16} {'space tune (cold)':>18} {'cache hit (warm)':>17} "
           f"{'speedup':>8}   params")
     for kernel_id, sig in CASES:
-        params, cold, warm = bench_one(kernel_id, sig)
+        params, cold, warm = bench_one(kernel_id, sig, warm_reps)
         print(f"{kernel_id:<16} {cold*1e3:>15.2f} ms {warm*1e6:>14.1f} us "
               f"{cold/warm:>7.0f}x   {params}")
 
@@ -107,8 +181,8 @@ def main():
     _register_legacy_baseline()
     try:
         sig = dict(y=2048, x=2048, dtype="float32")
-        t_decorated = bench_memo("stencil2d", sig)
-        t_legacy = bench_memo("stencil2d_legacy", sig)
+        t_decorated = bench_memo("stencil2d", sig, reps=warm_reps)
+        t_legacy = bench_memo("stencil2d_legacy", sig, reps=warm_reps)
         ratio = t_decorated / t_legacy
         print(f"\nwarm memoized dispatch: @tuned_kernel "
               f"{t_decorated*1e6:.2f} us vs legacy factory "
@@ -120,7 +194,11 @@ def main():
             f"decorated warm dispatch {t_decorated*1e6:.2f} us is not "
             f"within noise of the legacy path {t_legacy*1e6:.2f} us")
     finally:
+        # unregister() thaws, so the frozen section below starts clean
         tuning_cache.unregister("stencil2d_legacy")
+
+    # -- frozen tables vs live memo (the ISSUE 6 acceptance gate) ------------
+    bench_frozen(args.smoke)
     return 0
 
 

@@ -27,12 +27,13 @@ import contextlib
 import contextvars
 import logging
 import os
-from typing import Iterator, Optional, Union
+from typing import Any, Iterator, Optional, Union
 
 from repro.core.hw import ChipSpec, TPU_V5E, resolve_target
 
-__all__ = ["ENV_TARGET", "default_target", "set_default_target",
-           "use_target", "detect_target"]
+__all__ = ["ENV_TARGET", "default_target", "unscoped_default",
+           "set_default_target", "use_target", "detect_target",
+           "on_default_target_change"]
 
 ENV_TARGET = "REPRO_TUNING_TARGET"
 
@@ -53,6 +54,18 @@ _detected: Optional[tuple] = None
 # (raw env value, resolved spec) — default_target runs on every warm
 # dispatch, so the env string is parsed once, not per call.
 _env_cache: Optional[tuple] = None
+# Callbacks run by set_default_target: layers that specialized state on
+# the process default (e.g. the frozen dispatch tables in
+# repro.tuning_cache.registry) register here to invalidate it when the
+# default changes.  Hooks must be cheap and lock-free.
+_change_hooks: list = []
+
+
+def on_default_target_change(hook) -> Any:
+    """Register a callback invoked whenever `set_default_target` runs."""
+    if hook not in _change_hooks:
+        _change_hooks.append(hook)
+    return hook
 
 
 def detect_target() -> Optional[ChipSpec]:
@@ -77,11 +90,17 @@ def detect_target() -> Optional[ChipSpec]:
     return _detected[0]
 
 
-def default_target() -> ChipSpec:
-    """The chip every ``spec=None`` in the stack resolves to."""
-    spec = _scoped.get()
-    if spec is not None:
-        return spec
+def unscoped_default() -> ChipSpec:
+    """The process-default chip, *ignoring* any `use_target` scope:
+    explicit pin > environment > autodetect > v5e.
+
+    This is what a ``spec=None`` dispatch resolves to whenever no scoped
+    override is active — the frozen dispatch tables
+    (`repro.tuning_cache.registry.freeze`) specialize their fast path to
+    this value at freeze time.  `set_default_target` notifies the
+    registered change hooks; mutating ``REPRO_TUNING_TARGET`` directly
+    after a freeze does not, and needs an explicit ``thaw()``.
+    """
     spec = _explicit
     if spec is not None:
         return spec
@@ -98,11 +117,21 @@ def default_target() -> ChipSpec:
     return TPU_V5E
 
 
+def default_target() -> ChipSpec:
+    """The chip every ``spec=None`` in the stack resolves to."""
+    spec = _scoped.get()
+    if spec is not None:
+        return spec
+    return unscoped_default()
+
+
 def set_default_target(target: Optional[Union[str, ChipSpec]]) -> ChipSpec:
     """Pin the process-default target (``None`` restores env/auto/v5e
     resolution).  Returns the now-active target."""
     global _explicit
     _explicit = None if target is None else resolve_target(target)
+    for hook in list(_change_hooks):
+        hook()
     return default_target()
 
 

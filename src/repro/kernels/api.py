@@ -53,6 +53,7 @@ from typing import (Any, Callable, Dict, Mapping, Optional, Sequence,
 import numpy as np
 
 from repro import tuning_cache
+from repro.tuning_cache.binder import SigBinder, compile_binder, schema_of
 from repro.core.annotations import parse_tuning_spec
 from repro.core.autotuner import KernelStaticInfo, TunableKernel
 from repro.core.hw import GpuSpec
@@ -254,7 +255,7 @@ def reset_dispatch_failure_log() -> None:
 tuning_cache.registry.on_dispatch_memo_clear(reset_dispatch_failure_log)
 
 
-def _resolve(kernel_id: str, **signature) -> Dict:
+def _resolve(kernel_id: str, signature: Dict) -> Dict:
     """Trace-time launch-config lookup for the active hardware target;
     never raises (returns {} on failure so the fallback params apply)."""
     try:
@@ -336,12 +337,23 @@ class KernelSpec:
                 f"@tuned_kernel({self.kernel_id!r}): static_info builder "
                 f"must take (params, **signature)")
         self._sig_schema = inspect.Signature(params[1:])
+        # Declaration-time normalization: the schema compiles once into
+        # a canonical key builder (repro.tuning_cache.binder), so warm
+        # dispatch never pays inspect.bind or a per-call sort.  None
+        # for exotic schemas (*args/**kwargs) — those fall back to the
+        # inspect path and are excluded from the frozen tier.
+        self._binder = compile_binder(schema_of(params[1:]))
         self.pretune = tuple(dict(s) for s in self.pretune)
         self._op = None
         self._fn_kw = None
         self._fallback_cache: Dict[Tuple, Dict[str, Any]] = {}
 
     # -- signature plumbing -------------------------------------------------
+    def sig_binder(self) -> Optional[SigBinder]:
+        """The declaration-compiled signature key builder (the registry
+        and the frozen dispatch tier consume this)."""
+        return self._binder
+
     def normalize(self, signature: Mapping[str, Any]) -> Dict[str, Any]:
         """Bind a partial signature through the declared defaults.
 
@@ -352,6 +364,12 @@ class KernelSpec:
         misses at trace time.  Raises TypeError on missing or unknown
         keys, like the old factory binding did.
         """
+        b = self._binder
+        if b is not None:
+            out = b.normalized(signature)
+            if out is not None:
+                return out
+            # invalid spelling: fall through for the proper TypeError
         ba = self._sig_schema.bind(**signature)
         ba.apply_defaults()
         return dict(ba.arguments)
@@ -481,11 +499,35 @@ class KernelSpec:
         """
         if self._op is None:
             axis_names = frozenset(self.space)
+            kernel_id = self.kernel_id
+            registry = tuning_cache.registry
+            # (frozen state, probe) pair published as ONE tuple: a
+            # single attribute store is atomic under the GIL, so racing
+            # dispatch threads can never pair a stale probe with a
+            # fresh state.  Revalidated against registry._FROZEN by
+            # identity on every call — thaw/re-freeze is picked up
+            # without any lock on the hot path.
+            cache = [(None, None)]
 
             def op(*args, tuned_params: Optional[Dict] = None, **kw):
                 sig = self.extract_signature(*args, **kw)
-                p = tuned_params if tuned_params is not None \
-                    else _resolve(self.kernel_id, **sig)
+                if tuned_params is not None:
+                    p = tuned_params
+                else:
+                    fz = registry._FROZEN
+                    state, probe = cache[0]
+                    if state is not fz:
+                        probe = (fz.tables.get((kernel_id, "static"))
+                                 if fz is not None else None)
+                        cache[0] = (fz, probe)
+                    p = None
+                    if probe is not None:
+                        try:
+                            p = probe(sig)
+                        except TypeError:   # unhashable signature value
+                            p = None
+                    if p is None:
+                        p = _resolve(kernel_id, sig)
                 launch = {k: v for k, v in p.items() if k in axis_names}
                 # dispatch failed or returned partial params: fill the
                 # gaps with the feasible largest-divisor fallback

@@ -15,6 +15,13 @@ space with the static cost model in one vectorized pass; every later
 call — including across processes when a disk/pre-tuned database is
 configured — is a pure cache hit with zero model evaluations.
 
+After ``repro.tuning_cache.freeze()`` (the serving posture) warm
+dispatch gets cheaper still: each op probes its immutable frozen table
+— no locks, no generation check, signature keyed by the
+declaration-compiled binder — and only falls back to the live
+database path on a frozen miss.  Any database/registry/target
+invalidation thaws the tables automatically; see DESIGN.md §12.
+
 ``tuned_params`` still lets a caller inject a
 :class:`~repro.core.autotuner.TuningReport`'s best_params explicitly,
 which bypasses the database entirely.  If the database/registry fails

@@ -33,6 +33,8 @@ def main():
     args = ap.parse_args()
 
     from repro import tuning_cache
+    import repro.kernels  # noqa: F401  (registers dispatch problems —
+    #                        freeze() below compiles only registered kernels)
     from repro.configs import get_config, get_smoke
     from repro.distributed import make_serve_fns
     from repro.models import build_model
@@ -50,6 +52,13 @@ def main():
             print(f"[serve] WARNING: could not warm tuning cache "
                   f"from {args.tuning_db}: {e}")
     print(f"[serve] tuning cache ready: {len(db)} records resident")
+    # Freeze the warm records into the zero-overhead dispatch tables:
+    # the serving hot loop then pays one lock-free probe per kernel
+    # dispatch instead of the full normalize/key/LRU path.  Any later
+    # cache mutation thaws automatically (and dispatch still works,
+    # just through the live tiers).
+    n_frozen = tuning_cache.freeze()
+    print(f"[serve] dispatch tables frozen: {n_frozen} entries")
 
     cfg = get_smoke(args.arch) if args.smoke else get_config(args.arch)
     model = build_model(cfg)

@@ -33,11 +33,13 @@ from repro.tuning_cache.store import (CacheStats, DiskStore, TuningDatabase,
                                       TuningRecord)
 from repro.tuning_cache import registry
 from repro.tuning_cache.registry import (TuningProblem, clear_dispatch_memo,
-                                         get_problem, lookup_or_tune,
+                                         freeze, frozen_lookup, frozen_table,
+                                         get_problem, is_frozen,
+                                         lookup_or_tune,
                                          normalize_signature,
                                          on_dispatch_memo_clear, rank_space,
                                          register, register_entry,
-                                         registered, unregister)
+                                         registered, thaw, unregister)
 
 __all__ = [
     "CacheKey", "MODEL_VERSION", "canonical_json", "fingerprint_spec",
@@ -45,6 +47,7 @@ __all__ = [
     "TuningProblem", "clear_dispatch_memo", "get_problem", "lookup_or_tune",
     "normalize_signature", "on_dispatch_memo_clear", "rank_space",
     "register", "register_entry", "registered", "unregister",
+    "freeze", "thaw", "is_frozen", "frozen_lookup", "frozen_table",
     "get_default_db", "set_default_db", "reset_default_db", "pretuned_dir",
     "pretuned_path", "warm_pretuned",
 ]

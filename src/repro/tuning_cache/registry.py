@@ -21,27 +21,53 @@ a kernel entry point makes at trace time: key the tuning database on
 return the stored params with **zero** cost-model evaluations; on a
 miss, rank the entire space in one vectorized pass
 (`repro.core.predict.static_times_batch`), store the winner, return it.
+
+Warm dispatch has three tiers, fastest first (DESIGN.md §12):
+
+1. **frozen** — after :func:`freeze`, an immutable per-(kernel, mode)
+   table probed lock-free with no generation check; invalidated as a
+   whole (thaw) by any database generation bump, `clear_dispatch_memo`,
+   `set_default_target`, or `unregister`;
+2. **live memo** — per-kernel shards of ``{(mode, fingerprint,
+   sig-key): (generation, params)}`` entries that self-invalidate
+   against `TuningDatabase.generation`;
+3. **database** — normalize + content-addressed key + LRU probe (and,
+   cold, the full vectorized rank).
+
+Signature normalization happens at *declaration* time: each entry
+exposes a compiled `repro.tuning_cache.binder.SigBinder` that maps any
+valid spelling (kwarg-order permuted, defaults elided) straight to a
+canonical value tuple, so tiers 1-2 never call ``inspect`` machinery or
+sort the signature per dispatch.
 """
 from __future__ import annotations
 
 import dataclasses
 import inspect
+import json
 import threading
-from typing import Any, Callable, Dict, Optional, Tuple, Union
+from typing import Any, Callable, Dict, List, Optional, Tuple, Union
 
 import numpy as np
 
-from repro.core.hw import ChipSpec, GpuSpec, TpuSpec, resolve_target
+from repro.core.hw import (ChipSpec, GPU_TABLE, GpuSpec, TPU_TABLE, TpuSpec,
+                           resolve_target)
 from repro.core.predict import CostModel, default_cuda_model, \
     default_tpu_model, static_times_batch
-from repro.core.target import use_target
+from repro.core.target import (on_default_target_change, unscoped_default,
+                               use_target)
 from repro.core.search import Params, SearchSpace
-from repro.tuning_cache.keys import CacheKey, fingerprint_spec, make_key
+from repro.tuning_cache.binder import (SigBinder, compile_binder,
+                                       compile_probe, schema_of)
+from repro.tuning_cache.keys import (CacheKey, MODEL_VERSION,
+                                     fingerprint_spec, make_key)
 from repro.tuning_cache.store import TuningDatabase, TuningRecord, now_unix
 
 __all__ = ["TuningProblem", "register", "register_entry", "unregister",
            "get_problem", "registered", "rank_space", "lookup_or_tune",
-           "clear_dispatch_memo", "on_dispatch_memo_clear", "reset_models"]
+           "clear_dispatch_memo", "on_dispatch_memo_clear", "reset_models",
+           "freeze", "thaw", "is_frozen", "frozen_lookup", "frozen_table",
+           "dispatch_memo_keys"]
 
 
 @dataclasses.dataclass
@@ -63,21 +89,46 @@ class TuningProblem:
 class _FactoryEntry:
     """Adapter giving a legacy problem factory the entry protocol."""
 
-    __slots__ = ("factory", "_sig")
+    __slots__ = ("factory", "_sig", "_binder", "_binder_built")
 
     def __init__(self, factory: Callable[..., TuningProblem]):
         self.factory = factory
         self._sig: Optional[inspect.Signature] = None
+        self._binder: Optional[SigBinder] = None
+        self._binder_built = False
 
     def problem(self, **signature: Any) -> TuningProblem:
         return self.factory(**signature)
 
+    def sig_binder(self) -> Optional[SigBinder]:
+        """Declaration-derived key builder (``None``: the factory's
+        signature is not compilable — e.g. ``**kwargs``)."""
+        if not self._binder_built:
+            self._binder = compile_binder(schema_of(
+                inspect.signature(self.factory).parameters.values()))
+            self._binder_built = True
+        return self._binder
+
     def normalize(self, signature: Dict[str, Any]) -> Dict[str, Any]:
+        b = self.sig_binder()
+        if b is not None:
+            out = b.normalized(signature)
+            if out is not None:
+                return out
         if self._sig is None:
             self._sig = inspect.signature(self.factory)
         ba = self._sig.bind(**signature)
         ba.apply_defaults()
-        return dict(ba.arguments)
+        out: Dict[str, Any] = {}
+        for name, value in ba.arguments.items():
+            # a **kwargs factory collects the signature under the
+            # var-keyword name — flatten it back to the caller's keys
+            if (self._sig.parameters[name].kind
+                    is inspect.Parameter.VAR_KEYWORD):
+                out.update(value)
+            else:
+                out[name] = value
+        return out
 
 
 # kernel_id -> entry with .problem(**sig) / .normalize(sig) — either a
@@ -111,8 +162,13 @@ def register(kernel_id: str):
 
 
 def unregister(kernel_id: str) -> None:
-    """Remove a registration (no-op when absent)."""
-    _REGISTRY.pop(kernel_id, None)
+    """Remove a registration (no-op when absent).  Drops the kernel's
+    memo shard and thaws any frozen table so a re-registration under
+    the same id can never be served another declaration's params."""
+    if _REGISTRY.pop(kernel_id, None) is not None:
+        thaw()
+    with _models_lock:
+        _DISPATCH_MEMO.pop(kernel_id, None)
 
 
 def registered() -> Tuple[str, ...]:
@@ -170,7 +226,7 @@ def rank_space(problem: TuningProblem, model: CostModel
     return pts[i], float(times[i]), len(pts)
 
 
-# Guards the check-then-set on _DEFAULT_MODELS and inserts into
+# Guards the check-then-set on _DEFAULT_MODELS and shard creation in
 # _DISPATCH_MEMO (plus clear_dispatch_memo/reset_models): two threads
 # cold-tuning the same kernel must not build duplicate cost models or
 # interleave an insert with a concurrent clear.  The warm-path memo
@@ -182,16 +238,62 @@ _models_lock = threading.Lock()
 
 _DEFAULT_MODELS: Dict[str, CostModel] = {}
 
-# Warm-dispatch memo: (kernel_id, mode, spec fingerprint, raw signature
-# items) -> (db generation, params items).  A repeat trace of the same
-# op instance skips signature normalization, canonical-JSON rendering,
-# and SHA-256 key hashing entirely — the memo hit is one dict probe.
-# Only engaged for the process-default database and model (explicit
-# db/model callers get exact database semantics, e.g. hit/miss stats);
-# invalidated by a default-database swap (`set_default_db`) and, via
-# the stored generation, by bulk mutation of the live default database
-# (`clear()` / `import_jsonl` / `warm_jsonl`).
-_DISPATCH_MEMO: Dict[Tuple, Tuple[int, Tuple[Tuple[str, Any], ...]]] = {}
+
+class _MemoShard:
+    """One kernel's slice of the live warm-dispatch memo.
+
+    Entries: ``(mode, spec fingerprint, sig key) -> (db generation,
+    params dict)`` where the sig key is the entry's binder-canonical
+    value tuple (so every valid spelling of a signature shares one
+    entry), or ``("#raw", sorted items)`` for entries whose declaration
+    is not binder-compilable.  Each shard has its own insert lock —
+    concurrent dispatch of *different* kernels never contends.
+    """
+
+    __slots__ = ("lock", "entries")
+
+    def __init__(self):
+        self.lock = threading.Lock()
+        self.entries: Dict[Tuple, Tuple[int, Dict[str, Any]]] = {}
+
+
+# Live warm-dispatch memo, sharded per kernel_id.  A repeat trace of the
+# same op instance skips signature normalization, canonical-JSON
+# rendering, and SHA-256 key hashing entirely — the memo hit is one
+# dict probe.  Only engaged for the process-default database and model
+# (explicit db/model callers get exact database semantics, e.g.
+# hit/miss stats); invalidated by a default-database swap
+# (`set_default_db`) and, via the stored generation, by bulk mutation
+# of the live default database (`clear()` / `import_jsonl` /
+# `warm_jsonl`).
+_DISPATCH_MEMO: Dict[str, _MemoShard] = {}
+
+
+def _shard(kernel_id: str) -> _MemoShard:
+    s = _DISPATCH_MEMO.get(kernel_id)
+    if s is None:
+        with _models_lock:
+            s = _DISPATCH_MEMO.get(kernel_id)
+            if s is None:
+                s = _DISPATCH_MEMO[kernel_id] = _MemoShard()
+    return s
+
+
+def dispatch_memo_keys() -> List[Tuple]:
+    """Flat ``(kernel_id, mode, spec_fingerprint, sig_key)`` view of
+    every live memo entry — introspection for tests and tooling; the
+    memo itself is sharded per kernel_id."""
+    out: List[Tuple] = []
+    for kid, shard in list(_DISPATCH_MEMO.items()):
+        with shard.lock:
+            keys = list(shard.entries)
+        out.extend((kid,) + k for k in keys)
+    return out
+
+
+def _binder_of(entry: Any) -> Optional[SigBinder]:
+    get = getattr(entry, "sig_binder", None)
+    return get() if get is not None else None
 
 # Callbacks run by clear_dispatch_memo.  The kernel layer registers its
 # per-process dispatch state here (e.g. the once-per-kernel failure log
@@ -221,8 +323,11 @@ def reset_models() -> None:
 
 
 def clear_dispatch_memo() -> None:
+    thaw()               # the frozen tier compiles memo + db state
     with _models_lock:
-        _DISPATCH_MEMO.clear()
+        for shard in _DISPATCH_MEMO.values():
+            with shard.lock:
+                shard.entries.clear()
         _DEFAULT_MODELS.clear()
         hooks = list(_MEMO_CLEAR_HOOKS)
     # hooks run unlocked: they may take their own locks (e.g. the
@@ -249,6 +354,195 @@ def _model_for(spec: ChipSpec) -> CostModel:
     return model
 
 
+# ---------------------------------------------------------------------------
+# Frozen warm-dispatch tier (DESIGN.md §12)
+# ---------------------------------------------------------------------------
+
+
+class _FrozenState:
+    """One immutable freeze: compiled probes + the provenance needed to
+    decide whether a later freeze() can reuse it."""
+
+    __slots__ = ("tables", "generation", "db", "size")
+
+    def __init__(self, tables: Dict[Tuple[str, str], Callable],
+                 generation: int, db: TuningDatabase, size: int):
+        self.tables = tables        # (kernel_id, mode) -> probe
+        self.generation = generation
+        self.db = db
+        self.size = size
+
+
+# The whole frozen tier is one reference: readers load it once per
+# dispatch (a local), so they see either a complete frozen state or
+# none — never a half-built one.  Invalidation is a bare `_FROZEN =
+# None` (atomic under the GIL, safe to run from the database's
+# invalidation hook while its lock is held).
+_FROZEN: Optional[_FrozenState] = None
+
+# Serializes freeze() itself: concurrent freezes must yield ONE table,
+# not race to publish two.
+_freeze_lock = threading.Lock()
+
+
+def thaw() -> None:
+    """Drop the frozen dispatch tables; dispatch falls back to the live
+    memo tier until the next :func:`freeze`."""
+    global _FROZEN
+    _FROZEN = None
+
+
+def is_frozen() -> bool:
+    return _FROZEN is not None
+
+
+def _build_frozen_tables(db: TuningDatabase, gen: int
+                         ) -> Tuple[Dict[Tuple[str, str], Callable], int]:
+    binders = {kid: b for kid, entry in list(_REGISTRY.items())
+               if (b := _binder_of(entry)) is not None}
+    # (kernel_id, mode) -> {spec fingerprint -> {sig key -> params}}
+    tables: Dict[Tuple[str, str], Dict[str, Dict[tuple, Dict[str, Any]]]] = {}
+    size = 0
+
+    def insert(kid: str, mode: str, fp: str, vals: tuple,
+               params: Dict[str, Any]) -> int:
+        sub = tables.setdefault((kid, mode), {}).setdefault(fp, {})
+        if vals in sub:
+            return 0
+        sub[vals] = dict(params)
+        return 1
+
+    # 1) Database-resident records — this is what makes freeze-after-warm
+    #    useful at serve startup, where the shipped pretuned JSONLs are
+    #    loaded but nothing has dispatched yet.  A record is compiled in
+    #    only when the frozen answer provably equals what the live
+    #    default-model path would return: current MODEL_VERSION, a spec
+    #    we can map back from its fingerprint, and the record's model
+    #    name matching the freeze-time default model for that spec.
+    fp_to_spec = {fingerprint_spec(s): s
+                  for table in (TPU_TABLE, GPU_TABLE)
+                  for s in table.values()}
+    for rec in db.snapshot():
+        binder = binders.get(rec.key.kernel_id)
+        if binder is None or rec.key.model_version != MODEL_VERSION:
+            continue
+        spec = fp_to_spec.get(rec.key.spec_fingerprint)
+        if spec is None:
+            continue
+        try:
+            sig = json.loads(rec.key.signature)
+        except ValueError:
+            continue
+        if sig.pop("model", None) != _model_for(spec).fingerprint():
+            continue
+        vals = binder.key(sig)
+        if vals is None:
+            continue
+        try:
+            size += insert(rec.key.kernel_id, rec.key.mode,
+                           rec.key.spec_fingerprint, vals, rec.params)
+        except TypeError:               # unhashable signature value
+            continue
+
+    # 2) Live memo entries of the current generation overlay — they are
+    #    answers the default path already served this generation
+    #    (including freshly cold-tuned signatures not in any JSONL).
+    for kid, shard in list(_DISPATCH_MEMO.items()):
+        binder = binders.get(kid)
+        if binder is None:
+            continue                    # raw-keyed shard: not freezable
+        with shard.lock:
+            entries = list(shard.entries.items())
+        for (mode, fp, vals), (g, params) in entries:
+            if g != gen:
+                continue
+            size += insert(kid, mode, fp, vals, params)
+
+    default_fp = fingerprint_spec(unscoped_default())
+    probes = {}
+    for km, sub in tables.items():
+        # insert() may have created a subtable and then failed the hash
+        # (unhashable signature value) — an empty table earns no probe.
+        sub = {fp: t for fp, t in sub.items() if t}
+        if sub:
+            probes[km] = compile_probe(binders[km[0]], sub, default_fp)
+    return probes, size
+
+
+def freeze() -> int:
+    """Compile the live dispatch state into immutable frozen tables.
+
+    Sources both the process-default database's resident records (the
+    shipped pretuned JSONLs plus anything warmed/tuned into it) and the
+    current-generation live memo; returns the number of frozen entries.
+    Binder-less registrations (legacy ``**kwargs`` factories) and
+    records tuned under a non-default model are excluded — they keep
+    dispatching through the live tiers.
+
+    The frozen tier thaws automatically on any database generation bump
+    (``clear`` / ``import_jsonl`` / ``warm_jsonl``),
+    `clear_dispatch_memo`, `set_default_db`,
+    `repro.core.target.set_default_target`, and `unregister`; re-freeze
+    after re-warming.  Mutating ``REPRO_TUNING_TARGET`` directly after a
+    freeze is the one unsupported path — call :func:`thaw` yourself.
+    """
+    global _FROZEN
+    from repro.tuning_cache import get_default_db
+    db = get_default_db()
+    with _freeze_lock:
+        cur = _FROZEN
+        if cur is not None and cur.db is db and cur.generation == db.generation:
+            return cur.size             # already frozen and current
+        # Register the thaw hook BEFORE reading the generation: a bump
+        # that lands during the build either fires the hook after we
+        # publish (thawing the stale state) or is caught by the
+        # re-check below — it can never be lost.
+        db.on_invalidate(thaw)
+        gen = db.generation
+        tables, size = _build_frozen_tables(db, gen)
+        _FROZEN = _FrozenState(tables, gen, db, size)
+        if db.generation != gen:        # a bump raced the build
+            _FROZEN = None
+            return 0
+        return size
+
+
+def frozen_table(kernel_id: str, mode: str = "static"
+                 ) -> Optional[Callable[..., Optional[Dict[str, Any]]]]:
+    """The raw compiled probe for one (kernel, mode), or ``None`` when
+    nothing is frozen for it.  ``probe(signature_dict)`` returns a
+    fresh params dict or ``None`` — this is the hot-loop entry point
+    the generated op wrappers and the benchmark use; re-fetch it
+    whenever :func:`is_frozen` / the table identity changes."""
+    fz = _FROZEN
+    if fz is None:
+        return None
+    return fz.tables.get((kernel_id, mode))
+
+
+def frozen_lookup(kernel_id: str, signature: Dict[str, Any], *,
+                  spec: Union[str, ChipSpec, None] = None,
+                  mode: str = "static") -> Optional[Dict[str, Any]]:
+    """Probe the frozen tier only: params dict on a hit, ``None`` on a
+    miss (nothing frozen, unknown signature spelling, uncovered spec,
+    or an unhashable signature value)."""
+    fz = _FROZEN
+    if fz is None:
+        return None
+    probe = fz.tables.get((kernel_id, mode))
+    if probe is None:
+        return None
+    try:
+        return probe(signature, spec)
+    except TypeError:                   # unhashable signature value
+        return None
+
+
+# A process-default-target change invalidates the frozen fast path's
+# specialization (it bakes in the freeze-time unscoped default).
+on_default_target_change(thaw)
+
+
 def lookup_or_tune(kernel_id: str, *,
                    spec: Union[str, ChipSpec, None] = None,
                    mode: str = "static",
@@ -270,23 +564,49 @@ def lookup_or_tune(kernel_id: str, *,
     static_info construction, no cost-model evaluation.  On the default
     db/model path repeat calls are additionally memoized per process,
     skipping even key construction — warm dispatch is a single dict
-    probe.
+    probe (and after :func:`freeze`, a lock-free frozen-table probe
+    with no generation check at all).
     """
+    if db is None and model is None:
+        fz = _FROZEN
+        if fz is not None:
+            probe = fz.tables.get((kernel_id, mode))
+            if probe is not None:
+                try:
+                    hit = probe(signature, spec)
+                except TypeError:       # unhashable signature value
+                    hit = None
+                if hit is not None:
+                    return hit
     if not isinstance(spec, (TpuSpec, GpuSpec)):  # None or name: resolve once
         spec = resolve_target(spec)
-    memo_key = None
+    memo_key = shard = None
+    gen0 = 0
     if db is None:
         from repro.tuning_cache import _warm_pretuned_spec, get_default_db
         db = get_default_db()
         if spec.name not in db.warmed_targets:     # once per (db, target)
             _warm_pretuned_spec(db, spec)
         if model is None:       # default db + default model: memo engages
+            entry = _REGISTRY.get(kernel_id)
+            binder = _binder_of(entry) if entry is not None else None
             try:
-                memo_key = (kernel_id, mode, fingerprint_spec(spec),
-                            tuple(sorted(signature.items())))
-                hit = _DISPATCH_MEMO.get(memo_key)
-                if hit is not None and hit[0] == db.generation:
-                    return dict(hit[1])
+                if binder is not None:
+                    vals = binder.key(signature)
+                    if vals is not None:   # canonical: all spellings share it
+                        memo_key = (mode, fingerprint_spec(spec), vals)
+                elif entry is not None:    # not compilable: raw spelling
+                    memo_key = (mode, fingerprint_spec(spec),
+                                ("#raw", tuple(sorted(signature.items()))))
+                if memo_key is not None:
+                    shard = _shard(kernel_id)
+                    # generation read BEFORE the database consult: if a
+                    # bulk mutation lands in between, the entry we
+                    # insert is tagged stale and self-invalidates.
+                    gen0 = db.generation
+                    hit = shard.entries.get(memo_key)
+                    if hit is not None and hit[0] == gen0:
+                        return hit[1].copy()
             except TypeError:       # unhashable signature value
                 memo_key = None
     model = model or _model_for(spec)
@@ -306,11 +626,11 @@ def lookup_or_tune(kernel_id: str, *,
 
     params = dict(db.lookup_or_tune(key, tune).params)
     if memo_key is not None:
-        # snapshot as items so a caller mutating the returned dict can
-        # never poison later dispatches; tagged with the database
-        # generation so bulk db mutation invalidates the entry.  Insert
-        # under the module lock so it cannot interleave with a
-        # concurrent clear_dispatch_memo half-way through its sweep.
-        with _models_lock:
-            _DISPATCH_MEMO[memo_key] = (db.generation, tuple(params.items()))
+        # stored as a private dict (readers get .copy()) so a caller
+        # mutating the returned params can never poison later
+        # dispatches; tagged with the pre-consult generation so bulk db
+        # mutation invalidates the entry.  Insert under the shard lock
+        # so it cannot interleave with a concurrent clear's sweep.
+        with shard.lock:
+            shard.entries[memo_key] = (gen0, dict(params))
     return params

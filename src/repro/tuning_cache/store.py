@@ -165,6 +165,12 @@ class TuningDatabase:
         # clearing or re-warming the live default database invalidates
         # memoized answers instead of being silently shadowed.
         self.generation = 0
+        # Callbacks fired on every generation bump, under the database
+        # lock (so a bump and its notification are atomic with respect
+        # to readers of `generation`).  Hooks must therefore be cheap
+        # and lock-free — the frozen dispatch tier registers its thaw
+        # (a bare assignment) here.
+        self._invalidation_hooks: list = []
         # Target names whose shipped pretuned JSONL has been folded in
         # (`repro.tuning_cache.warm_pretuned`); per-instance so a fresh
         # default database re-warms.  Deliberately NOT reset by clear():
@@ -222,11 +228,25 @@ class TuningDatabase:
     def __len__(self) -> int:
         return len(self._lru)
 
+    def on_invalidate(self, hook: Callable[[], None]) -> Callable[[], None]:
+        """Register a callback fired (under the lock) whenever a bulk
+        mutation bumps ``generation``; duplicates are ignored."""
+        with self.lock:
+            if hook not in self._invalidation_hooks:
+                self._invalidation_hooks.append(hook)
+        return hook
+
+    def _bump_generation(self) -> None:
+        # callers hold self.lock
+        self.generation += 1
+        for hook in list(self._invalidation_hooks):
+            hook()
+
     def clear(self) -> None:
         with self.lock:
             self._lru.clear()
             self.stats = CacheStats()
-            self.generation += 1
+            self._bump_generation()
 
     # -- interchange --------------------------------------------------------
     def records(self) -> Iterator[TuningRecord]:
@@ -276,7 +296,7 @@ class TuningDatabase:
                     self.put(rec)
                     n += 1
             if n:
-                self.generation += 1
+                self._bump_generation()
         return n
 
     def warm_jsonl(self, path: str) -> int:

@@ -158,7 +158,7 @@ def test_gpu_and_tpu_targets_fully_isolated():
         tuning_cache.lookup_or_tune("matmul", **sig)
     with use_target("tpu-v5e"):
         tuning_cache.lookup_or_tune("matmul", **sig)
-    fps = {k[2] for k in registry_mod._DISPATCH_MEMO}
+    fps = {k[2] for k in registry_mod.dispatch_memo_keys()}
     assert fingerprint_spec(KEPLER_K20) in fps
     assert fingerprint_spec(TPU_V5E) in fps
 

@@ -207,7 +207,7 @@ def test_failure_log_is_thread_safe():
         try:
             for _ in range(200):
                 # unregistered kernel -> lookup fails -> logged failure
-                assert api._resolve(kid, m=1) == {}
+                assert api._resolve(kid, dict(m=1)) == {}
                 api.reset_dispatch_failure_log()
         except Exception as e:          # pragma: no cover - failure path
             errors.append(e)
@@ -343,7 +343,7 @@ def test_annotation_bridge_rejects_empty_spec():
 
 def test_stencil2d_cold_rank_pretuned_and_warm_memo():
     from repro.core import default_target
-    from repro.tuning_cache.registry import _DISPATCH_MEMO
+    from repro.tuning_cache.registry import dispatch_memo_keys
 
     # cold: full-space rank through the derived problem
     db = TuningDatabase()
@@ -368,7 +368,7 @@ def test_stencil2d_cold_rank_pretuned_and_warm_memo():
     p3 = tuning_cache.lookup_or_tune("stencil2d", **sig)
     assert p2 == p3 == params
     assert default.stats.tunes == 0          # shipped-db hit, no rank
-    assert any(k[0] == "stencil2d" for k in _DISPATCH_MEMO)
+    assert any(k[0] == "stencil2d" for k in dispatch_memo_keys())
 
 
 def test_stencil2d_numerics_and_boundary():

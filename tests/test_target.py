@@ -159,7 +159,7 @@ def test_two_targets_two_dispatch_memo_entries():
         tuning_cache.lookup_or_tune("matmul", **_SIG)
     with use_target("tpu-v5p"):
         tuning_cache.lookup_or_tune("matmul", **_SIG)
-    fps = {k[2] for k in registry_mod._DISPATCH_MEMO}
+    fps = {k[2] for k in registry_mod.dispatch_memo_keys()}
     assert fingerprint_spec(TPU_V5E) in fps
     assert fingerprint_spec(TPU_V5P) in fps
 

@@ -9,6 +9,10 @@ and interleave with `clear_dispatch_memo`.  These tests hammer the
 stack from many threads and assert the invariants the locks now
 guarantee: no exceptions, identical params across threads, and exactly
 one tune per cold key.
+
+ISSUE 6 adds the frozen-tier stress tests: freeze/thaw churning under
+dispatch load, bulk database mutation thawing racing frozen readers,
+and concurrent freeze() calls collapsing to one published table.
 """
 import threading
 
@@ -28,6 +32,7 @@ def _fresh_state():
     set_default_target(None)
     tuning_cache.set_default_db(TuningDatabase())
     yield
+    tuning_cache.thaw()
     set_default_target(None)
     tuning_cache.reset_default_db()
 
@@ -132,6 +137,102 @@ def test_clear_dispatch_memo_races_with_warm_dispatch():
             stop.set()
 
     _run_threads(4, lambda i: (clearer if i == 0 else dispatcher)(i))
+
+
+def test_freeze_races_with_warm_dispatch():
+    """One thread churning freeze/thaw while 8 threads dispatch: no
+    exceptions, every dispatch returns the stable params regardless of
+    which tier served it, and the final frozen table agrees with live."""
+    cases = [(kid, sig) for kid, sig, spec in _CASES if spec is None]
+    expected = [tuning_cache.lookup_or_tune(kid, **sig)
+                for kid, sig in cases]
+    stop = threading.Event()
+
+    def freezer(_):
+        while not stop.is_set():
+            tuning_cache.freeze()
+            tuning_cache.thaw()
+
+    def dispatcher(_):
+        try:
+            for _ in range(200):
+                for (kid, sig), want in zip(cases, expected):
+                    assert tuning_cache.lookup_or_tune(kid, **sig) == want
+        finally:
+            stop.set()
+
+    _run_threads(9, lambda i: (freezer if i == 0 else dispatcher)(i))
+    tuning_cache.freeze()
+    for (kid, sig), want in zip(cases, expected):
+        assert tuning_cache.frozen_lookup(kid, sig) == want
+    tuning_cache.thaw()
+
+
+def test_bulk_mutation_thaws_racing_frozen_readers(tmp_path):
+    """import_jsonl racing frozen readers: the stale table must thaw,
+    readers only ever observe the old or the new params (never torn
+    state), and post-import dispatch serves the imported answer."""
+    import json
+    import time
+
+    kid, sig = "stencil2d", dict(y=768, x=768, dtype="float32")
+    db = tuning_cache.get_default_db()
+    old = tuning_cache.lookup_or_tune(kid, **sig)
+    rec = next(r for r in db.snapshot()
+               if r.key.kernel_id == kid
+               and json.loads(r.key.signature).get("y") == sig["y"])
+    doctored = rec.to_dict()
+    new_by = 8 if old["by"] != 8 else 16
+    doctored["params"] = {"by": new_by}
+    path = tmp_path / "doctored.jsonl"
+    path.write_text(json.dumps(doctored) + "\n")
+
+    tuning_cache.freeze()
+    imported = threading.Event()
+    observed = [set() for _ in range(8)]
+
+    def importer(_):
+        assert db.import_jsonl(str(path)) == 1
+        imported.set()
+
+    def reader(i):
+        deadline = time.monotonic() + 60
+        while True:
+            p = tuning_cache.lookup_or_tune(kid, **sig)
+            observed[i - 1].add(p["by"])
+            if imported.is_set() and p["by"] == new_by:
+                return
+            assert time.monotonic() < deadline, \
+                "imported params never became visible"
+
+    _run_threads(9, lambda i: (importer if i == 0 else reader)(i))
+    assert not tuning_cache.is_frozen()        # the stale table thawed
+    assert tuning_cache.lookup_or_tune(kid, **sig) == {"by": new_by}
+    for seen in observed:
+        assert seen <= {old["by"], new_by}     # never a torn answer
+
+
+def test_concurrent_freeze_yields_one_table():
+    """8 threads barrier-calling freeze(): every call reports the same
+    entry count, exactly one frozen state is published, and it serves
+    correct params."""
+    cases = [(kid, sig) for kid, sig, spec in _CASES if spec is None]
+    expected = [tuning_cache.lookup_or_tune(kid, **sig)
+                for kid, sig in cases]
+    sizes = [None] * 8
+
+    def worker(i):
+        sizes[i] = tuning_cache.freeze()
+
+    _run_threads(8, worker)
+    assert len(set(sizes)) == 1 and sizes[0] > 0
+    assert tuning_cache.is_frozen()
+    state = registry_mod._FROZEN
+    assert tuning_cache.freeze() == sizes[0]   # idempotent re-freeze...
+    assert registry_mod._FROZEN is state       # ...reuses the same state
+    for (kid, sig), want in zip(cases, expected):
+        assert tuning_cache.frozen_lookup(kid, sig) == want
+    tuning_cache.thaw()
 
 
 def test_concurrent_export_while_dispatching(tmp_path):
