@@ -17,6 +17,54 @@ import jax.numpy as jnp
 import numpy as np
 
 
+def _warm_tuning_db(db, path: str, strict: bool = False):
+    """Warm ``db`` from a JSONL, reporting skipped corrupt lines.
+
+    Returns ``(loaded, corrupt)``.  ``strict`` turns any corruption —
+    an unreadable file or skipped lines — into a non-zero exit instead
+    of a degraded start (deployments that treat the tuning database as
+    an artifact with provenance want the loud failure)."""
+    corrupt0 = db.stats.corrupt
+    try:
+        n = db.warm_jsonl(path)
+    except OSError as e:
+        msg = f"could not warm tuning cache from {path}: {e}"
+        if strict:
+            raise SystemExit(f"[serve] --strict-db: {msg}")
+        print(f"[serve] WARNING: {msg}")
+        return 0, 0
+    corrupt = db.stats.corrupt - corrupt0
+    print(f"[serve] warmed tuning cache: +{n} records from {path}"
+          + (f" ({corrupt} corrupt lines skipped)" if corrupt else ""))
+    if corrupt and strict:
+        raise SystemExit(f"[serve] --strict-db: {corrupt} corrupt "
+                         f"line(s) skipped in {path}")
+    return n, corrupt
+
+
+def _connect_tuning_server(url: str):
+    """Point cold dispatches at a tuning service; never fatal — an
+    unreachable service means serving starts degraded on the local
+    tiers (pretuned records, then fallback params), with a banner."""
+    from repro import tuning_cache
+    try:
+        client = tuning_cache.configure_service(url)
+    except ValueError as e:
+        print(f"[serve] WARNING: bad --tuning-server {url!r} ({e}); "
+              f"serving DEGRADED on local tiers")
+        return None
+    health = client.health()
+    if health is None:
+        print(f"[serve] WARNING: tuning service {client.url} unreachable "
+              f"— serving DEGRADED on local tiers (pretuned records, "
+              f"then fallback params)")
+    else:
+        print(f"[serve] tuning service {client.url}: "
+              f"{health.get('records', '?')} records, "
+              f"generation {health.get('generation', '?')}")
+    return client
+
+
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", required=True)
@@ -30,6 +78,13 @@ def main():
                     help="JSONL tuning database to warm kernel dispatch "
                          "with before serving (on top of the packaged "
                          "pre-tuned records)")
+    ap.add_argument("--strict-db", action="store_true",
+                    help="exit non-zero if --tuning-db has corrupt "
+                         "lines (default: skip them, print the count)")
+    ap.add_argument("--tuning-server", default=None, metavar="URL",
+                    help="tuning service to consult for cold dispatches "
+                         "(http://host:port); unreachable -> serve "
+                         "degraded on the local tiers")
     args = ap.parse_args()
 
     from repro import tuning_cache
@@ -44,13 +99,9 @@ def main():
     # pre-tuned records; --tuning-db layers a deployment-specific one.
     db = tuning_cache.get_default_db()
     if args.tuning_db:
-        try:
-            n = db.warm_jsonl(args.tuning_db)
-            print(f"[serve] warmed tuning cache: +{n} records "
-                  f"from {args.tuning_db}")
-        except OSError as e:
-            print(f"[serve] WARNING: could not warm tuning cache "
-                  f"from {args.tuning_db}: {e}")
+        _warm_tuning_db(db, args.tuning_db, strict=args.strict_db)
+    if args.tuning_server:
+        _connect_tuning_server(args.tuning_server)
     print(f"[serve] tuning cache ready: {len(db)} records resident")
     # Freeze the warm records into the zero-overhead dispatch tables:
     # the serving hot loop then pays one lock-free probe per kernel

@@ -17,6 +17,12 @@ Wraps the train loop with the cluster-scale failure policy:
 On real multi-host TPU the detection side would key off
 ``jax.monitoring`` heartbeats per host; the policy surface here is the
 same.
+
+The when-to-fire arithmetic is shared with the tuning service's chaos
+layer: `FaultSchedule` lives in `repro.tuning_cache.service.faults`
+(re-exported here) and :func:`scheduled_fault` adapts it into an
+``inject_fault`` callback, so training-loop chaos tests and tuning
+chaos tests declare faults in one vocabulary.
 """
 from __future__ import annotations
 
@@ -25,8 +31,30 @@ import time
 from typing import Any, Callable, Dict, Optional
 
 from repro.checkpoint.manager import CheckpointManager
+from repro.tuning_cache.service.faults import FaultSchedule
 
-__all__ = ["FaultPolicy", "StragglerDetected", "TrainSupervisor"]
+__all__ = ["FaultPolicy", "FaultSchedule", "StragglerDetected",
+           "TrainSupervisor", "scheduled_fault"]
+
+
+def scheduled_fault(schedule: FaultSchedule,
+                    exc: Callable[[int], BaseException] = None
+                    ) -> Callable[[int], None]:
+    """Adapt a `FaultSchedule` into a `TrainSupervisor.inject_fault`
+    callback: raises on the scheduled hits of the per-run step counter
+    (``schedule.after`` counts *calls*, 1-based, not step numbers —
+    restarts re-visit steps but keep advancing the hit counter).
+    ``exc(step)`` builds the exception (default ``RuntimeError``)."""
+    state = {"hit": 0, "fired": 0}
+
+    def inject(step: int) -> None:
+        state["hit"] += 1
+        if schedule.fires_at(state["hit"], state["fired"]):
+            state["fired"] += 1
+            raise (exc(step) if exc is not None
+                   else RuntimeError(f"injected fault at step {step}"))
+
+    return inject
 
 
 class StragglerDetected(RuntimeError):

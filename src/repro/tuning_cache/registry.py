@@ -543,6 +543,34 @@ def frozen_lookup(kernel_id: str, signature: Dict[str, Any], *,
 on_default_target_change(thaw)
 
 
+def _service_resolve(key: CacheKey, kernel_id: str,
+                     signature: Dict[str, Any], spec: ChipSpec,
+                     mode: str) -> Optional[TuningRecord]:
+    """Consult the configured tuning service for one kernel instance.
+
+    Returns a `TuningRecord` under *our* locally-computed key, or
+    ``None`` on miss or degradation.  Never raises — the service tier
+    is optional by contract (`ServiceClient.resolve` already absorbs
+    every transport failure; this guard covers payload surprises)."""
+    from repro.tuning_cache import service_client
+    try:
+        client = service_client()
+        if client is None:
+            return None
+        payload = client.resolve(kernel_id, dict(signature),
+                                 target=spec.name,
+                                 fingerprint=fingerprint_spec(spec),
+                                 mode=mode)
+        if payload is None or payload.get("digest") != key.digest:
+            # A digest mismatch means the server ranked under a
+            # different model/key schema: its params answer some other
+            # question, not our key.  Treat as a miss.
+            return None
+        return TuningRecord.from_dict({**payload, "key": key.to_dict()})
+    except Exception:
+        return None
+
+
 def lookup_or_tune(kernel_id: str, *,
                    spec: Union[str, ChipSpec, None] = None,
                    mode: str = "static",
@@ -582,11 +610,16 @@ def lookup_or_tune(kernel_id: str, *,
         spec = resolve_target(spec)
     memo_key = shard = None
     gen0 = 0
+    use_service = False
     if db is None:
         from repro.tuning_cache import _warm_pretuned_spec, get_default_db
         db = get_default_db()
         if spec.name not in db.warmed_targets:     # once per (db, target)
             _warm_pretuned_spec(db, spec)
+        # Only the all-default path consults the tuning service: an
+        # explicit model would key a digest the server (which ranks
+        # under ITS default model) can never answer.
+        use_service = model is None
         if model is None:       # default db + default model: memo engages
             entry = _REGISTRY.get(kernel_id)
             binder = _binder_of(entry) if entry is not None else None
@@ -613,6 +646,22 @@ def lookup_or_tune(kernel_id: str, *,
     signature = normalize_signature(kernel_id, signature)
     key = make_key(kernel_id, spec=spec, mode=mode,
                    model_name=model.fingerprint(), **signature)
+
+    if use_service:
+        # Service tier (DESIGN.md §13): between the live memo and the
+        # local database.  A hit is written through to the local tiers
+        # so later dispatches (and other processes sharing the disk
+        # store) stay warm even if the service dies; any failure —
+        # unreachable, slow, corrupt — returns None and we fall
+        # through to the local tiers below.
+        rec = _service_resolve(key, kernel_id, signature, spec, mode)
+        if rec is not None:
+            db.put(rec)
+            params = dict(rec.params)
+            if memo_key is not None:
+                with shard.lock:
+                    shard.entries[memo_key] = (gen0, dict(params))
+            return params
 
     def tune() -> TuningRecord:
         # The problem's static_info builders resolve their own spec from

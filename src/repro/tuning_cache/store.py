@@ -21,15 +21,31 @@ from __future__ import annotations
 import collections
 import dataclasses
 import json
+import logging
 import math
 import os
 import threading
 import time
 from typing import Any, Callable, Dict, Iterator, List, Optional
 
+try:                          # advisory locking is POSIX-only; the
+    import fcntl              # store degrades to lock-free elsewhere
+except ImportError:           # pragma: no cover - non-POSIX
+    fcntl = None
+
 from repro.tuning_cache.keys import CacheKey
 
 __all__ = ["TuningRecord", "CacheStats", "DiskStore", "TuningDatabase"]
+
+_log = logging.getLogger(__name__)
+
+# Multi-process crash-safety knob: when set (to anything but "0"),
+# DiskStore fsyncs each record file before the rename, so a record that
+# survives a power loss is guaranteed whole, at ~1 disk flush per tune.
+# Tunes are rare by design (the whole point of the cache), so the
+# default stays off for dev speed and on only where a shared disk store
+# feeds a serving fleet (the tuning service turns it on).
+ENV_FSYNC = "REPRO_TUNING_CACHE_FSYNC"
 
 
 @dataclasses.dataclass
@@ -87,12 +103,46 @@ class CacheStats:
         return dataclasses.asdict(self)
 
 
+class _FileLock:
+    """Blocking advisory ``flock`` on a sidecar file (context manager).
+
+    Advisory on purpose: a reader that ignores it stays correct
+    (publishes are ``os.replace``-atomic), and a crashed holder releases
+    it for free when the kernel reaps the fd — no stale-lockfile
+    recovery dance."""
+
+    def __init__(self, path: str):
+        self.path = path
+        self._fd: Optional[int] = None
+
+    def __enter__(self) -> "_FileLock":
+        try:
+            self._fd = os.open(self.path, os.O_CREAT | os.O_RDWR, 0o644)
+            fcntl.flock(self._fd, fcntl.LOCK_EX)
+        except OSError:
+            # a lock we cannot take must not block a save (e.g. a
+            # read-only sidecar); fall back to lock-free best effort
+            if self._fd is not None:
+                os.close(self._fd)
+                self._fd = None
+        return self
+
+    def __exit__(self, *exc) -> None:
+        if self._fd is not None:
+            try:
+                fcntl.flock(self._fd, fcntl.LOCK_UN)
+            finally:
+                os.close(self._fd)
+                self._fd = None
+
+
 class DiskStore:
     """One-JSON-file-per-record backend with quarantine-on-corruption."""
 
     def __init__(self, root: str):
         self.root = os.path.abspath(os.path.expanduser(root))
         self.corrupt_seen = 0
+        self._io_error_logged = False
 
     def path_for(self, digest: str) -> str:
         return os.path.join(self.root, f"{digest}.json")
@@ -113,18 +163,58 @@ class DiskStore:
             except OSError:
                 pass
             return None
+        except OSError as e:
+            # I/O-level failure (EACCES, EIO, a directory squatting on
+            # the path, ...): the record may be fine, the *store* is
+            # sick.  Count it as corruption but do NOT quarantine — a
+            # transient error must not destroy a good record — and
+            # report a miss so a dispatch degrades instead of crashing.
+            self.corrupt_seen += 1
+            if not self._io_error_logged:
+                self._io_error_logged = True
+                _log.warning(
+                    "tuning disk store %s unreadable (%s: %s); treating "
+                    "as cache misses.  Further I/O errors for this store "
+                    "are silent.", self.root, type(e).__name__, e)
+            return None
 
     def save(self, record: TuningRecord) -> None:
         os.makedirs(self.root, exist_ok=True)
         path = self.path_for(record.key.digest)
-        tmp = path + ".tmp"
-        with open(tmp, "w", encoding="utf-8") as f:
-            # allow_nan=False: to_dict already mapped non-finite floats
-            # to null; anything that still sneaks through (e.g. a NaN
-            # inside extras) must fail loudly here, not emit a file no
-            # strict JSON parser can read back.
-            json.dump(record.to_dict(), f, sort_keys=True, allow_nan=False)
-        os.replace(tmp, path)
+        # pid-unique temp: two *processes* saving the same digest must
+        # not interleave writes into one temp file (each rename then
+        # publishes a whole record; last writer wins, both are valid)
+        tmp = f"{path}.{os.getpid()}.tmp"
+        with self._root_lock():
+            try:
+                with open(tmp, "w", encoding="utf-8") as f:
+                    # allow_nan=False: to_dict already mapped non-finite
+                    # floats to null; anything that still sneaks through
+                    # (e.g. a NaN inside extras) must fail loudly here,
+                    # not emit a file no strict JSON parser can read back.
+                    json.dump(record.to_dict(), f, sort_keys=True,
+                              allow_nan=False)
+                    if os.environ.get(ENV_FSYNC, "0") not in ("", "0"):
+                        f.flush()
+                        os.fsync(f.fileno())
+                os.replace(tmp, path)
+            finally:
+                try:
+                    os.unlink(tmp)          # only survives a failed write
+                except OSError:
+                    pass
+
+    def _root_lock(self):
+        """Advisory cross-process writer lock on ``root/.lock``.
+
+        Readers never take it (rename keeps loads atomic); it only
+        serializes concurrent *savers* so that multi-process tuning
+        against one shared store cannot race inside ``makedirs``/
+        cleanup.  Degrades to a no-op where ``fcntl`` is unavailable."""
+        if fcntl is None:                   # pragma: no cover - non-POSIX
+            import contextlib
+            return contextlib.nullcontext()
+        return _FileLock(os.path.join(self.root, ".lock"))
 
     def iter_records(self) -> Iterator[TuningRecord]:
         if not os.path.isdir(self.root):
@@ -248,6 +338,17 @@ class TuningDatabase:
             self.stats = CacheStats()
             self._bump_generation()
 
+    def invalidate(self) -> None:
+        """Declare the cached view of this database stale: bump
+        ``generation`` and fire the invalidation hooks, keeping the
+        resident records.  This is the entry point for *external* bulk
+        mutation — an operator rewrote the shared disk store, or a
+        service client saw the server's generation move — where the
+        records are still fine but every derived structure (frozen
+        tables, dispatch memos) must re-resolve."""
+        with self.lock:
+            self._bump_generation()
+
     # -- interchange --------------------------------------------------------
     def records(self) -> Iterator[TuningRecord]:
         """Everything resident: memory first, then disk-only records."""
@@ -269,11 +370,22 @@ class TuningDatabase:
     def export_jsonl(self, path: str) -> int:
         recs = self.snapshot()
         n = 0
-        with open(path, "w", encoding="utf-8") as f:
-            for rec in recs:
-                f.write(json.dumps(rec.to_dict(), sort_keys=True,
-                                   allow_nan=False) + "\n")
-                n += 1
+        # Crash-atomic: a previously good export must survive a crash
+        # (or an unserializable record) mid-write, so build the file
+        # aside and publish it with one rename.
+        tmp = f"{path}.{os.getpid()}.tmp"
+        try:
+            with open(tmp, "w", encoding="utf-8") as f:
+                for rec in recs:
+                    f.write(json.dumps(rec.to_dict(), sort_keys=True,
+                                       allow_nan=False) + "\n")
+                    n += 1
+            os.replace(tmp, path)
+        finally:
+            try:
+                os.unlink(tmp)              # only survives a failed write
+            except OSError:
+                pass
         return n
 
     def import_jsonl(self, path: str, source: Optional[str] = None) -> int:

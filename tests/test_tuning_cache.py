@@ -456,3 +456,103 @@ def test_pretuned_database_parses():
                 if not math.isfinite(rec.predicted_s):
                     assert payload["predicted_s"] is None
                     assert rec.key.spec_fingerprint.startswith("m2050@")
+
+
+# ---------------------------------------------------------------------------
+# disk quarantine path + crash-safety hardening (ISSUE 7 satellites)
+# ---------------------------------------------------------------------------
+
+
+def test_quarantine_delta_accounting_and_retune(tmp_path):
+    """The full quarantine lifecycle: corrupt file -> .json.corrupt +
+    corrupt_seen/_disk_corrupt_synced delta sync -> re-tune overwrites
+    and the next lookup hits clean."""
+    db = TuningDatabase(root=str(tmp_path / "db"))
+    key = _key()
+    db.put(_record(key))
+    path = db.disk.path_for(key.digest)
+    with open(path, "w") as f:
+        f.write("{half a rec")
+    db2 = TuningDatabase(root=str(tmp_path / "db"))
+    assert db2.lookup(key) is None
+    assert os.path.exists(path + ".corrupt")
+    assert not os.path.exists(path)                  # moved, not copied
+    # the store-level counter synced into CacheStats exactly once
+    assert db2.disk.corrupt_seen == 1
+    assert db2._disk_corrupt_synced == 1
+    assert db2.stats.corrupt == 1
+    # further misses must not re-count the old corruption
+    db2.lookup(_key(signature={"m": 999}))
+    assert db2.stats.corrupt == 1
+    # re-tune through the database API overwrites the quarantined slot
+    rec = db2.lookup_or_tune(key, lambda: _record(key, params={"bm": 256}))
+    assert rec.params == {"bm": 256}
+    assert db2.stats.tunes == 1
+    assert TuningDatabase(root=str(tmp_path / "db")).lookup(key) \
+        .params == {"bm": 256}
+    # the quarantine file stays behind for post-mortem
+    assert os.path.exists(path + ".corrupt")
+
+
+def test_disk_io_error_is_miss_not_crash(tmp_path, caplog):
+    """A non-FileNotFoundError OSError out of DiskStore.load (here: a
+    directory squatting on the record path) must degrade to a miss —
+    counted as corruption, NOT quarantined — and warn exactly once."""
+    import logging
+    db = TuningDatabase(root=str(tmp_path / "db"))
+    key = _key()
+    path = db.disk.path_for(key.digest)
+    os.makedirs(path)                       # open() -> IsADirectoryError
+    with caplog.at_level(logging.WARNING, logger="repro.tuning_cache.store"):
+        assert db.lookup(key) is None       # miss, no crash
+        assert db.lookup(key) is None       # still a miss
+    assert db.stats.corrupt == 2            # every failed read counts
+    assert os.path.isdir(path)              # NOT quarantined away
+    assert not os.path.exists(path + ".corrupt")
+    warnings = [r for r in caplog.records if r.levelno >= logging.WARNING]
+    assert len(warnings) == 1               # warn once per store
+    assert "unreadable" in warnings[0].getMessage()
+
+
+def test_export_jsonl_is_crash_atomic(tmp_path):
+    """A failed export (here: a record whose extras cannot serialize
+    under allow_nan=False) must leave a previous good export intact."""
+    db = TuningDatabase()
+    db.put(_record(_key()))
+    out = str(tmp_path / "db.jsonl")
+    assert db.export_jsonl(out) == 1
+    good = open(out).read()
+    db.put(TuningRecord(key=_key(signature={"m": 512}), params={"bm": 8},
+                        extras={"poison": math.nan},
+                        created_unix=now_unix()))
+    with pytest.raises(ValueError):
+        db.export_jsonl(out)
+    assert open(out).read() == good         # old export survived
+    assert not [f for f in os.listdir(tmp_path) if f.endswith(".tmp")]
+
+
+def test_save_with_fsync_and_lock(tmp_path, monkeypatch):
+    """The multi-process safety knobs: fsync-before-rename on, advisory
+    .lock sidecar taken around save — same observable contents."""
+    from repro.tuning_cache.store import ENV_FSYNC
+    monkeypatch.setenv(ENV_FSYNC, "1")
+    db = TuningDatabase(root=str(tmp_path / "db"))
+    key = _key()
+    db.put(_record(key))
+    assert os.path.exists(os.path.join(db.disk.root, ".lock"))
+    assert TuningDatabase(root=db.disk.root).lookup(key) is not None
+    # pid-unique temp names never linger
+    assert not [f for f in os.listdir(db.disk.root) if ".tmp" in f]
+
+
+def test_invalidate_bumps_generation_and_fires_hooks():
+    db = TuningDatabase()
+    key = _key()
+    db.put(_record(key))
+    fired = []
+    db.on_invalidate(lambda: fired.append(db.generation))
+    gen0 = db.generation
+    db.invalidate()
+    assert db.generation == gen0 + 1
+    assert fired == [gen0 + 1]
+    assert db.lookup(key) is not None       # records kept, view dropped
