@@ -17,11 +17,20 @@ Both cold paths must pick the identical winner (asserted).  Results go
 to ``BENCH_cold_rank.json``.  ``--smoke`` (CI) trims cases/repeats but
 still exercises every stage and enforces the acceptance thresholds on
 the matmul case: array >= 10x scalar, warm <= 5 us.
+
+A **mega-space** section (always run, DESIGN.md §14) streams the
+4.2-million-point constrained mega_matmul space through
+`rank_space`'s chunked running-argmin and asserts the scaling story:
+single-digit-second wall clock, peak extra RSS bounded by O(chunk) —
+far under the ~1 GB an eager materialization of the lattice plus
+feature matrices would commit — and a winner invariant across chunk
+sizes and thread-parallel scoring.
 """
 from __future__ import annotations
 
 import argparse
 import json
+import resource
 import statistics
 import time
 
@@ -83,6 +92,56 @@ def bench_cold(kernel_id, sig, repeats):
     }
 
 
+MEGA_WALL_BUDGET_S = 9.0          # "single-digit seconds"
+MEGA_RSS_BUDGET_MB = 400.0        # O(chunk), not the ~1 GB eager bill
+
+
+def bench_mega(smoke):
+    """Stream the >=10^6-point constrained mega space; assert bounds."""
+    from repro.kernels.megamatmul import mega_matmul_spec
+    sig = dict(m=6144, n=6144, k=6144, dtype="float32")
+    problem = mega_matmul_spec().problem(**sig)
+    model = default_tpu_model(mode="max")
+    assert problem.space.size >= 10**6, problem.space.size
+
+    rss0 = resource.getrusage(resource.RUSAGE_SELF).ru_maxrss  # KiB (Linux)
+    t0 = time.perf_counter()
+    params, t_best, scored = rank_space(problem, model)
+    wall = time.perf_counter() - t0
+    rss1 = resource.getrusage(resource.RUSAGE_SELF).ru_maxrss
+    rss_delta_mb = max(0.0, (rss1 - rss0) / 1024.0)
+
+    # winner must be invariant to chunking granularity and to
+    # thread-parallel chunk scoring (bit-identical reduction)
+    assert rank_space(problem, model,
+                      chunk_size=50021) == (params, t_best, scored)
+    t0 = time.perf_counter()
+    par = rank_space(problem, model, workers=4)
+    wall_workers = time.perf_counter() - t0
+    assert par == (params, t_best, scored)
+
+    row = {
+        "kernel": "mega_matmul", "signature": sig,
+        "space_size": problem.space.size,
+        "feasible_scored": scored,
+        "stream_rank_s": wall,
+        "stream_rank_workers4_s": wall_workers,
+        "peak_extra_rss_mb": rss_delta_mb,
+        "best_params": params,
+        "best_predicted_s": t_best,
+    }
+    print(f"mega_matmul      {row['space_size']:>8} lattice "
+          f"({scored} feasible) streamed in {wall:.2f} s "
+          f"(workers=4: {wall_workers:.2f} s), "
+          f"peak extra RSS {rss_delta_mb:.0f} MB")
+    assert wall <= MEGA_WALL_BUDGET_S, \
+        f"mega rank took {wall:.2f}s (budget {MEGA_WALL_BUDGET_S}s)"
+    assert rss_delta_mb <= MEGA_RSS_BUDGET_MB, \
+        f"mega rank peak extra RSS {rss_delta_mb:.0f} MB " \
+        f"(budget {MEGA_RSS_BUDGET_MB} MB)"
+    return row
+
+
 def bench_warm(kernel_id, sig, reps):
     tuning_cache.lookup_or_tune(kernel_id, **sig)     # prime db + memo
     return _median(lambda: tuning_cache.lookup_or_tune(kernel_id, **sig),
@@ -117,9 +176,11 @@ def main(argv=None):
               f"{row['speedup']:>7.1f}x "
               f"{row['warm_dispatch_s']*1e6:>11.2f} us")
 
+    mega = bench_mega(args.smoke)
+
     with open(args.out, "w", encoding="utf-8") as f:
-        json.dump({"smoke": args.smoke, "results": results}, f, indent=2,
-                  sort_keys=True, default=str)
+        json.dump({"smoke": args.smoke, "results": results, "mega": mega},
+                  f, indent=2, sort_keys=True, default=str)
     print(f"wrote {args.out}")
 
     if args.smoke:
@@ -128,7 +189,8 @@ def main(argv=None):
             f"array path only {mm['speedup']:.1f}x over scalar (need >=10x)"
         assert mm["warm_dispatch_s"] <= 5e-6, \
             f"warm dispatch {mm['warm_dispatch_s']*1e6:.2f} us (need <=5 us)"
-        print("smoke thresholds OK (>=10x cold speedup, <=5 us warm)")
+        print("smoke thresholds OK (>=10x cold speedup, <=5 us warm, "
+              "mega-space wall/RSS bounds)")
     return 0
 
 

@@ -31,7 +31,8 @@ from repro.core.predict import (CostModel, default_tpu_model,
                                 cuda_eq6_time, calibrate, spearman,
                                 rank_candidates, features_matrix,
                                 static_times_batch)
-from repro.core.search import (SearchSpace, SearchResult, ExhaustiveSearch,
+from repro.core.search import (SearchSpace, SearchResult, ConfigLattice,
+                               Constraint, DEFAULT_CHUNK, ExhaustiveSearch,
                                RandomSearch, SimulatedAnnealing,
                                GeneticSearch, NelderMeadSearch,
                                StaticPrunedSearch)

@@ -231,6 +231,19 @@ class KernelTuner:
                                       feasible=b.feasible)
         return static_times_batch([self._info(p) for p in pts], self.model)
 
+    def static_cost_cols(self, cols: Dict[str, np.ndarray]) -> np.ndarray:
+        """Columns-based scorer for the streaming shortlist: score one
+        `SearchSpace.iter_lattice` chunk without building params dicts.
+        Only available when the kernel has a struct-of-arrays builder."""
+        if self.kernel.static_info_batch is None:
+            raise TypeError(
+                f"kernel {self.kernel.name!r} has no static_info_batch; "
+                "the streaming shortlist needs a columns analyzer")
+        with use_target(self.spec):
+            b = self.kernel.static_info_batch(cols)
+        return static_times_batch(None, self.model, F=b.F, pipe=b.pipe,
+                                  feasible=b.feasible)
+
     def _mid_params(self) -> Params:
         return {k: v[len(v) // 2]
                 for k, v in self.kernel.space.axes.items()}
@@ -332,11 +345,14 @@ class KernelTuner:
         measured_for_corr: List[float] = []
         predicted_for_corr: List[float] = []
 
+        cols_scorer = (self.static_cost_cols
+                       if self.kernel.static_info_batch is not None else None)
         if mode == "static":
             pruner = StaticPrunedSearch(self.static_cost,
                                         keep_frac=self.keep_frac,
                                         rule=rule, seed=self.seed,
-                                        static_cost_batch=self.static_cost_batch)
+                                        static_cost_batch=self.static_cost_batch,
+                                        static_cost_cols=cols_scorer)
             res = pruner.minimize(objective, space, empirical_budget=0)
             static_time = time.perf_counter() - t0
             best_pred = res.best_value
@@ -345,7 +361,8 @@ class KernelTuner:
             pruner = StaticPrunedSearch(self.static_cost,
                                         keep_frac=self.keep_frac,
                                         rule=rule, seed=self.seed,
-                                        static_cost_batch=self.static_cost_batch)
+                                        static_cost_batch=self.static_cost_batch,
+                                        static_cost_cols=cols_scorer)
             short = pruner.shortlist(space)
             static_time = time.perf_counter() - t0
             cap = empirical_budget or len(short)

@@ -258,6 +258,8 @@ TPU_TABLE: Dict[str, TpuSpec] = {
     "tpu-v6e": TPU_V6E, "v6e": TPU_V6E,
 }
 
+_default_target = None   # repro.core.target.default_target, bound on use
+
 
 def resolve_target(target: Optional[Union[str, "ChipSpec"]] = None
                    ) -> "ChipSpec":
@@ -273,8 +275,14 @@ def resolve_target(target: Optional[Union[str, "ChipSpec"]] = None
     either form.
     """
     if target is None:
-        from repro.core.target import default_target
-        return default_target()
+        # lazily bound: hw <- target is the import direction, and this
+        # runs on every spec=None warm dispatch — a per-call
+        # `from ... import` costs an importlib round trip each time
+        global _default_target
+        if _default_target is None:
+            from repro.core.target import default_target
+            _default_target = default_target
+        return _default_target()
     if isinstance(target, (TpuSpec, GpuSpec)):
         return target
     name = str(target).strip().lower().replace("_", "-").replace(" ", "-")

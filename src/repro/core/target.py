@@ -54,6 +54,16 @@ _detected: Optional[tuple] = None
 # (raw env value, resolved spec) — default_target runs on every warm
 # dispatch, so the env string is parsed once, not per call.
 _env_cache: Optional[tuple] = None
+# Warm dispatch also pays the env *probe* itself on every call, and
+# `os.environ.get` re-encodes the key and walks the Mapping machinery
+# each time.  On posix, os.environ keeps a plain bytes-keyed dict in
+# `_data` that `os.environ[...] = ...` (and monkeypatch.setenv) mutates
+# in place — so probing it directly stays live while costing one dict
+# get.  Falls back to os.environ.get where the internals differ.
+try:
+    _env_fast: Optional[tuple] = (os.environ._data, os.fsencode(ENV_TARGET))
+except Exception:                                  # non-posix layout
+    _env_fast = None
 # Callbacks run by set_default_target: layers that specialized state on
 # the process default (e.g. the frozen dispatch tables in
 # repro.tuning_cache.registry) register here to invalidate it when the
@@ -104,12 +114,15 @@ def unscoped_default() -> ChipSpec:
     spec = _explicit
     if spec is not None:
         return spec
-    env = os.environ.get(ENV_TARGET)
+    if _env_fast is not None:
+        env: Any = _env_fast[0].get(_env_fast[1])
+    else:
+        env = os.environ.get(ENV_TARGET)
     if env:
         global _env_cache
         cache = _env_cache
         if cache is None or cache[0] != env:
-            cache = _env_cache = (env, resolve_target(env))
+            cache = _env_cache = (env, resolve_target(os.fsdecode(env)))
         return cache[1]
     detected = detect_target()
     if detected is not None:

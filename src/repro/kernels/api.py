@@ -57,7 +57,7 @@ from repro.tuning_cache.binder import SigBinder, compile_binder, schema_of
 from repro.core.annotations import parse_tuning_spec
 from repro.core.autotuner import KernelStaticInfo, TunableKernel
 from repro.core.hw import GpuSpec
-from repro.core.search import Params, SearchSpace
+from repro.core.search import Constraint, Params, SearchSpace
 from repro.core.target import default_target
 from repro.kernels.common import (BatchStaticInfo, block_info,
                                   block_info_batch, cuda_info,
@@ -322,6 +322,15 @@ class KernelSpec:
     reference: Optional[Callable[..., Any]] = None
     pretune: Tuple[Dict[str, Any], ...] = ()
     cuda: Optional[CudaProfile] = None
+    # Feasibility constraints over the declared axes: a sequence of
+    # `repro.core.search.Constraint` (or bare columns->mask callables),
+    # or a single ``(**signature) -> sequence`` factory for constraints
+    # that close over signature dims (e.g. "bm must divide m").  They
+    # restrict the *TPU block space*; the CUDA threads space is its own
+    # lattice and ignores them.
+    constraints: Any = None
+    # preferred rank_space streaming chunk (None: DEFAULT_CHUNK)
+    chunk_size: Optional[int] = None
 
     def __post_init__(self):
         if not self.kernel_id or not isinstance(self.kernel_id, str):
@@ -385,10 +394,20 @@ class KernelSpec:
         return block_info_batch(**self.analysis(cols, **sig))
 
     # -- derived artifacts ---------------------------------------------------
+    def _materialize_constraints(self,
+                                 sig: Dict[str, Any]) -> Tuple[Any, ...]:
+        cons = self.constraints
+        if cons is None:
+            return ()
+        if callable(cons) and not isinstance(cons, Constraint):
+            cons = cons(**sig)
+        return tuple(cons or ())
+
     def search_space(self, **signature) -> SearchSpace:
         sig = self.normalize(signature)
         return SearchSpace({name: axis.materialize(sig)
-                            for name, axis in self.space.items()})
+                            for name, axis in self.space.items()},
+                           constraints=self._materialize_constraints(sig))
 
     def fallback_params(self, **signature) -> Dict[str, Any]:
         """Launch params used when database dispatch is unavailable.
@@ -456,7 +475,8 @@ class KernelSpec:
         return tuning_cache.TuningProblem(
             space=self.search_space(**sig),
             static_info=lambda p: self.static_info(p, **sig),
-            static_info_batch=lambda c: self.static_info_batch(c, **sig))
+            static_info_batch=lambda c: self.static_info_batch(c, **sig),
+            chunk_size=self.chunk_size)
 
     def _cuda_problem(self, gpu: GpuSpec,
                       sig: Dict[str, Any]) -> "tuning_cache.TuningProblem":
@@ -600,7 +620,9 @@ def tuned_kernel(kernel_id: str, *,
                  make_inputs: Optional[Callable[..., tuple]] = None,
                  reference: Optional[Callable[..., Any]] = None,
                  pretune: Sequence[Mapping[str, Any]] = (),
-                 cuda: Optional[CudaProfile] = None):
+                 cuda: Optional[CudaProfile] = None,
+                 constraints: Any = None,
+                 chunk_size: Optional[int] = None):
     """Declare a Pallas kernel as a first-class tuning citizen.
 
     Decorating ``<name>_pallas`` registers a :class:`KernelSpec` under
@@ -615,7 +637,8 @@ def tuned_kernel(kernel_id: str, *,
                           extract_signature=signature, analysis=static_info,
                           fallback=fallback, make_inputs=make_inputs,
                           reference=reference, pretune=tuple(pretune),
-                          cuda=cuda)
+                          cuda=cuda, constraints=constraints,
+                          chunk_size=chunk_size)
         register_spec(spec)
         try:
             fn.spec = spec

@@ -106,12 +106,16 @@ def block_info(*,
                grid_steps: int = 1,
                scratch_bytes: int = 0,
                mix_scale: float | None = None,
+               ctrl_ops: float | None = None,
                spec: TpuSpec | None = None) -> KernelStaticInfo:
     """Analytic KernelStaticInfo from block shapes + per-step op counts.
 
     ``mix_scale`` defaults to ``grid_steps`` (total work = per-step work
-    times the number of grid steps).  ``spec=None`` analyzes for the
-    process-default target (`repro.core.target.default_target`).
+    times the number of grid steps).  ``ctrl_ops`` overrides the
+    control-op count (default: one per grid step) — kernels with an
+    unroll axis amortize loop control across unrolled iterations.
+    ``spec=None`` analyzes for the process-default target
+    (`repro.core.target.default_target`).
     """
     in_bytes = [int(np.prod(b)) * dtype_bytes(d)
                 for b, d in zip(in_blocks, in_dtypes)]
@@ -131,7 +135,7 @@ def block_info(*,
         hbm_bytes=per_step_bytes * scale,
         vmem_bytes=per_step_bytes * scale,
         mem_ops=(per_step_bytes / 4.0) * scale,
-        ctrl_ops=float(grid_steps),
+        ctrl_ops=float(grid_steps if ctrl_ops is None else ctrl_ops),
         reg_ops=0.0,
     )
     return KernelStaticInfo(mix=mix, occupancy=occ)
@@ -177,6 +181,7 @@ def block_info_batch(*,
                      grid_steps=1,
                      scratch_bytes=0,
                      mix_scale=None,
+                     ctrl_ops=None,
                      spec: TpuSpec | None = None) -> BatchStaticInfo:
     """Vectorized `block_info`: one (N, 7) feature matrix + occupancy
     arrays for a whole config lattice in a single NumPy pass.
@@ -214,7 +219,8 @@ def block_info_batch(*,
         col(np.asarray(trans_per_step, dtype=np.float64) * scale),
         col(per_step_bytes * scale),
         col(per_step_bytes * scale),
-        col(np.asarray(grid_steps, dtype=np.float64)),
+        col(np.asarray(grid_steps if ctrl_ops is None else ctrl_ops,
+                       dtype=np.float64)),
         col(0.0),
     ])
     return BatchStaticInfo(F=F, occupancy=occ)

@@ -1,0 +1,197 @@
+"""Mega-space matmul: a multi-axis, constrained tuning space (§III-C at
+tuner-literature scale).
+
+The paper demonstrates static ranking on ~10²–10³-point spaces; the
+kernel-tuner benchmarking literature (Tørring et al., Schoonhoven et
+al. — see PAPERS.md) evaluates on *constrained* spaces of 10⁵–10⁷
+points.  This module declares that shape of problem for the blocked
+matmul: block shapes × unroll factor × grid dimension order × variant
+× accumulator dtype — a ~4.2-million-point lattice of which only the
+constraint-feasible slice (tiles divide the problem, unroll divides the
+K block, working set fits VMEM) is ever analyzed, thanks to constraint
+pushdown in `SearchSpace.iter_lattice`.
+
+The extra axes beyond (bm, bn, bk) are **analysis-only codegen knobs**
+in this reproduction: they model choices the Mosaic compiler makes
+(loop unrolling amortizing control overhead, grid-dimension order
+deciding whether the accumulator tile stays resident or is re-streamed,
+split-K partials, accumulator precision), so the static analyzer
+distinguishes them while the executable path maps every config onto the
+blocked `matmul_pallas` body with the chosen tiling.  That keeps the
+ranking problem real (the axes genuinely move the predicted time and
+feasibility) without inventing kernel bodies the paper never measured.
+
+The spec is built by a **factory** rather than module-level
+`@tuned_kernel` so importing `repro.kernels` does not grow the
+registry (the mega space would make every exhaustive registry sweep in
+tests and tooling intractable).  Call ``mega_matmul_spec()`` and, if
+dispatch through `lookup_or_tune` is wanted, pass ``register=True``.
+"""
+from __future__ import annotations
+
+from typing import Optional, Sequence
+
+import numpy as np
+
+from repro.core.hw import dtype_bytes
+from repro.kernels.api import KernelSpec, register_spec
+from repro.kernels.common import cdiv, pick_divisor_candidates
+from repro.kernels.matmul import matmul_pallas
+from repro.kernels.ref import matmul_ref
+
+__all__ = ["mega_matmul_spec", "MEGA_BLOCKS", "MEGA_UNROLLS",
+           "MEGA_ORDERS", "MEGA_VARIANTS", "MEGA_ACCS"]
+
+# 28 block candidates: the 19 divisors of 6144 (= 2^11 * 3) from 8 up —
+# so a 6144³ problem keeps a rich feasible slice — interleaved with 9
+# non-divisors that the divisibility constraints prune, the way real
+# tuner spaces carry far more lattice points than legal configs.
+MEGA_BLOCKS = (8, 12, 16, 20, 24, 32, 40, 48, 56, 64, 80, 96, 112, 128,
+               160, 192, 224, 256, 288, 352, 384, 512, 768, 1024, 1536,
+               2048, 3072, 6144)
+MEGA_UNROLLS = (1, 2, 3, 4, 6, 8, 12, 16)
+MEGA_ORDERS = ("mnk", "mkn", "nmk", "nkm", "kmn", "knm")
+MEGA_VARIANTS = ("blocked", "split_k")
+MEGA_ACCS = ("f32", "bf16")
+
+# Working-set ceiling for the pushdown constraint: operand tiles +
+# double-buffered accumulator must fit a v5e-class VMEM (the occupancy
+# model re-checks the exact per-target budget; this cruder static cut
+# exists so the giant-tile corner of the lattice never reaches feature
+# construction at all).
+_VMEM_BUDGET_BYTES = 64 * 1024 * 1024
+
+
+def _mega_analysis(p, *, m: int, n: int, k: int, dtype: str = "float32"):
+    """Static analysis of one config (scalars) or a lattice ((N,) cols).
+
+    Axis semantics (all array-agnostic — `np.where` on value columns):
+
+    * ``unroll`` — K-loop unroll factor; amortizes loop control, so
+      control ops drop from one per grid step to ``steps / unroll``.
+    * ``order`` — grid dimension order.  K-innermost orders ("mnk",
+      "nmk") keep the f32 accumulator resident in VMEM; K-outer orders
+      re-stream the partial output tile every step (a second scratch
+      buffer plus a VPU accumulate pass per element).
+    * ``variant`` — "split_k" buffers per-split partials and reduces
+      them on the VPU; "blocked" is the plain sequential-K kernel.
+    * ``acc`` — accumulator dtype: "bf16" halves the scratch bytes but
+      pays a VPU round trip per element per step.
+    """
+    bm = np.minimum(np.asarray(p["bm"], dtype=np.int64), m)
+    bn = np.minimum(np.asarray(p["bn"], dtype=np.int64), n)
+    bk = np.minimum(np.asarray(p["bk"], dtype=np.int64), k)
+    unroll = np.asarray(p["unroll"], dtype=np.int64)
+    order = np.asarray(p["order"])
+    variant = np.asarray(p["variant"])
+    acc = np.asarray(p["acc"])
+    steps = cdiv(m, bm) * cdiv(n, bn) * cdiv(k, bk)
+
+    k_inner = np.isin(order, ("mnk", "nmk"))
+    acc_bytes = np.where(acc == "f32", 4, 2).astype(np.int64)
+    scratch = bm * bn * acc_bytes
+    scratch = np.where(k_inner, scratch, 2 * scratch)
+    vpu = np.where(k_inner, 0.0, 1.0) * bm * bn
+    vpu = vpu + np.where(acc == "f32", 0.0, 1.0) * bm * bn
+    split = variant == "split_k"
+    vpu = vpu + np.where(split, 1.0, 0.0) * bm * bn
+    scratch = scratch + np.where(split, bm * bn, 0) * acc_bytes
+
+    return dict(
+        in_blocks=[(bm, bk), (bk, bn)],
+        out_blocks=[(bm, bn)],
+        in_dtypes=[dtype, dtype],
+        out_dtypes=[dtype],
+        flops_per_step=2.0 * bm * bn * bk,
+        vpu_per_step=vpu,
+        grid_steps=steps,
+        scratch_bytes=scratch,
+        ctrl_ops=steps / np.maximum(unroll, 1),
+    )
+
+
+def _mega_constraints(*, m: int, n: int, k: int, dtype: str = "float32"):
+    """Vectorized feasibility predicates over the axis columns, closed
+    over the signature dims (the `constraints=` callable form)."""
+    esize = dtype_bytes(dtype)
+
+    def tiles_divide(cols):
+        return ((m % cols["bm"] == 0) & (n % cols["bn"] == 0)
+                & (k % cols["bk"] == 0))
+
+    def unroll_divides_bk(cols):
+        return cols["bk"] % cols["unroll"] == 0
+
+    def fits_vmem_budget(cols):
+        bm = np.asarray(cols["bm"], dtype=np.int64)
+        bn = np.asarray(cols["bn"], dtype=np.int64)
+        bk = np.asarray(cols["bk"], dtype=np.int64)
+        operands = (bm * bk + bk * bn) * esize
+        scratch = 2 * bm * bn * 4          # double-buffered f32 acc
+        return operands + scratch <= _VMEM_BUDGET_BYTES
+
+    return (tiles_divide, unroll_divides_bk, fits_vmem_budget)
+
+
+def _mega_fallback(*, m: int, n: int, k: int, dtype: str = "float32"):
+    """Safe dispatch fallback: modest dividing tiles, neutral knobs."""
+    safe = tuple(c for c in MEGA_BLOCKS if c <= 256)
+    return dict(bm=max(pick_divisor_candidates(m, safe)),
+                bn=max(pick_divisor_candidates(n, safe)),
+                bk=max(pick_divisor_candidates(k, safe)),
+                unroll=1, order="mnk", variant="blocked", acc="f32")
+
+
+def _mega_inputs(key, *, m: int, n: int, k: int, dtype: str = "float32"):
+    import jax
+    ka, kb = jax.random.split(key)
+    dt = np.dtype(dtype)
+    return (jax.random.normal(ka, (m, k), dt),
+            jax.random.normal(kb, (k, n), dt))
+
+
+def mega_matmul(a, b, *, bm: int = 256, bn: int = 256, bk: int = 256,
+                unroll: int = 1, order: str = "mnk",
+                variant: str = "blocked", acc: str = "f32",
+                interpret: Optional[bool] = None):
+    """Executable entry point for the mega space: the analysis-only
+    knobs select among codegen strategies the static model scores, and
+    the body runs the blocked kernel with the chosen tiling."""
+    del unroll, order, variant, acc
+    return matmul_pallas(a, b, bm=bm, bn=bn, bk=bk, interpret=interpret)
+
+
+def mega_matmul_spec(*, blocks: Sequence[int] = MEGA_BLOCKS,
+                     unrolls: Sequence[int] = MEGA_UNROLLS,
+                     orders: Sequence[str] = MEGA_ORDERS,
+                     variants: Sequence[str] = MEGA_VARIANTS,
+                     accs: Sequence[str] = MEGA_ACCS,
+                     chunk_size: Optional[int] = None,
+                     register: bool = False) -> KernelSpec:
+    """Build the mega-space matmul `KernelSpec`.
+
+    With the default candidate lists the lattice is
+    ``28³ · 8 · 6 · 2 · 2 = 4,214,784`` points; tests shrink the lists
+    to exercise the same constrained multi-axis shape at parity-test
+    size.  ``register=True`` additionally registers the spec for
+    `lookup_or_tune` dispatch (callers own the `unregister`).
+    """
+    spec = KernelSpec(
+        kernel_id="mega_matmul",
+        fn=mega_matmul,
+        space={"bm": tuple(blocks), "bn": tuple(blocks),
+               "bk": tuple(blocks), "unroll": tuple(unrolls),
+               "order": tuple(orders), "variant": tuple(variants),
+               "acc": tuple(accs)},
+        extract_signature=lambda a, b, **_: dict(
+            m=a.shape[0], n=b.shape[1], k=a.shape[1], dtype=str(a.dtype)),
+        analysis=_mega_analysis,
+        fallback=_mega_fallback,
+        make_inputs=_mega_inputs,
+        reference=matmul_ref,
+        constraints=_mega_constraints,
+        chunk_size=chunk_size,
+    )
+    if register:
+        register_spec(spec)
+    return spec

@@ -45,6 +45,7 @@ from __future__ import annotations
 import dataclasses
 import inspect
 import json
+import math
 import threading
 from typing import Any, Callable, Dict, List, Optional, Tuple, Union
 
@@ -56,7 +57,7 @@ from repro.core.predict import CostModel, default_cuda_model, \
     default_tpu_model, static_times_batch
 from repro.core.target import (on_default_target_change, unscoped_default,
                                use_target)
-from repro.core.search import Params, SearchSpace
+from repro.core.search import DEFAULT_CHUNK, Params, SearchSpace
 from repro.tuning_cache.binder import (SigBinder, compile_binder,
                                        compile_probe, schema_of)
 from repro.tuning_cache.keys import (CacheKey, MODEL_VERSION,
@@ -84,6 +85,9 @@ class TuningProblem:
     space: SearchSpace
     static_info: Callable[[Params], Any]    # -> KernelStaticInfo-like
     static_info_batch: Optional[Callable[[Dict[str, np.ndarray]], Any]] = None
+    # preferred streaming chunk for rank_space (None: DEFAULT_CHUNK) —
+    # declarations with very wide rows can lower it to cap peak memory
+    chunk_size: Optional[int] = None
 
 
 class _FactoryEntry:
@@ -201,29 +205,98 @@ def normalize_signature(kernel_id: str,
     return _entry(kernel_id).normalize(signature)
 
 
-def rank_space(problem: TuningProblem, model: CostModel
+def rank_space(problem: TuningProblem, model: CostModel, *,
+               chunk_size: Optional[int] = None,
+               workers: Optional[int] = None
                ) -> Tuple[Params, float, int]:
-    """Argmin of the static model over the whole space, batched.
+    """Argmin of the static model over the whole space, streamed.
 
-    With a struct-of-arrays builder the entire cold rank is array math:
-    lattice enumeration, feature/occupancy construction, and scoring
-    all happen over (N,)-arrays, and only the single winning config is
-    materialized as a params dict.  Both paths enumerate in the same
-    order, so ties resolve to the identical argmin.
+    With a struct-of-arrays builder the cold rank is a running-argmin
+    reduction over `SearchSpace.iter_lattice` chunks: each chunk decodes
+    at most ``chunk_size`` lattice rows, drops constraint-infeasible
+    rows *before* feature construction, scores the survivors with the
+    vectorized model, and contributes one ``(time, flat index, params)``
+    candidate.  Peak memory is O(chunk_size), never O(space), and the
+    reduction merges candidates by ``(time, flat index)`` — exactly the
+    tie-break `np.argmin` applies over the materialized lattice — so
+    the winner is bit-identical to the eager path for any chunk size
+    and any ``workers`` count.
+
+    ``workers > 1`` scores chunks on a bounded thread pool (at most
+    ``2*workers`` chunks in flight, preserving the memory bound); each
+    task runs under a copy of the submitting thread's context so
+    `use_target` scoping survives the hop.
+
+    Returns ``(params, predicted seconds, rows scored)``; raises
+    ``ValueError`` when constraints eliminate every configuration.
     """
     batch = getattr(problem, "static_info_batch", None)
-    if batch is not None:
-        lat = problem.space.enumerate_lattice()
+    if batch is None:
+        pts = problem.space.enumerate()
+        if not pts:
+            raise ValueError("search space has no feasible configurations")
+        infos = [problem.static_info(p) for p in pts]
+        times = static_times_batch(infos, model)
+        i = int(np.argmin(times))
+        return pts[i], float(times[i]), len(pts)
+
+    chunk = (chunk_size or getattr(problem, "chunk_size", None)
+             or DEFAULT_CHUNK)
+
+    def score(lat) -> Tuple[int, float, int, Optional[Params]]:
+        if lat.size == 0:
+            return 0, math.inf, -1, None
         info = batch(lat.columns)
         times = static_times_batch(None, model, F=info.F, pipe=info.pipe,
                                    feasible=info.feasible)
-        i = int(np.argmin(times))
-        return lat.params_at(i), float(times[i]), lat.size
-    pts = problem.space.enumerate()
-    infos = [problem.static_info(p) for p in pts]
-    times = static_times_batch(infos, model)
-    i = int(np.argmin(times))
-    return pts[i], float(times[i]), len(pts)
+        j = int(np.argmin(times))
+        off = lat.offsets
+        g = int(off[j]) if off is not None else j
+        return lat.size, float(times[j]), g, lat.params_at(j)
+
+    chunks = problem.space.iter_lattice(chunk)
+    if workers is not None and workers > 1:
+        results = _map_bounded(score, chunks, workers)
+    else:
+        results = map(score, chunks)
+
+    scored = 0
+    best: Optional[Tuple[float, int, Params]] = None
+    for n, t, g, params in results:
+        scored += n
+        if n == 0:
+            continue
+        # lexicographic (time, flat index): first-of-the-ties wins, the
+        # same row np.argmin picks over the full lattice (inf times
+        # included — an all-infeasible space still resolves to row 0).
+        if best is None or t < best[0] or (t == best[0] and g < best[1]):
+            best = (t, g, params)
+    if best is None:
+        raise ValueError("search space has no feasible configurations")
+    return best[2], best[0], scored
+
+
+def _map_bounded(fn: Callable, items, workers: int):
+    """`map(fn, items)` on a thread pool with at most ``2*workers``
+    futures in flight (so a lazy generator is never drained eagerly),
+    yielding results in submission order.  Each task runs under a copy
+    of the caller's `contextvars` context, preserving `use_target`
+    scoping across the thread hop."""
+    import contextvars
+    from collections import deque
+    from concurrent.futures import ThreadPoolExecutor
+
+    def gen():
+        with ThreadPoolExecutor(max_workers=workers) as ex:
+            pending = deque()
+            for item in items:
+                while len(pending) >= workers * 2:
+                    yield pending.popleft().result()
+                ctx = contextvars.copy_context()
+                pending.append(ex.submit(ctx.run, fn, item))
+            while pending:
+                yield pending.popleft().result()
+    return gen()
 
 
 # Guards the check-then-set on _DEFAULT_MODELS and shard creation in
@@ -571,6 +644,9 @@ def _service_resolve(key: CacheKey, kernel_id: str,
         return None
 
 
+_tc = None   # the repro.tuning_cache package, bound on first dispatch
+
+
 def lookup_or_tune(kernel_id: str, *,
                    spec: Union[str, ChipSpec, None] = None,
                    mode: str = "static",
@@ -612,10 +688,15 @@ def lookup_or_tune(kernel_id: str, *,
     gen0 = 0
     use_service = False
     if db is None:
-        from repro.tuning_cache import _warm_pretuned_spec, get_default_db
-        db = get_default_db()
+        # parent package — circular at module-import time, so bound
+        # lazily once rather than paying a per-dispatch `from ... import`
+        global _tc
+        if _tc is None:
+            import repro.tuning_cache as _tc_mod
+            _tc = _tc_mod
+        db = _tc.get_default_db()
         if spec.name not in db.warmed_targets:     # once per (db, target)
-            _warm_pretuned_spec(db, spec)
+            _tc._warm_pretuned_spec(db, spec)
         # Only the all-default path consults the tuning service: an
         # explicit model would key a digest the server (which ranks
         # under ITS default model) can never answer.

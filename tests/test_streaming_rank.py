@@ -1,0 +1,372 @@
+"""Streaming cold rank: chunked enumeration + constraint pushdown
+parity (DESIGN.md §14).
+
+The chunked lazy path (`SearchSpace.iter_lattice` -> per-chunk
+constraint mask -> running-argmin `rank_space` / streaming
+`StaticPrunedSearch.shortlist`) must be **bit-identical** to the
+materialized path for any chunk size, any worker count, and any
+constraint set — including argmin ties, which both paths must break
+toward the smallest flat lattice index.  Property-style: spaces are
+generated from seeded rngs, and every registered kernel x shipped
+target pair is swept.
+"""
+import itertools
+import random
+
+import numpy as np
+import pytest
+
+import repro.kernels  # noqa: F401  (registers dispatch problems)
+from repro import tuning_cache
+from repro.core.hw import resolve_target
+from repro.core.predict import static_times_batch
+from repro.core.search import (Constraint, ExhaustiveSearch, GeneticSearch,
+                               RandomSearch, SearchSpace, StaticPrunedSearch)
+from repro.core.target import use_target
+from repro.kernels.megamatmul import mega_matmul_spec
+from repro.tuning_cache import TuningDatabase, TuningProblem
+from repro.tuning_cache.registry import _model_for, rank_space
+from repro.tuning_cache.cli import SHIPPED_TARGETS
+
+
+@pytest.fixture(autouse=True)
+def _fresh_default_db():
+    tuning_cache.set_default_db(TuningDatabase())
+    yield
+    tuning_cache.reset_default_db()
+
+
+def _random_space(seed, with_constraints):
+    rng = random.Random(seed)
+    ndim = rng.randint(1, 4)
+    axes = {}
+    for d in range(ndim):
+        n = rng.randint(1, 6)
+        axes[f"a{d}"] = tuple(rng.sample(range(1, 64), n))
+    cons = ()
+    if with_constraints:
+        # keep roughly half the lattice: parity must hold on the
+        # filtered enumeration, not just the full product
+        cons = (Constraint(lambda c: (c["a0"] % 2 == 0)
+                           | (c["a0"] % 3 == 0), "mod"),)
+    return SearchSpace(axes, constraints=cons)
+
+
+def _chunk_sizes(n):
+    return sorted({1, 2, 7, max(1, n // 3), n or 1, n + 13})
+
+
+# ---------------------------------------------------------------------------
+# iter_lattice vs enumerate_lattice / enumerate
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("seed", range(8))
+@pytest.mark.parametrize("constrained", [False, True])
+def test_iter_lattice_bitwise_matches_enumerate_lattice(seed, constrained):
+    space = _random_space(seed, constrained)
+    ref = space.enumerate_lattice()
+    for chunk in _chunk_sizes(space.size):
+        chunks = list(space.iter_lattice(chunk))
+        idx = np.concatenate([c.indices for c in chunks], axis=1)
+        off = np.concatenate([c.offsets for c in chunks])
+        np.testing.assert_array_equal(idx, ref.indices)
+        np.testing.assert_array_equal(off, ref.offsets)
+        for k in space.names:
+            np.testing.assert_array_equal(
+                np.concatenate([c.columns[k] for c in chunks]),
+                ref.columns[k])
+        # every chunk respects the bound (pre-filter rows <= chunk)
+        assert all(c.size <= chunk for c in chunks)
+
+
+@pytest.mark.parametrize("seed", range(4))
+def test_iter_lattice_rows_are_enumerate_order(seed):
+    space = _random_space(seed, True)
+    rows = [c.params_at(i)
+            for c in space.iter_lattice(5) for i in range(c.size)]
+    assert rows == space.enumerate()
+    # offsets decode back to the same configs
+    offs = [int(g) for c in space.iter_lattice(5) for g in c.offsets]
+    assert [space.from_flat(g) for g in offs] == rows
+
+
+def test_iter_lattice_rejects_bad_chunk():
+    space = _random_space(0, False)
+    with pytest.raises(ValueError):
+        next(space.iter_lattice(0))
+
+
+def test_satisfies_agrees_with_batch_mask():
+    space = _random_space(3, True)
+    lat = SearchSpace(space.axes).enumerate_lattice()   # unfiltered
+    mask = space.feasible_mask(lat.columns, lat.size)
+    for i in range(lat.size):
+        assert space.satisfies(lat.params_at(i)) == bool(mask[i])
+
+
+# ---------------------------------------------------------------------------
+# streaming rank_space parity
+# ---------------------------------------------------------------------------
+
+
+def _toy_problem(space, cost_fn):
+    """TuningProblem whose batch analyzer scores `cost_fn(columns)`."""
+    class _Info:
+        def __init__(self, cols):
+            t = np.asarray(cost_fn(cols), dtype=np.float64)
+            # static_times_batch array form: time = F @ rates with a
+            # one-column F and unit rate, pipe/feasible neutral
+            self.F = t.reshape(-1, 1)
+            self.pipe = np.zeros(t.size, dtype=np.float64)
+            self.feasible = np.ones(t.size, dtype=bool)
+
+    class _Model:
+        def times(self, F, pipe, feasible):  # pragma: no cover - unused
+            raise NotImplementedError
+
+    def batch(cols):
+        return _Info(cols)
+
+    def scalar(p):
+        raise NotImplementedError("streaming tests never build scalars")
+
+    return TuningProblem(space=space, static_info=scalar,
+                         static_info_batch=batch)
+
+
+class _UnitModel:
+    """CostModel stand-in: time == F[:, 0] + pipe."""
+
+    def time_batch(self, mixes=None, F=None):
+        return np.asarray(F, dtype=np.float64)[:, 0]
+
+    def fingerprint(self):
+        return "unit@test"
+
+
+def _rank(problem, **kw):
+    return rank_space(problem, _UnitModel(), **kw)
+
+
+@pytest.mark.parametrize("seed", range(6))
+def test_streaming_rank_matches_single_chunk(seed):
+    space = _random_space(seed, True)
+    rng = np.random.default_rng(seed)
+    w = {k: rng.uniform(0.1, 2.0) for k in space.names}
+    prob = _toy_problem(space, lambda c: sum(
+        w[k] * np.asarray(c[k], dtype=np.float64) for k in space.names))
+    try:
+        ref = _rank(prob, chunk_size=space.size + 1)   # one chunk: eager
+    except ValueError:
+        ref = None
+    for chunk in _chunk_sizes(space.size):
+        if ref is None:
+            with pytest.raises(ValueError):
+                _rank(prob, chunk_size=chunk)
+        else:
+            assert _rank(prob, chunk_size=chunk) == ref
+
+
+def test_streaming_rank_tie_breaks_to_first_flat_index():
+    # constant cost: every feasible row ties; the winner must be the
+    # first feasible row in enumeration order, for every chunking
+    space = SearchSpace({"a": (1, 2, 3, 4), "b": (1, 2, 3)},
+                        constraints=(lambda c: c["a"] >= 2,))
+    prob = _toy_problem(space, lambda c: np.zeros(len(c["a"])))
+    want = {"a": 2, "b": 1}                  # flat index 3
+    for chunk in (1, 2, 5, 100):
+        p, t, n = _rank(prob, chunk_size=chunk)
+        assert (p, t, n) == (want, 0.0, 9)
+
+
+def test_streaming_rank_workers_bitwise_parity():
+    space = _random_space(11, True)
+    prob = _toy_problem(space, lambda c: np.asarray(
+        c[space.names[0]], dtype=np.float64) * 1.7)
+    ref = _rank(prob, chunk_size=space.size + 1)
+    for workers in (2, 4):
+        assert _rank(prob, chunk_size=3, workers=workers) == ref
+
+
+def test_constraint_pushdown_never_scores_infeasible_rows():
+    space = SearchSpace({"a": tuple(range(10)), "b": tuple(range(10))},
+                        constraints=(lambda c: c["a"] != 3,))
+    seen_rows = []
+
+    def cost(cols):
+        seen_rows.append(np.asarray(cols["a"]))
+        return np.asarray(cols["a"], dtype=np.float64) + 1.0
+
+    prob = _toy_problem(space, cost)
+    _, _, scored = _rank(prob, chunk_size=7)
+    seen = np.concatenate(seen_rows)
+    assert scored == len(seen) == 90         # 10 rows filtered out
+    assert not np.any(seen == 3)             # pushdown: never materialized
+
+
+def test_all_infeasible_space_raises_both_paths():
+    space = SearchSpace({"a": (1, 2, 3)},
+                        constraints=(lambda c: c["a"] > 99,))
+    prob = _toy_problem(space, lambda c: np.asarray(c["a"], float))
+    with pytest.raises(ValueError):
+        _rank(prob, chunk_size=2)            # streaming
+    scalar_prob = TuningProblem(space=space, static_info=lambda p: None)
+    with pytest.raises(ValueError):
+        rank_space(scalar_prob, _UnitModel())   # scalar fallback
+
+
+# ---------------------------------------------------------------------------
+# every registered kernel x shipped target: chunked == eager
+# ---------------------------------------------------------------------------
+
+_KERNEL_SIGS = {
+    "matmul": dict(m=512, n=256, k=1024, dtype="float32"),
+    "matvec": dict(m=2048, n=1024, dtype="float32"),
+    "atax": dict(m=1024, n=512, dtype="float32"),
+    "bicg": dict(m=2048, n=2048, dtype="bfloat16"),
+    "jacobi3d": dict(z=128, y=64, x=128, dtype="float32"),
+    "flash_attention": dict(b=2, h=4, sq=1024, skv=1024, d=128,
+                            causal=True, dtype="float32"),
+    "stencil2d": dict(y=1024, x=512, dtype="float32"),
+}
+
+
+@pytest.mark.parametrize("target", SHIPPED_TARGETS)
+@pytest.mark.parametrize("kernel_id", sorted(_KERNEL_SIGS))
+def test_chunked_rank_bitwise_matches_eager_every_kernel_target(
+        kernel_id, target):
+    spec = resolve_target(target)
+    with use_target(spec):
+        prob = tuning_cache.get_problem(kernel_id, **_KERNEL_SIGS[kernel_id])
+        model = _model_for(spec)
+        eager = rank_space(prob, model, chunk_size=prob.space.size + 1)
+        for chunk in (1, 7, max(1, prob.space.size // 2)):
+            assert rank_space(prob, model, chunk_size=chunk) == eager
+        assert rank_space(prob, model, chunk_size=5, workers=3) == eager
+
+
+# ---------------------------------------------------------------------------
+# streaming StaticPrunedSearch shortlist
+# ---------------------------------------------------------------------------
+
+
+def _mega_small():
+    # 40 divides nothing in 192 = 2^6*3; unroll 3 only divides bk 24/48
+    spec = mega_matmul_spec(blocks=(8, 16, 24, 32, 40, 48),
+                            unrolls=(1, 2, 3), orders=("mnk", "kmn"),
+                            variants=("blocked",), accs=("f32",))
+    return spec.problem(m=192, n=192, k=192, dtype="float32")
+
+
+def test_mega_factory_space_shape_and_constraints():
+    prob = _mega_small()
+    space = prob.space
+    assert space.size == 6 ** 3 * 3 * 2      # full lattice
+    lat = space.enumerate_lattice()
+    assert 0 < lat.size < space.size         # constraints filter some
+    # scalar satisfies() agrees with the batch mask row-by-row
+    for i in range(0, lat.size, max(1, lat.size // 37)):
+        assert space.satisfies(lat.params_at(i))
+    # mega registration is opt-in: the registry must not have grown
+    assert "mega_matmul" not in tuning_cache.registered()
+
+
+def test_streaming_shortlist_bitwise_matches_eager():
+    prob = _mega_small()
+    spec = resolve_target("tpu-v5e")
+    model = _model_for(spec)
+
+    def cost(p):
+        with use_target(spec):
+            return prob.static_info(p).static_time(model)
+
+    def cost_cols(cols):
+        with use_target(spec):
+            b = prob.static_info_batch(cols)
+        return static_times_batch(None, model, F=b.F, pipe=b.pipe,
+                                  feasible=b.feasible)
+
+    for keep in (dict(keep_n=16), dict(keep_frac=0.05)):
+        eager = StaticPrunedSearch(cost, static_cost_batch=lambda pts:
+                                   cost_cols({k: np.asarray([p[k] for p in pts])
+                                              for k in prob.space.names}),
+                                   **keep).shortlist(prob.space)
+        streaming = StaticPrunedSearch(cost, static_cost_cols=cost_cols,
+                                       chunk_size=97,
+                                       **keep).shortlist(prob.space)
+        assert streaming == eager
+
+
+def test_streaming_shortlist_all_infeasible_raises():
+    space = SearchSpace({"a": tuple(range(50))},
+                        constraints=(lambda c: c["a"] > 99,))
+    s = StaticPrunedSearch(lambda p: 0.0, keep_n=4, chunk_size=8,
+                           static_cost_cols=lambda c: np.asarray(
+                               c["a"], dtype=np.float64))
+    with pytest.raises(ValueError):
+        s.shortlist(space)
+
+
+# ---------------------------------------------------------------------------
+# satellite behaviours on the point-op / strategy layer
+# ---------------------------------------------------------------------------
+
+
+def test_index_of_duplicate_axis_values_uses_first_index():
+    space = SearchSpace({"a": (8, 16, 8, 32), "b": ("x", "y")})
+    assert space.index_of({"a": 8, "b": "y"}) == (0, 1)
+    assert space.index_of({"a": 32, "b": "x"}) == (3, 0)
+    with pytest.raises(ValueError):
+        space.index_of({"a": 99, "b": "x"})
+
+
+def test_neighbors_respects_constraints():
+    space = SearchSpace({"a": tuple(range(10))},
+                        constraints=(lambda c: c["a"] % 2 == 0,))
+    rng = random.Random(0)
+    p = {"a": 4}
+    for _ in range(50):
+        q = space.neighbors(p, rng)
+        assert space.satisfies(q)
+
+
+def test_exhaustive_budget_is_lazy_on_astronomical_space():
+    # 40^12 ~ 1.7e19 points: a materializing implementation would die
+    space = SearchSpace({f"a{d}": tuple(range(40)) for d in range(12)})
+    res = ExhaustiveSearch().minimize(
+        lambda p: sum(p.values()), space, budget=50)
+    assert res.evaluations == 50
+    assert res.candidates_considered == 50
+
+
+def test_sample_raises_when_constraints_unsatisfiable():
+    space = SearchSpace({"a": (1, 3, 5)},
+                        constraints=(lambda c: c["a"] % 2 == 0,))
+    with pytest.raises(ValueError):
+        space.sample(random.Random(0), max_tries=25)
+
+
+def test_random_search_dedup_distinguishes_value_types():
+    # keys are axis-index tuples now: 1 and "1" are distinct configs,
+    # a str()-keyed dedup would collapse them and underfill the budget
+    space = SearchSpace({"a": (1, "1")})
+    seen = []
+
+    def obj(p):
+        seen.append(p["a"])
+        return 0.0
+
+    res = RandomSearch(seed=0).minimize(obj, space, budget=2)
+    assert res.evaluations == 2
+    assert sorted(map(str, seen)) == ["1", "1"]
+    assert {type(v) for v in seen} == {int, str}
+
+
+def test_genetic_search_runs_under_constraints():
+    space = SearchSpace({"a": tuple(range(16)), "b": tuple(range(16))},
+                        constraints=(lambda c: (c["a"] + c["b"]) % 2 == 0,))
+    res = GeneticSearch(seed=1).minimize(
+        lambda p: p["a"] + p["b"], space, budget=60)
+    assert res.best_value == 0.0             # a=0,b=0 is feasible
+    assert space.satisfies(res.best_params)
