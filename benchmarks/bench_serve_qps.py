@@ -122,6 +122,84 @@ def run(threads, per_thread, n_warm, n_cold):
     }
 
 
+FLASH_SIG = {"b": 2, "h": 2, "sq": 128, "skv": 128, "d": 64,
+             "causal": True, "dtype": "float32"}
+
+
+def run_variant_digest(threads=4):
+    """Variant-extended digest gate (DESIGN.md §15).
+
+    The service single-flight digest must include the kernel's
+    variant-set fingerprint, so a record ranked under one variant set
+    never answers — and never coalesces with — a lookup under another:
+
+    * resolve a flash_attention instance (full variant set) -> 1 tune;
+    * unregister the ``blocked`` variant and resolve the SAME
+      signature -> the digest changes, the server ranks again (2
+      tunes), and the reduced-set winner is necessarily ``flash``;
+    * restore the variant set and resolve again -> the original digest
+      is warm, no third tune;
+    * race ``threads`` clients on one cold variant-extended digest ->
+      exactly one more tune (single-flight still coalesces *within* a
+      variant set).
+    """
+    from repro.kernels import api
+
+    db = TuningDatabase()
+    with TuningServer(db=db) as srv:
+        client = ServiceClient(srv.url, policy=ClientPolicy(
+            deadline_s=30.0, connect_timeout_s=15.0, retries=2,
+            breaker_threshold=10 ** 6))
+        p_full = client.resolve("flash_attention", FLASH_SIG,
+                                target=TARGET)
+        assert p_full is not None and srv.stats.tunes == 1
+        removed = api.unregister_variant("flash_attention", "blocked")
+        try:
+            p_reduced = client.resolve("flash_attention", FLASH_SIG,
+                                       target=TARGET)
+            assert p_reduced is not None and srv.stats.tunes == 2, (
+                "variant-set change did not change the service digest "
+                f"(cross-variant coalescing): tunes={srv.stats.tunes}")
+            assert p_reduced["params"].get("variant") == "flash", p_reduced
+        finally:
+            api.register_variant("flash_attention", removed)
+        p_restored = client.resolve("flash_attention", FLASH_SIG,
+                                    target=TARGET)
+        assert p_restored["params"] == p_full["params"] \
+            and srv.stats.tunes == 2, (
+            "restored variant set should hit the original digest warm")
+
+        cold_sig = dict(FLASH_SIG, skv=256, sq=256)
+        results, failures = [], []
+        barrier = threading.Barrier(threads)
+
+        def worker():
+            barrier.wait(30)
+            res = client.resolve("flash_attention", cold_sig,
+                                 target=TARGET)
+            (results if res is not None else failures).append(res)
+
+        ts = [threading.Thread(target=worker) for _ in range(threads)]
+        for t in ts:
+            t.start()
+        for t in ts:
+            t.join(300)
+        assert not failures, f"{len(failures)} degraded variant lookups"
+        assert srv.stats.tunes == 3, (
+            f"duplicate tunes on one variant-extended digest: "
+            f"{srv.stats.tunes - 2} ranks for 1 distinct key")
+        assert all(r == results[0] for r in results)
+        client.close()
+        coalesced = srv.stats.as_dict()["coalesced"]
+    return {
+        "winner_full_set": p_full["params"].get("variant"),
+        "winner_reduced_set": p_reduced["params"].get("variant"),
+        "restored_hit_warm": True,
+        "tunes": 3,
+        "racers_coalesced": coalesced,
+    }
+
+
 def main(argv=None):
     ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
     ap.add_argument("--smoke", action="store_true",
@@ -133,6 +211,7 @@ def main(argv=None):
         row = run(threads=4, per_thread=60, n_warm=4, n_cold=3)
     else:
         row = run(threads=8, per_thread=400, n_warm=8, n_cold=6)
+    row["variant_digest"] = run_variant_digest()
 
     print(f"tuning service: {row['threads']} client threads x "
           f"{row['requests'] // row['threads']} requests "

@@ -1,7 +1,29 @@
-"""Serving example: batched prefill + token-by-token decode with the
-production cache layouts, against any registry arch (reduced config).
+"""Serving example: graph pretune -> freeze -> tuned serving.
 
-    PYTHONPATH=src python examples/serve_lm.py --arch hymba-1.5b --gen 24
+    PYTHONPATH=src python examples/serve_lm.py --arch gemma-7b --gen 24
+
+The zero-run serving lifecycle from DESIGN.md §15, end to end:
+
+1. **graph pretune** — ``GraphTuner.tune_config`` abstract-traces the
+   config's prefill + decode step (``jax.eval_shape``; nothing
+   executes) and statically ranks every (kernel, signature) instance
+   they dispatch into the tuning database;
+2. **freeze** — the ranked records compile into lock-free frozen
+   dispatch tables;
+3. **serve tuned** — with ``use_tuned_layers()`` the model's rms_norm
+   / attention / gated-mlp layers dispatch through the variant-aware
+   kernel registry; every dispatch hits the frozen tier and the
+   database sees zero runtime tunes;
+4. **serve fallback** — the same weights with tuned layers OFF run the
+   plain jnp paths (the degraded mode serving falls back to whenever
+   the tuned path is unavailable); greedy token streams must match.
+
+The same lifecycle as a CLI one-liner:
+
+    python -m repro.tuning_cache --db tuned.jsonl pretune \\
+        --config gemma-7b --smoke
+    python -m repro.launch.serve --arch gemma-7b --smoke \\
+        --tuning-db tuned.jsonl --tuned-ops --assert-frozen
 """
 import argparse
 import time
@@ -10,53 +32,95 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+import repro.kernels  # noqa: F401  (registers dispatch problems)
+from repro import tuning_cache
 from repro.configs import get_smoke
+from repro.core.autotuner import GraphTuner
 from repro.distributed import make_serve_fns
-from repro.distributed.sharding import Sharder
+from repro.kernels import api
 from repro.models import build_model
+from repro.models.layers import use_tuned_layers
+from repro.tuning_cache import TuningDatabase
+
+
+def decode(prefill, decode_step, params, batch, gen):
+    """Prefill + ``gen`` greedy decode steps; returns (tokens, ms/tok).
+
+    jit fresh per call: the tuned/jnp routing flag is read at trace
+    time, so the two serving modes must not share a jit cache."""
+    pf, dc = jax.jit(prefill), jax.jit(decode_step)
+    logits, cache = pf(params, batch)
+    tok = jnp.argmax(logits[:, -1:], axis=-1).astype(jnp.int32)
+    toks = [np.asarray(tok)]
+    t0 = time.perf_counter()
+    for _ in range(gen):
+        logits, cache = dc(params, cache, tok)
+        tok = jnp.argmax(logits[:, -1:], axis=-1).astype(jnp.int32)
+        toks.append(np.asarray(tok))
+    jax.block_until_ready(tok)
+    return np.concatenate(toks, 1), (time.perf_counter() - t0) / gen * 1e3
 
 
 def main():
     ap = argparse.ArgumentParser()
-    ap.add_argument("--arch", default="hymba-1.5b")
-    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--arch", default="gemma-7b")
+    ap.add_argument("--batch", type=int, default=2)
     ap.add_argument("--prompt-len", type=int, default=48)
     ap.add_argument("--gen", type=int, default=24)
     args = ap.parse_args()
 
     cfg = get_smoke(args.arch)
+
+    # -- 1. graph pretune into a fresh database (abstract trace only) --
+    tuning_cache.thaw()
+    tuning_cache.set_default_db(TuningDatabase())
+    db = tuning_cache.get_default_db()
+    rep = GraphTuner.tune_config(cfg, batch=args.batch,
+                                 prompt_len=args.prompt_len, db=db)
+    print(f"[{cfg.name}] pretune: {rep['dispatches']} graph dispatches "
+          f"-> {len(rep['instances'])} unique kernel instances ranked")
+    for inst in rep["instances"]:
+        sig = " ".join(f"{k}={v}" for k, v in inst["signature"].items())
+        print(f"  {inst['kernel']:<16} {sig}")
+
+    # -- 2. freeze the ranked records into dispatch tables -------------
+    n = tuning_cache.freeze()
+    print(f"[{cfg.name}] frozen: {n} dispatch-table entries")
+
     model = build_model(cfg)
     key = jax.random.PRNGKey(0)
     params = model.init(key)
-    shd = Sharder()
-    prefill = jax.jit(lambda p, b: model.prefill(
-        p, b, shd, max_len=args.prompt_len + args.gen))
-    _, decode_step = make_serve_fns(model)
-    decode_step = jax.jit(decode_step, donate_argnums=(1,))
-
+    prefill, decode_step = make_serve_fns(model)
     batch = {"tokens": jax.random.randint(
         key, (args.batch, args.prompt_len), 0, cfg.vocab)}
     if cfg.frontend == "frames":
         batch["frames"] = jax.random.normal(
             key, (args.batch, cfg.enc_seq, cfg.d_model), jnp.bfloat16)
 
-    t0 = time.perf_counter()
-    logits, cache = prefill(params, batch)
-    jax.block_until_ready(logits)
-    print(f"[{cfg.name}] prefill {args.batch}x{args.prompt_len}: "
-          f"{(time.perf_counter()-t0)*1e3:.1f} ms")
+    # -- 3. serve through the tuned kernel path ------------------------
+    n0 = len(db)
+    api.reset_dispatch_stats()
+    with use_tuned_layers():
+        toks_tuned, ms_tuned = decode(prefill, decode_step, params,
+                                      batch, args.gen)
+    st = api.dispatch_stats()
+    print(f"[{cfg.name}] tuned serve: {ms_tuned:.1f} ms/token | "
+          f"dispatch {st['frozen']}/{st['total']} frozen, "
+          f"{st['live']} live, {st['fallback']} fallback, "
+          f"{len(db) - n0} runtime tunes")
 
-    tok = jnp.argmax(logits[:, -1:], axis=-1).astype(jnp.int32)
-    toks = [np.asarray(tok)]
-    t0 = time.perf_counter()
-    for _ in range(args.gen):
-        logits, cache = decode_step(params, cache, tok)
-        tok = jnp.argmax(logits[:, -1:], axis=-1).astype(jnp.int32)
-        toks.append(np.asarray(tok))
-    jax.block_until_ready(tok)
-    dt = (time.perf_counter() - t0) / args.gen
-    print(f"decode: {dt*1e3:.1f} ms/token")
-    print("sample:", np.concatenate(toks, 1)[0][:16].tolist())
+    # -- 4. the jnp fallback path (degraded mode) ----------------------
+    with use_tuned_layers(False):
+        toks_jnp, ms_jnp = decode(prefill, decode_step, params, batch,
+                                  args.gen)
+    match = np.array_equal(toks_tuned, toks_jnp)
+    print(f"[{cfg.name}] jnp fallback: {ms_jnp:.1f} ms/token | greedy "
+          f"tokens {'MATCH' if match else 'DIVERGE'}")
+    print("sample:", toks_tuned[0][:16].tolist())
+
+    tuning_cache.thaw()
+    tuning_cache.reset_default_db()
+    assert match, "tuned and fallback paths emitted different tokens"
 
 
 if __name__ == "__main__":

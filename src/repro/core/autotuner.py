@@ -530,3 +530,69 @@ class GraphTuner:
                 space_size=self.space.size, source="graph",
                 created_unix=now_unix(), extras={"terms": terms_d}))
         return best_p, best_terms, hist
+
+    @classmethod
+    def tune_config(cls, cfg, *, batch: int = 2, prompt_len: int = 64,
+                    decode: bool = True, spec=None, db=None,
+                    mode: str = "static",
+                    tune: bool = True) -> Dict[str, Any]:
+        """Graph-level pretune of one serving config (DESIGN.md §15).
+
+        Enumerates every ``(kernel_id, signature)`` instance the
+        config's serving path dispatches — a `jax.eval_shape` of
+        prefill (and, with ``decode=True``, one decode step) under
+        ``use_tuned_layers`` with dispatch collection on, so no kernel
+        runs and no params materialize — then resolves each distinct
+        instance through `repro.tuning_cache.lookup_or_tune` (the
+        streaming SoA rank).  After ``freeze()``, serving that config
+        dispatches 100% through the frozen tables with zero runtime
+        tunes.
+
+        ``cfg`` is a `ModelConfig` (callers pick real vs smoke via
+        `repro.configs.get_config` / `get_smoke`).  Returns a report::
+
+            {"config": name, "batch": B, "prompt_len": S,
+             "instances": [{"kernel": id, "signature": {...},
+                            "params": {...} | None}, ...],
+             "dispatches": total_collected, "tuned": n_resolved}
+        """
+        import jax
+        import jax.numpy as jnp
+        from repro.distributed import make_serve_fns
+        from repro.kernels import api
+        from repro.models import build_model
+        from repro.models.layers import use_tuned_layers
+
+        model = build_model(cfg)
+        params_abs = model.abstract_params()
+        prefill, decode_step = make_serve_fns(model)
+        batch_abs = {"tokens": jax.ShapeDtypeStruct((batch, prompt_len),
+                                                    jnp.int32)}
+        if cfg.frontend == "frames":
+            batch_abs["frames"] = jax.ShapeDtypeStruct(
+                (batch, cfg.enc_seq, cfg.d_model), jnp.dtype(cfg.dtype))
+        with use_tuned_layers(), api.collect_dispatches() as col:
+            _, cache_abs = jax.eval_shape(prefill, params_abs, batch_abs)
+            if decode:
+                tok = jax.ShapeDtypeStruct((batch, 1), jnp.int32)
+                jax.eval_shape(decode_step, params_abs, cache_abs, tok)
+        # dedup preserving first-seen order (layers repeat instances)
+        seen: Dict[Any, Dict[str, Any]] = {}
+        for kid, sig in col:
+            k = (kid, tuple(sorted(sig.items())))
+            if k not in seen:
+                seen[k] = {"kernel": kid, "signature": sig,
+                           "params": None}
+        report = {"config": cfg.name, "batch": batch,
+                  "prompt_len": prompt_len,
+                  "instances": list(seen.values()),
+                  "dispatches": len(col), "tuned": 0}
+        if tune:
+            from repro.tuning_cache import lookup_or_tune
+            for inst in report["instances"]:
+                kw = {} if db is None else {"db": db}
+                inst["params"] = lookup_or_tune(
+                    inst["kernel"], spec=spec, mode=mode, **kw,
+                    **inst["signature"])
+                report["tuned"] += 1
+        return report

@@ -42,12 +42,14 @@ four layers:
 """
 from __future__ import annotations
 
+import contextlib
+import contextvars
 import dataclasses
 import functools
 import inspect
 import logging
 import threading
-from typing import (Any, Callable, Dict, Mapping, Optional, Sequence,
+from typing import (Any, Callable, Dict, List, Mapping, Optional, Sequence,
                     Tuple, Union)
 
 import numpy as np
@@ -63,12 +65,19 @@ from repro.kernels.common import (BatchStaticInfo, block_info,
                                   block_info_batch, cuda_info,
                                   cuda_info_batch,
                                   pick_divisor_candidates)
+from repro.kernels.variants import (KernelVariant, VARIANT_AXIS,
+                                    check_variant_schema, joint_space,
+                                    joint_static_info,
+                                    joint_static_info_batch,
+                                    variants_fingerprint)
 
 __all__ = [
     "KernelSpec", "tuned_kernel", "divisors", "Divisors",
-    "CudaProfile", "cuda_profile",
+    "CudaProfile", "cuda_profile", "KernelVariant",
+    "register_variant", "unregister_variant",
     "get_spec", "registered_kernels", "unregister",
     "reset_dispatch_failure_log",
+    "dispatch_stats", "reset_dispatch_stats", "collect_dispatches",
 ]
 
 _log = logging.getLogger(__name__)
@@ -235,6 +244,80 @@ _GENERIC_CUDA = CudaProfile()
 
 
 # ---------------------------------------------------------------------------
+# Dispatch accounting + graph enumeration (shared by every op wrapper)
+# ---------------------------------------------------------------------------
+
+
+class _DispatchStats:
+    """Process-wide op-dispatch tier counters.
+
+    Plain uncontended attribute increments: cheap enough for the frozen
+    hot path, and the gates built on them ("100% frozen, zero fallback"
+    after a graph pretune) only ever assert counters that a lost racing
+    increment cannot push from zero to nonzero.
+    """
+
+    __slots__ = ("frozen", "live", "fallback", "explicit", "collected")
+
+    def __init__(self):
+        self.reset()
+
+    def reset(self) -> None:
+        self.frozen = 0         # frozen-table probe answered
+        self.live = 0           # db/memo/service resolve answered in full
+        self.fallback = 0       # largest-divisor fallback filled gaps
+        self.explicit = 0       # caller passed tuned_params=
+        self.collected = 0      # recorded by collect_dispatches()
+
+    def snapshot(self) -> Dict[str, int]:
+        d = {"frozen": self.frozen, "live": self.live,
+             "fallback": self.fallback, "explicit": self.explicit,
+             "collected": self.collected}
+        d["total"] = d["frozen"] + d["live"] + d["fallback"] + d["explicit"]
+        return d
+
+
+_STATS = _DispatchStats()
+
+
+def dispatch_stats() -> Dict[str, int]:
+    """Counters of how op dispatches resolved since the last reset:
+    ``frozen`` / ``live`` / ``fallback`` / ``explicit`` (+ their sum
+    ``total``) and ``collected`` (enumeration-only dispatches recorded
+    under `collect_dispatches`, excluded from ``total``)."""
+    return _STATS.snapshot()
+
+
+def reset_dispatch_stats() -> None:
+    _STATS.reset()
+
+
+_COLLECT: "contextvars.ContextVar[Optional[List[Tuple[str, Dict]]]]" = \
+    contextvars.ContextVar("repro_collect_dispatches", default=None)
+
+
+@contextlib.contextmanager
+def collect_dispatches():
+    """Record every op dispatch as ``(kernel_id, signature)`` instead of
+    touching the tuning database.
+
+    While active, op wrappers append the extracted signature to the
+    yielded list and launch with fallback params — no frozen probe, no
+    db lookup, no tuning.  Run a model forward pass under
+    ``jax.eval_shape`` inside this context and the list is *exactly*
+    the (kernel, shape, dtype) instance set runtime dispatch will ask
+    for — `GraphTuner.tune_config` builds its pretune set this way, so
+    enumeration can never drift from dispatch.
+    """
+    sink: List[Tuple[str, Dict]] = []
+    tok = _COLLECT.set(sink)
+    try:
+        yield sink
+    finally:
+        _COLLECT.reset(tok)
+
+
+# ---------------------------------------------------------------------------
 # Dispatch-failure log (shared by every generated op wrapper)
 # ---------------------------------------------------------------------------
 
@@ -331,12 +414,24 @@ class KernelSpec:
     constraints: Any = None
     # preferred rank_space streaming chunk (None: DEFAULT_CHUNK)
     chunk_size: Optional[int] = None
+    # Additional implementations of this logical op (a sequence of
+    # `KernelVariant`).  When any are declared — or added later via
+    # `register_variant` — the decorated fn/space/analysis/constraints
+    # become the *primary* variant (id ``primary_variant``, default
+    # "primary"), ``"variant"`` becomes a joint-space axis, and every
+    # cache record stores the winning implementation id (DESIGN.md §15).
+    variants: Any = None
+    primary_variant: Optional[str] = None
 
     def __post_init__(self):
         if not self.kernel_id or not isinstance(self.kernel_id, str):
             raise ValueError(f"kernel_id must be a non-empty string, "
                              f"got {self.kernel_id!r}")
         self.space = _coerce_space(self.kernel_id, self.space)
+        if VARIANT_AXIS in self.space:
+            raise ValueError(
+                f"@tuned_kernel({self.kernel_id!r}): axis {VARIANT_AXIS!r} "
+                f"is reserved for the joint variant axis")
         # The analysis builder's keyword params are the signature
         # schema — same binding semantics the old per-kernel factories
         # got from inspect.signature(factory).
@@ -346,6 +441,7 @@ class KernelSpec:
                 f"@tuned_kernel({self.kernel_id!r}): static_info builder "
                 f"must take (params, **signature)")
         self._sig_schema = inspect.Signature(params[1:])
+        self._sig_names = tuple(self._sig_schema.parameters)
         # Declaration-time normalization: the schema compiles once into
         # a canonical key builder (repro.tuning_cache.binder), so warm
         # dispatch never pays inspect.bind or a per-call sort.  None
@@ -356,6 +452,94 @@ class KernelSpec:
         self._op = None
         self._fn_kw = None
         self._fallback_cache: Dict[Tuple, Dict[str, Any]] = {}
+        self._axis_names = frozenset(self.space)
+        self._primary_id = self.primary_variant or "primary"
+        self._variants: Optional[Dict[str, KernelVariant]] = None
+        extra = tuple(self.variants or ())
+        if extra or self.primary_variant is not None:
+            self._variants = {self._primary_id: self._primary_as_variant()}
+            for v in extra:
+                self.add_variant(v, _notify=False)
+        self.variants = None     # consumed into _variants; don't alias
+
+    # -- variant set --------------------------------------------------------
+    def _primary_as_variant(self) -> KernelVariant:
+        return KernelVariant(variant_id=self._primary_id, fn=self.fn,
+                             space=self.space, analysis=self.analysis,
+                             constraints=self.constraints)
+
+    def variant_ids(self) -> Tuple[str, ...]:
+        """Registered implementation ids, insertion-ordered (empty for a
+        single-implementation kernel)."""
+        return tuple(self._variants) if self._variants is not None else ()
+
+    def add_variant(self, variant: KernelVariant, *,
+                    _notify: bool = True) -> None:
+        """Register another implementation of this logical op.
+
+        Converts a single-implementation spec to variant dispatch (the
+        decorated fn becomes the primary variant) and invalidates this
+        kernel's dispatch state — frozen tables thaw and its live memo
+        shard entry drops, because every existing record now answers
+        for a different (smaller) variant set.
+        """
+        if not isinstance(variant, KernelVariant):
+            raise TypeError(f"add_variant wants a KernelVariant, "
+                            f"got {variant!r}")
+        v = dataclasses.replace(
+            variant,
+            space=_coerce_space(f"{self.kernel_id}/{variant.variant_id}",
+                                variant.space))
+        check_variant_schema(self.kernel_id, self._sig_names, v)
+        cur = self._variants
+        if cur is None:
+            cur = {self._primary_id: self._primary_as_variant()}
+        if v.variant_id in cur:
+            raise ValueError(
+                f"@tuned_kernel({self.kernel_id!r}): variant "
+                f"{v.variant_id!r} is already registered")
+        new = dict(cur)
+        new[v.variant_id] = v
+        # one atomic publish: racing dispatches see old set or new set
+        self._variants = new
+        self._fallback_cache = {}
+        if _notify:
+            tuning_cache.registry.invalidate_kernel(self.kernel_id)
+
+    def remove_variant(self, variant_id: str) -> "KernelVariant":
+        """Unregister an implementation (the primary cannot be removed —
+        it backs the fallback path).  Invalidates dispatch state like
+        `add_variant`; the spec stays in variant mode even with only
+        the primary left, because its records carry a variant id.
+        Returns the removed variant (so callers can re-register it)."""
+        cur = self._variants
+        if cur is None or variant_id not in cur:
+            raise KeyError(
+                f"@tuned_kernel({self.kernel_id!r}) has no variant "
+                f"{variant_id!r}; registered: {list(cur or ())}")
+        if variant_id == self._primary_id:
+            raise ValueError(
+                f"@tuned_kernel({self.kernel_id!r}): cannot remove the "
+                f"primary variant {variant_id!r}")
+        new = dict(cur)
+        removed = new.pop(variant_id)
+        self._variants = new
+        self._fallback_cache = {}
+        tuning_cache.registry.invalidate_kernel(self.kernel_id)
+        return removed
+
+    def key_extras(self) -> Dict[str, Any]:
+        """Extra cache-key signature entries this spec requires.
+
+        Variant mode contributes ``{"variants": <structural digest>}``
+        so records ranked under one variant set never satisfy lookups
+        (or single-flight coalescing, or frozen-table builds) under
+        another.  The registry folds these into `make_key` for every
+        tier — client, service, and freeze agree by construction.
+        """
+        if self._variants is None:
+            return {}
+        return {"variants": variants_fingerprint(self._variants)}
 
     # -- signature plumbing -------------------------------------------------
     def sig_binder(self) -> Optional[SigBinder]:
@@ -386,11 +570,17 @@ class KernelSpec:
     # -- static analysis (scalar and batched, from one builder) -------------
     def static_info(self, params: Params, **signature) -> KernelStaticInfo:
         sig = self.normalize(signature)
+        if self._variants is not None:
+            p = dict(params)
+            p.setdefault(VARIANT_AXIS, self._primary_id)
+            return joint_static_info(self._variants, p, sig)
         return block_info(**self.analysis(params, **sig))
 
     def static_info_batch(self, cols: Mapping[str, np.ndarray],
                           **signature) -> BatchStaticInfo:
         sig = self.normalize(signature)
+        if self._variants is not None:
+            return joint_static_info_batch(self._variants, cols, sig)
         return block_info_batch(**self.analysis(cols, **sig))
 
     # -- derived artifacts ---------------------------------------------------
@@ -405,36 +595,32 @@ class KernelSpec:
 
     def search_space(self, **signature) -> SearchSpace:
         sig = self.normalize(signature)
+        if self._variants is not None:
+            return joint_space(self._variants, sig)
         return SearchSpace({name: axis.materialize(sig)
                             for name, axis in self.space.items()},
                            constraints=self._materialize_constraints(sig))
 
-    def fallback_params(self, **signature) -> Dict[str, Any]:
-        """Launch params used when database dispatch is unavailable.
-
-        Derived default: the largest dividing candidate per axis,
-        backed off (largest block first) until the kernel's own static
-        analysis says the working set fits VMEM — so the failure path
-        can never emit a launch the chip rejects.  Memoized per
-        signature; an explicit ``fallback=`` declaration overrides.
-        """
-        sig = self.normalize(signature)
-        if self.fallback is not None:
-            return dict(self.fallback(**sig))
+    def _fallback_over(self, tag: Optional[str], space: Mapping[str, Any],
+                       analyze: Callable[[Dict[str, Any]], KernelStaticInfo],
+                       sig: Dict[str, Any]) -> Dict[str, Any]:
+        """Largest-divisor fallback over one axis set, backed off
+        (largest block first) until ``analyze`` reports VMEM fit.
+        Memoized per (variant tag, signature)."""
         try:
-            memo_key = tuple(sorted(sig.items()))
+            memo_key = (tag, tuple(sorted(sig.items())))
             hit = self._fallback_cache.get(memo_key)
             if hit is not None:
                 return dict(hit)
         except TypeError:               # unhashable signature value
             memo_key = None
         cands = {name: axis.materialize(sig)
-                 for name, axis in self.space.items()}
+                 for name, axis in space.items()}
         numeric = all(isinstance(v, (int, np.integer))
                       for vals in cands.values() for v in vals)
         if not numeric:                  # literal axes: per-axis defaults
             out = {name: axis.fallback(sig)
-                   for name, axis in self.space.items()}
+                   for name, axis in space.items()}
         else:
             cands = {name: tuple(sorted(set(v)))
                      for name, v in cands.items()}
@@ -442,7 +628,7 @@ class KernelSpec:
             current = lambda: {name: cands[name][i]
                                for name, i in idx.items()}
             try:
-                while not self.static_info(current(), **sig).feasible():
+                while not analyze(current()).feasible():
                     movable = [n for n in idx if idx[n] > 0]
                     if not movable:
                         break            # smallest config; nothing left
@@ -456,6 +642,37 @@ class KernelSpec:
         if memo_key is not None:
             self._fallback_cache[memo_key] = dict(out)
         return out
+
+    def _variant_fallback(self, var: KernelVariant,
+                          sig: Dict[str, Any]) -> Dict[str, Any]:
+        return self._fallback_over(
+            var.variant_id, var.space,
+            lambda p: block_info(**var.analysis(p, **sig)), sig)
+
+    def fallback_params(self, **signature) -> Dict[str, Any]:
+        """Launch params used when database dispatch is unavailable.
+
+        Derived default: the largest dividing candidate per axis,
+        backed off (largest block first) until the kernel's own static
+        analysis says the working set fits VMEM — so the failure path
+        can never emit a launch the chip rejects.  Memoized per
+        signature; an explicit ``fallback=`` declaration overrides.
+        Variant mode falls back to the *primary* implementation (its id
+        rides along under ``"variant"``).
+        """
+        sig = self.normalize(signature)
+        if self.fallback is not None:
+            out = dict(self.fallback(**sig))
+            if self._variants is not None:
+                out.setdefault(VARIANT_AXIS, self._primary_id)
+            return out
+        if self._variants is not None:
+            var = self._variants[self._primary_id]
+            out = self._variant_fallback(var, sig)
+            return {VARIANT_AXIS: self._primary_id, **out}
+        return self._fallback_over(
+            None, self.space,
+            lambda p: block_info(**self.analysis(p, **sig)), sig)
 
     def problem(self, **signature) -> "tuning_cache.TuningProblem":
         """The dispatch-registry factory the stack used to hand-write.
@@ -498,6 +715,43 @@ class KernelSpec:
                               inspect.Parameter.KEYWORD_ONLY))
         return self._fn_kw
 
+    def _launch(self, p: Optional[Mapping[str, Any]],
+                sig: Dict[str, Any]) -> Tuple[Callable, Dict[str, Any], bool]:
+        """Turn resolved params ``p`` into ``(fn, launch_kwargs,
+        complete)`` — the implementation to call, the launch params to
+        pass it, and whether dispatch covered every axis (False means
+        the largest-divisor fallback filled gaps).  ``p=None`` forces
+        the fallback path.  Computed per call, never captured at op
+        creation, so a variant registered after the op exists routes
+        immediately.
+        """
+        variants = self._variants
+        if variants is None:
+            names = self._axis_names
+            launch = ({k: v for k, v in p.items() if k in names}
+                      if p else {})
+            complete = len(launch) == len(names)
+            # dispatch failed or returned partial params: fill the
+            # gaps with the feasible largest-divisor fallback
+            if not complete:
+                launch = {**self.fallback_params(**sig), **launch}
+            return self.fn, launch, complete
+        var = variants.get(p.get(VARIANT_AXIS)) if p else None
+        if var is None:
+            # no params, or a winner whose variant has since been
+            # unregistered: primary-variant fallback
+            fb = self.fallback_params(**sig)
+            var = variants[fb[VARIANT_AXIS]]
+            launch = {k: v for k, v in fb.items() if k in var.space}
+            return var.fn, launch, False
+        # joint winners carry the union axes (foreign ones pinned);
+        # launch with the winning variant's own axes only
+        launch = {k: v for k, v in p.items() if k in var.space}
+        complete = len(launch) == len(var.space)
+        if not complete:
+            launch = {**self._variant_fallback(var, sig), **launch}
+        return var.fn, launch, complete
+
     @property
     def op(self) -> Callable[..., Any]:
         """The trace-time dispatch wrapper (what ``ops.py`` re-exports).
@@ -518,9 +772,9 @@ class KernelSpec:
         being done for a GPU.
         """
         if self._op is None:
-            axis_names = frozenset(self.space)
             kernel_id = self.kernel_id
             registry = tuning_cache.registry
+            stats = _STATS
             # (frozen state, probe) pair published as ONE tuple: a
             # single attribute store is atomic under the GIL, so racing
             # dispatch threads can never pair a stale probe with a
@@ -531,29 +785,39 @@ class KernelSpec:
 
             def op(*args, tuned_params: Optional[Dict] = None, **kw):
                 sig = self.extract_signature(*args, **kw)
+                col = _COLLECT.get()
+                if col is not None:
+                    col.append((kernel_id, dict(sig)))
+                    stats.collected += 1
+                    fn, launch, _ = self._launch(None, sig)
+                    return fn(*args, **launch, **kw)
                 if tuned_params is not None:
-                    p = tuned_params
+                    stats.explicit += 1
+                    fn, launch, _ = self._launch(tuned_params, sig)
+                    return fn(*args, **launch, **kw)
+                fz = registry._FROZEN
+                state, probe = cache[0]
+                if state is not fz:
+                    probe = (fz.tables.get((kernel_id, "static"))
+                             if fz is not None else None)
+                    cache[0] = (fz, probe)
+                p = None
+                if probe is not None:
+                    try:
+                        p = probe(sig)
+                    except TypeError:   # unhashable signature value
+                        p = None
+                hit_frozen = p is not None
+                if p is None:
+                    p = _resolve(kernel_id, sig)
+                fn, launch, complete = self._launch(p, sig)
+                if not complete:
+                    stats.fallback += 1
+                elif hit_frozen:
+                    stats.frozen += 1
                 else:
-                    fz = registry._FROZEN
-                    state, probe = cache[0]
-                    if state is not fz:
-                        probe = (fz.tables.get((kernel_id, "static"))
-                                 if fz is not None else None)
-                        cache[0] = (fz, probe)
-                    p = None
-                    if probe is not None:
-                        try:
-                            p = probe(sig)
-                        except TypeError:   # unhashable signature value
-                            p = None
-                    if p is None:
-                        p = _resolve(kernel_id, sig)
-                launch = {k: v for k, v in p.items() if k in axis_names}
-                # dispatch failed or returned partial params: fill the
-                # gaps with the feasible largest-divisor fallback
-                if len(launch) < len(axis_names):
-                    launch = {**self.fallback_params(**sig), **launch}
-                return self.fn(*args, **launch, **kw)
+                    stats.live += 1
+                return fn(*args, **launch, **kw)
 
             op.__name__ = self.kernel_id
             op.__qualname__ = self.kernel_id
@@ -580,9 +844,16 @@ class KernelSpec:
             sp = SearchSpace(dict(sp))
         fwd = {k: v for k, v in sig.items() if k in self._fn_keywords()}
 
-        def build(p: Params) -> Callable[..., Any]:
-            return functools.partial(
-                self.fn, **fwd, **{k: p[k] for k in sp.names})
+        if self._variants is None:
+            def build(p: Params) -> Callable[..., Any]:
+                return functools.partial(
+                    self.fn, **fwd, **{k: p[k] for k in sp.names})
+        else:
+            def build(p: Params) -> Callable[..., Any]:
+                var = self._variants[p.get(VARIANT_AXIS, self._primary_id)]
+                return functools.partial(
+                    var.fn, **fwd,
+                    **{k: p[k] for k in var.space if k in p})
 
         if self.make_inputs is None:
             def make_inputs():
@@ -622,7 +893,9 @@ def tuned_kernel(kernel_id: str, *,
                  pretune: Sequence[Mapping[str, Any]] = (),
                  cuda: Optional[CudaProfile] = None,
                  constraints: Any = None,
-                 chunk_size: Optional[int] = None):
+                 chunk_size: Optional[int] = None,
+                 variants: Sequence[KernelVariant] = (),
+                 primary_variant: Optional[str] = None):
     """Declare a Pallas kernel as a first-class tuning citizen.
 
     Decorating ``<name>_pallas`` registers a :class:`KernelSpec` under
@@ -638,7 +911,8 @@ def tuned_kernel(kernel_id: str, *,
                           fallback=fallback, make_inputs=make_inputs,
                           reference=reference, pretune=tuple(pretune),
                           cuda=cuda, constraints=constraints,
-                          chunk_size=chunk_size)
+                          chunk_size=chunk_size, variants=tuple(variants),
+                          primary_variant=primary_variant)
         register_spec(spec)
         try:
             fn.spec = spec
@@ -670,6 +944,26 @@ def get_spec(kernel_id: str, default: Any = dataclasses.MISSING
 def registered_kernels() -> Tuple[str, ...]:
     """kernel_ids declared via `@tuned_kernel`, sorted."""
     return tuple(sorted(_SPECS))
+
+
+def register_variant(kernel_id: str, variant: KernelVariant) -> None:
+    """Register another Pallas implementation of a declared logical op.
+
+    The variant id joins the op's joint search space immediately: the
+    kernel's frozen tables thaw and its live memo entries drop (records
+    ranked without this variant answer for a stale variant set), and
+    the next cold rank scores the new implementation's sub-space
+    alongside every existing one.
+    """
+    get_spec(kernel_id).add_variant(variant)
+
+
+def unregister_variant(kernel_id: str, variant_id: str) -> KernelVariant:
+    """Remove a registered implementation (the primary cannot be
+    removed); invalidates the kernel's dispatch state like
+    `register_variant`.  Returns the removed variant so callers can
+    restore it."""
+    return get_spec(kernel_id).remove_variant(variant_id)
 
 
 def unregister(kernel_id: str) -> None:

@@ -5,7 +5,7 @@ The paper demonstrates static ranking on ~10²–10³-point spaces; the
 kernel-tuner benchmarking literature (Tørring et al., Schoonhoven et
 al. — see PAPERS.md) evaluates on *constrained* spaces of 10⁵–10⁷
 points.  This module declares that shape of problem for the blocked
-matmul: block shapes × unroll factor × grid dimension order × variant
+matmul: block shapes × unroll factor × grid dimension order × scheme
 × accumulator dtype — a ~4.2-million-point lattice of which only the
 constraint-feasible slice (tiles divide the problem, unroll divides the
 K block, working set fits VMEM) is ever analyzed, thanks to constraint
@@ -40,7 +40,7 @@ from repro.kernels.matmul import matmul_pallas
 from repro.kernels.ref import matmul_ref
 
 __all__ = ["mega_matmul_spec", "MEGA_BLOCKS", "MEGA_UNROLLS",
-           "MEGA_ORDERS", "MEGA_VARIANTS", "MEGA_ACCS"]
+           "MEGA_ORDERS", "MEGA_SCHEMES", "MEGA_ACCS"]
 
 # 28 block candidates: the 19 divisors of 6144 (= 2^11 * 3) from 8 up —
 # so a 6144³ problem keeps a rich feasible slice — interleaved with 9
@@ -51,7 +51,9 @@ MEGA_BLOCKS = (8, 12, 16, 20, 24, 32, 40, 48, 56, 64, 80, 96, 112, 128,
                2048, 3072, 6144)
 MEGA_UNROLLS = (1, 2, 3, 4, 6, 8, 12, 16)
 MEGA_ORDERS = ("mnk", "mkn", "nmk", "nkm", "kmn", "knm")
-MEGA_VARIANTS = ("blocked", "split_k")
+# "variant" is reserved for the registry's joint implementation axis
+# (kernels/variants.py), so this analysis-only strategy knob is "scheme".
+MEGA_SCHEMES = ("blocked", "split_k")
 MEGA_ACCS = ("f32", "bf16")
 
 # Working-set ceiling for the pushdown constraint: operand tiles +
@@ -73,7 +75,7 @@ def _mega_analysis(p, *, m: int, n: int, k: int, dtype: str = "float32"):
       "nmk") keep the f32 accumulator resident in VMEM; K-outer orders
       re-stream the partial output tile every step (a second scratch
       buffer plus a VPU accumulate pass per element).
-    * ``variant`` — "split_k" buffers per-split partials and reduces
+    * ``scheme`` — "split_k" buffers per-split partials and reduces
       them on the VPU; "blocked" is the plain sequential-K kernel.
     * ``acc`` — accumulator dtype: "bf16" halves the scratch bytes but
       pays a VPU round trip per element per step.
@@ -83,7 +85,7 @@ def _mega_analysis(p, *, m: int, n: int, k: int, dtype: str = "float32"):
     bk = np.minimum(np.asarray(p["bk"], dtype=np.int64), k)
     unroll = np.asarray(p["unroll"], dtype=np.int64)
     order = np.asarray(p["order"])
-    variant = np.asarray(p["variant"])
+    scheme = np.asarray(p["scheme"])
     acc = np.asarray(p["acc"])
     steps = cdiv(m, bm) * cdiv(n, bn) * cdiv(k, bk)
 
@@ -93,7 +95,7 @@ def _mega_analysis(p, *, m: int, n: int, k: int, dtype: str = "float32"):
     scratch = np.where(k_inner, scratch, 2 * scratch)
     vpu = np.where(k_inner, 0.0, 1.0) * bm * bn
     vpu = vpu + np.where(acc == "f32", 0.0, 1.0) * bm * bn
-    split = variant == "split_k"
+    split = scheme == "split_k"
     vpu = vpu + np.where(split, 1.0, 0.0) * bm * bn
     scratch = scratch + np.where(split, bm * bn, 0) * acc_bytes
 
@@ -139,7 +141,7 @@ def _mega_fallback(*, m: int, n: int, k: int, dtype: str = "float32"):
     return dict(bm=max(pick_divisor_candidates(m, safe)),
                 bn=max(pick_divisor_candidates(n, safe)),
                 bk=max(pick_divisor_candidates(k, safe)),
-                unroll=1, order="mnk", variant="blocked", acc="f32")
+                unroll=1, order="mnk", scheme="blocked", acc="f32")
 
 
 def _mega_inputs(key, *, m: int, n: int, k: int, dtype: str = "float32"):
@@ -152,19 +154,19 @@ def _mega_inputs(key, *, m: int, n: int, k: int, dtype: str = "float32"):
 
 def mega_matmul(a, b, *, bm: int = 256, bn: int = 256, bk: int = 256,
                 unroll: int = 1, order: str = "mnk",
-                variant: str = "blocked", acc: str = "f32",
+                scheme: str = "blocked", acc: str = "f32",
                 interpret: Optional[bool] = None):
     """Executable entry point for the mega space: the analysis-only
     knobs select among codegen strategies the static model scores, and
     the body runs the blocked kernel with the chosen tiling."""
-    del unroll, order, variant, acc
+    del unroll, order, scheme, acc
     return matmul_pallas(a, b, bm=bm, bn=bn, bk=bk, interpret=interpret)
 
 
 def mega_matmul_spec(*, blocks: Sequence[int] = MEGA_BLOCKS,
                      unrolls: Sequence[int] = MEGA_UNROLLS,
                      orders: Sequence[str] = MEGA_ORDERS,
-                     variants: Sequence[str] = MEGA_VARIANTS,
+                     schemes: Sequence[str] = MEGA_SCHEMES,
                      accs: Sequence[str] = MEGA_ACCS,
                      chunk_size: Optional[int] = None,
                      register: bool = False) -> KernelSpec:
@@ -181,7 +183,7 @@ def mega_matmul_spec(*, blocks: Sequence[int] = MEGA_BLOCKS,
         fn=mega_matmul,
         space={"bm": tuple(blocks), "bn": tuple(blocks),
                "bk": tuple(blocks), "unroll": tuple(unrolls),
-               "order": tuple(orders), "variant": tuple(variants),
+               "order": tuple(orders), "scheme": tuple(schemes),
                "acc": tuple(accs)},
         extract_signature=lambda a, b, **_: dict(
             m=a.shape[0], n=b.shape[1], k=a.shape[1], dtype=str(a.dtype)),

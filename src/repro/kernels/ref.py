@@ -10,7 +10,8 @@ import jax
 import jax.numpy as jnp
 
 __all__ = ["matmul_ref", "matvec_ref", "atax_ref", "bicg_ref",
-           "jacobi3d_ref", "attention_ref"]
+           "jacobi3d_ref", "attention_ref", "mlp_matmul_ref",
+           "rms_norm_ref"]
 
 
 def matmul_ref(a: jax.Array, b: jax.Array) -> jax.Array:
@@ -53,6 +54,37 @@ def jacobi3d_ref(u: jax.Array, c0: float = 0.5, c1: float = 1.0 / 12.0
     out = f
     out = out.at[1:-1, 1:-1, 1:-1].set(interior)
     return out.astype(u.dtype)
+
+
+_MLP_ACTS = {
+    "silu": jax.nn.silu,
+    "gelu": lambda x: jax.nn.gelu(x, approximate=True),
+    "relu": jax.nn.relu,
+}
+
+
+def mlp_matmul_ref(x: jax.Array, w_gate: jax.Array, w_up: jax.Array,
+                   act: str = "silu") -> jax.Array:
+    """Gated-MLP up-projection oracle: ``act(x @ w_gate) * (x @ w_up)``.
+
+    x: (M, D); w_gate, w_up: (D, F) -> (M, F).  Matmuls accumulate in
+    f32, the gate activation runs in f32, output casts back to x.dtype
+    — the same discipline `repro.models.layers.mlp` applies.
+    """
+    a = _MLP_ACTS[act]
+    gate = jnp.dot(x, w_gate, preferred_element_type=jnp.float32)
+    up = jnp.dot(x, w_up, preferred_element_type=jnp.float32)
+    return (a(gate) * up).astype(x.dtype)
+
+
+def rms_norm_ref(x: jax.Array, w: jax.Array,
+                 eps: float = 1e-6) -> jax.Array:
+    """RMSNorm oracle over the last axis; f32 mean/rsqrt/scale exactly
+    as `repro.models.layers.rms_norm` computes it."""
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    return (xf * jax.lax.rsqrt(var + eps) * w.astype(jnp.float32)
+            ).astype(x.dtype)
 
 
 def attention_ref(q: jax.Array, k: jax.Array, v: jax.Array,

@@ -85,6 +85,21 @@ def main():
                     help="tuning service to consult for cold dispatches "
                          "(http://host:port); unreachable -> serve "
                          "degraded on the local tiers")
+    ap.add_argument("--tuned-ops", action="store_true",
+                    help="route rms_norm / gated-mlp / full attention "
+                         "through the variant-aware tuned kernel "
+                         "registry (repro.kernels.ops) instead of the "
+                         "jnp layer paths")
+    ap.add_argument("--pretune", action="store_true",
+                    help="graph-level pretune before freezing: "
+                         "enumerate every kernel instance this config's "
+                         "prefill+decode dispatches and rank each into "
+                         "the tuning database (GraphTuner.tune_config)")
+    ap.add_argument("--assert-frozen", action="store_true",
+                    help="exit non-zero unless every registry dispatch "
+                         "hit the frozen tables and the database saw "
+                         "zero runtime tunes (CI gate; pair with "
+                         "--tuned-ops --pretune)")
     args = ap.parse_args()
 
     from repro import tuning_cache
@@ -103,6 +118,19 @@ def main():
     if args.tuning_server:
         _connect_tuning_server(args.tuning_server)
     print(f"[serve] tuning cache ready: {len(db)} records resident")
+
+    cfg = get_smoke(args.arch) if args.smoke else get_config(args.arch)
+    if args.pretune:
+        # Graph-level pretune (DESIGN.md §15): abstract-trace this
+        # config's prefill + decode, rank every kernel instance they
+        # dispatch.  Runs BEFORE freeze so the frozen tables cover the
+        # whole serving path.
+        from repro.core.autotuner import GraphTuner
+        rep = GraphTuner.tune_config(cfg, batch=args.batch,
+                                     prompt_len=args.prompt_len, db=db)
+        print(f"[serve] graph pretune [{cfg.name}]: "
+              f"{rep['dispatches']} dispatches, "
+              f"{len(rep['instances'])} unique kernel instances ranked")
     # Freeze the warm records into the zero-overhead dispatch tables:
     # the serving hot loop then pays one lock-free probe per kernel
     # dispatch instead of the full normalize/key/LRU path.  Any later
@@ -111,7 +139,15 @@ def main():
     n_frozen = tuning_cache.freeze()
     print(f"[serve] dispatch tables frozen: {n_frozen} entries")
 
-    cfg = get_smoke(args.arch) if args.smoke else get_config(args.arch)
+    from repro.kernels import api as kernel_api
+    from repro.models.layers import set_tuned_layers
+    if args.tuned_ops:
+        set_tuned_layers(True)
+        print("[serve] tuned ops ON: layers dispatch through the "
+              "kernel registry")
+    n_records_before = len(db)
+    kernel_api.reset_dispatch_stats()
+
     model = build_model(cfg)
     key = jax.random.PRNGKey(args.seed)
     params = model.init(key)
@@ -151,6 +187,29 @@ def main():
     print(f"[serve] decode: {dt*1e3:.1f} ms/token "
           f"({args.batch} sequences x {args.gen} tokens)")
     print(f"[serve] sample tokens[0]: {toks[0][:16].tolist()}")
+
+    st = kernel_api.dispatch_stats()
+    n_new = len(db) - n_records_before
+    print(f"[serve] dispatch audit: {st['frozen']}/{st['total']} frozen, "
+          f"{st['live']} live, {st['fallback']} fallback; "
+          f"{n_new} runtime tunes")
+    if args.assert_frozen:
+        problems = []
+        if st["total"] == 0:
+            problems.append("no dispatches routed through the kernel "
+                            "registry (missing --tuned-ops?)")
+        if st["live"] or st["fallback"]:
+            problems.append(f"non-frozen dispatches: live={st['live']} "
+                            f"fallback={st['fallback']}")
+        if st["frozen"] != st["total"]:
+            problems.append(f"frozen {st['frozen']} != total {st['total']}")
+        if n_new:
+            problems.append(f"{n_new} runtime tune(s) grew the database")
+        if problems:
+            raise SystemExit("[serve] --assert-frozen FAILED: "
+                             + "; ".join(problems))
+        print(f"[serve] --assert-frozen OK: 100% frozen dispatch, "
+              f"zero runtime tunes")
 
 
 if __name__ == "__main__":

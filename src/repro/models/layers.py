@@ -3,11 +3,24 @@
 Everything computes in ``compute_dtype`` (bf16 by default) with f32
 norms/softmax and f32 residual-safe accumulations, matching the mixed-
 precision recipe the assigned checkpoints train with.
+
+Tuned-op routing (DESIGN.md §15): when tuned layers are enabled —
+``use_tuned_layers()`` / ``set_tuned_layers(True)`` / env
+``REPRO_TUNED_LAYERS=1`` — ``rms_norm``, the gated ``mlp`` front half,
+and full-attention ``attention`` dispatch through the variant-aware
+``repro.kernels.ops`` registry (statically-ranked Pallas schedules,
+frozen-table lookup at trace time).  Disabled (the default) every
+layer runs the original jnp path, so the flag is a pure routing
+switch with no numeric surprises outside the documented kernel
+tolerances.
 """
 from __future__ import annotations
 
+import contextlib
 import dataclasses
 import math
+import os
+from contextvars import ContextVar
 from typing import Dict, Optional, Tuple
 
 import jax
@@ -18,7 +31,51 @@ from repro.models.params import Param, param
 
 __all__ = ["rms_norm", "make_rope", "apply_rope", "init_attention",
            "attention", "attention_decode", "init_mlp", "mlp",
-           "causal_mask_bias", "AttnConfig"]
+           "causal_mask_bias", "AttnConfig", "set_tuned_layers",
+           "use_tuned_layers", "tuned_layers_enabled"]
+
+
+# ---------------------------------------------------------------------------
+# tuned-op routing flag
+# ---------------------------------------------------------------------------
+
+_TUNED_LAYERS: "ContextVar[Optional[bool]]" = ContextVar(
+    "repro_tuned_layers", default=None)
+
+
+def tuned_layers_enabled() -> bool:
+    """True when layers should dispatch through `repro.kernels.ops`.
+
+    Explicit `set_tuned_layers` / `use_tuned_layers` state wins; with
+    neither set, the env var ``REPRO_TUNED_LAYERS`` decides (off by
+    default)."""
+    v = _TUNED_LAYERS.get()
+    if v is not None:
+        return v
+    return os.environ.get("REPRO_TUNED_LAYERS", "0").lower() \
+        not in ("", "0", "false", "no")
+
+
+def set_tuned_layers(on: bool) -> None:
+    """Process-wide (well: context-wide) switch; `use_tuned_layers`
+    is the scoped variant."""
+    _TUNED_LAYERS.set(bool(on))
+
+
+@contextlib.contextmanager
+def use_tuned_layers(on: bool = True):
+    """Scope in which layers route through the tuned kernel registry."""
+    tok = _TUNED_LAYERS.set(bool(on))
+    try:
+        yield
+    finally:
+        _TUNED_LAYERS.reset(tok)
+
+
+def _ops():
+    # deferred: repro.kernels imports every kernel module on first use
+    from repro.kernels import ops
+    return ops
 
 
 # ---------------------------------------------------------------------------
@@ -27,7 +84,15 @@ __all__ = ["rms_norm", "make_rope", "apply_rope", "init_attention",
 
 
 def rms_norm(x: jax.Array, w: Param, eps: float = 1e-6) -> jax.Array:
-    """RMSNorm with gamma stored directly (init ones); f32 math."""
+    """RMSNorm with gamma stored directly (init ones); f32 math.
+
+    Tuned route: flatten to (tokens, D) rows and dispatch through the
+    ``rms_norm`` registry op — same f32 mean/rsqrt/scale discipline, so
+    the two paths agree to float associativity."""
+    if tuned_layers_enabled():
+        d = x.shape[-1]
+        out = _ops().rms_norm(x.reshape(-1, d), w.value, eps=eps)
+        return out.reshape(x.shape)
     return _rms(x, w.value, eps)
 
 
@@ -179,12 +244,41 @@ def _sdpa_chunked(q, k, v, q_positions, k_positions, window, scale,
     return out[:, :s]
 
 
+def _attention_tuned(q, k, v, causal: bool):
+    """Dispatch full attention through the ``flash_attention`` registry
+    op: broadcast GQA KV heads up to H (as `_sdpa` does), transpose
+    (B,S,H,hd) -> (B,H,S,hd) for the kernel layout, and back.
+
+    Only exact for the standard prefill mask (positions = arange, no
+    sliding window) — `attention` gates on that before routing.  The
+    kernel scales by 1/sqrt(hd), matching the jnp path."""
+    b, s, h, hd = q.shape
+    kvh = k.shape[2]
+    if kvh != h:
+        rep = h // kvh
+        k = jnp.broadcast_to(k[:, :, :, None, :],
+                             (b, k.shape[1], kvh, rep, hd)
+                             ).reshape(b, k.shape[1], h, hd)
+        v = jnp.broadcast_to(v[:, :, :, None, :],
+                             (b, v.shape[1], kvh, rep, hd)
+                             ).reshape(b, v.shape[1], h, hd)
+    out = _ops().flash_attention(q.transpose(0, 2, 1, 3),
+                                 k.transpose(0, 2, 1, 3),
+                                 v.transpose(0, 2, 1, 3), causal)
+    return out.transpose(0, 2, 1, 3)
+
+
 def attention(p: Dict, x: jax.Array, cfg: AttnConfig, shd: Sharder,
               positions: Optional[jax.Array] = None,
               return_kv: bool = False, window_override=None):
     """Full-sequence (training / prefill) attention.  x: (B, S, D)."""
     b, s, d = x.shape
     window = cfg.window if window_override is None else window_override
+    # the tuned kernel implements exactly the standard prefill mask:
+    # positions = arange, full causal (or fully bidirectional) — gate
+    # on those *statically* so traced windows fall back to jnp.
+    tuned = (tuned_layers_enabled() and positions is None
+             and isinstance(window, int) and window == 0)
     if positions is None:
         positions = jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32), (b, s))
     q, k, v = _project_qkv(p, x, cfg, positions)
@@ -192,7 +286,9 @@ def attention(p: Dict, x: jax.Array, cfg: AttnConfig, shd: Sharder,
     k = shd.act(k, ("batch", "seq", "kv_heads", "head_dim"))
     v = shd.act(v, ("batch", "seq", "kv_heads", "head_dim"))
     scale = 1.0 / math.sqrt(cfg.head_dim)
-    if not cfg.causal:
+    if tuned:
+        out = _attention_tuned(q, k, v, cfg.causal)
+    elif not cfg.causal:
         out = _sdpa(q, k, v, jnp.zeros((), jnp.float32), scale)
     elif s < cfg.dense_below:
         bias = causal_mask_bias(positions[0], positions[0], window)
@@ -289,6 +385,21 @@ def init_mlp(key, d_model: int, d_ff: int, act: str = "silu_glu") -> Dict:
 
 def mlp(p: Dict, x: jax.Array, act: str, shd: Sharder) -> jax.Array:
     a = _ACTS[act.replace("_glu", "")]
+    b, s, d = x.shape
+    if tuned_layers_enabled() and "w_gate" in p:
+        # gated front half act(x@w_gate) * (x@w_up) as one registry op
+        # (variant-arbitrated fused/stream/split schedule), then the
+        # down-projection through the tuned matmul.
+        x2 = x.reshape(b * s, d)
+        h = _ops().mlp_matmul(x2, p["w_gate"].value.astype(x.dtype),
+                              p["w_up"].value.astype(x.dtype),
+                              act.replace("_glu", ""))
+        h = shd.act(h.reshape(b, s, -1), ("batch", "seq", "mlp"))
+        f = h.shape[-1]
+        y = _ops().matmul(h.reshape(b * s, f),
+                          p["w_down"].value.astype(x.dtype))
+        return shd.act(y.reshape(b, s, d), ("batch", "residual_seq",
+                                            "embed"))
     up = jnp.einsum("bsd,df->bsf", x, p["w_up"].value.astype(x.dtype))
     if "w_gate" in p:
         gate = jnp.einsum("bsd,df->bsf", x,

@@ -128,11 +128,23 @@ def init_lm(key, cfg: ModelConfig) -> Dict:
 # ---------------------------------------------------------------------------
 
 
+def _full_attention(cfg: ModelConfig) -> bool:
+    """True when every layer statically runs full (unwindowed)
+    attention.  `hybrid_windows` then encodes "full" as a *traced*
+    window >= seq — semantically a no-op, but it defeats the static
+    window==0 gate that lets `attention` route through the tuned
+    flash_attention kernel.  Drop the override entirely in that case
+    so the jnp and tuned paths both see the static full-causal mask."""
+    return cfg.family != "hybrid" or cfg.swa_window <= 0
+
+
 def _block_apply(blk: Dict, h: jax.Array, window, cfg: ModelConfig,
                  shd: Sharder, moe: bool, collect_kv: bool = False):
     """One layer; returns (h, aux_loss, (kv, ssm_state)) — the last two
     are None unless ``collect_kv`` (prefill handoff)."""
     acfg = attn_config(cfg)
+    if _full_attention(cfg):
+        window = None               # static full attention (cfg.window=0)
     aux = jnp.zeros((), jnp.float32)
     kv = sstate = None
     fam = cfg.family

@@ -36,8 +36,9 @@ from repro.tuning_cache.store import (CacheStats, DiskStore, TuningDatabase,
                                       TuningRecord)
 from repro.tuning_cache import registry
 from repro.tuning_cache.registry import (TuningProblem, clear_dispatch_memo,
-                                         freeze, frozen_lookup, frozen_table,
-                                         get_problem, is_frozen,
+                                         dispatch_key, freeze, frozen_lookup,
+                                         frozen_table, get_problem,
+                                         invalidate_kernel, is_frozen,
                                          lookup_or_tune,
                                          normalize_signature,
                                          on_dispatch_memo_clear, rank_space,
@@ -50,6 +51,7 @@ __all__ = [
     "TuningProblem", "clear_dispatch_memo", "get_problem", "lookup_or_tune",
     "normalize_signature", "on_dispatch_memo_clear", "rank_space",
     "register", "register_entry", "registered", "unregister",
+    "invalidate_kernel", "dispatch_key",
     "freeze", "thaw", "is_frozen", "frozen_lookup", "frozen_table",
     "get_default_db", "set_default_db", "reset_default_db", "pretuned_dir",
     "pretuned_path", "warm_pretuned",

@@ -178,6 +178,20 @@ def main(argv: Optional[List[str]] = None) -> int:
                        help="regenerate and diff bit-for-bit against "
                             "the shipped JSONL instead of writing; "
                             "exit 1 on any mismatch")
+    p_pre.add_argument("--config", action="append", default=[],
+                       metavar="ARCH",
+                       help="graph-level pretune: enumerate every "
+                            "kernel instance this serving config's "
+                            "prefill+decode dispatches (abstract trace, "
+                            "nothing executes) and rank each into the "
+                            "database (repeatable)")
+    p_pre.add_argument("--smoke", action="store_true",
+                       help="use the smoke-sized variant of each "
+                            "--config arch")
+    p_pre.add_argument("--batch", type=int, default=2,
+                       help="serving batch size for --config (default 2)")
+    p_pre.add_argument("--prompt-len", type=int, default=64,
+                       help="prompt length for --config (default 64)")
 
     p_srv = add_sub("serve",
                     help="serve the database over HTTP (coalesced "
@@ -239,6 +253,31 @@ def main(argv: Optional[List[str]] = None) -> int:
         if args.out and len(targets) > 1:
             raise SystemExit("--out only applies to a single target; "
                              "--all-targets writes each shipped path")
+        if args.config:
+            if args.verify or args.kernels or args.out:
+                raise SystemExit("--config pretunes a serving graph "
+                                 "into the database and cannot be "
+                                 "combined with --verify/--kernels/--out")
+            from repro.configs import get_config, get_smoke
+            from repro.core.autotuner import GraphTuner
+            for target in targets:
+                spec = resolve_target(target)
+                for arch in args.config:
+                    cfg = (get_smoke(arch) if args.smoke
+                           else get_config(arch))
+                    t0 = time.perf_counter()
+                    rep = GraphTuner.tune_config(
+                        cfg, batch=args.batch,
+                        prompt_len=args.prompt_len, db=db, spec=spec)
+                    dt = time.perf_counter() - t0
+                    print(f"[{spec.name}] {arch} ({cfg.name}): "
+                          f"{rep['dispatches']} dispatches, "
+                          f"{len(rep['instances'])} unique instances "
+                          f"tuned in {dt*1e3:.0f} ms")
+                    for inst in rep["instances"]:
+                        print(f"    {inst['kernel']:<16} "
+                              f"{inst['signature']} -> {inst['params']}")
+            return 0
         if args.verify and args.kernels:
             raise SystemExit("--verify diffs the full shipped grid and "
                              "cannot be combined with --kernels")

@@ -65,6 +65,7 @@ from repro.tuning_cache.keys import (CacheKey, MODEL_VERSION,
 from repro.tuning_cache.store import TuningDatabase, TuningRecord, now_unix
 
 __all__ = ["TuningProblem", "register", "register_entry", "unregister",
+           "invalidate_kernel", "dispatch_key",
            "get_problem", "registered", "rank_space", "lookup_or_tune",
            "clear_dispatch_memo", "on_dispatch_memo_clear", "reset_models",
            "freeze", "thaw", "is_frozen", "frozen_lookup", "frozen_table",
@@ -170,6 +171,23 @@ def unregister(kernel_id: str) -> None:
     memo shard and thaws any frozen table so a re-registration under
     the same id can never be served another declaration's params."""
     if _REGISTRY.pop(kernel_id, None) is not None:
+        thaw()
+    with _models_lock:
+        _DISPATCH_MEMO.pop(kernel_id, None)
+
+
+def invalidate_kernel(kernel_id: str) -> None:
+    """Invalidate one kernel's dispatch state in place: thaw the frozen
+    tier (its tables may hold this kernel's now-stale records) and drop
+    the kernel's live memo shard.  The registration itself stays.
+
+    This is the hook `register_variant` / `unregister_variant` fire —
+    a variant-set mutation changes the kernel's key extras, so every
+    frozen or memoized answer for it belongs to a key the kernel no
+    longer asks.  Same invalidation discipline as :func:`unregister`,
+    without removing the entry.
+    """
+    if kernel_id in _REGISTRY:
         thaw()
     with _models_lock:
         _DISPATCH_MEMO.pop(kernel_id, None)
@@ -368,6 +386,37 @@ def _binder_of(entry: Any) -> Optional[SigBinder]:
     get = getattr(entry, "sig_binder", None)
     return get() if get is not None else None
 
+
+def _key_extras_of(entry: Any) -> Dict[str, Any]:
+    """Entry-declared extra cache-key signature entries (e.g. the
+    variant-set digest a `KernelSpec` in variant mode contributes);
+    ``{}`` for entries without the hook."""
+    get = getattr(entry, "key_extras", None)
+    return get() if get is not None else {}
+
+
+def dispatch_key(kernel_id: str, *, spec: ChipSpec, mode: str,
+                 model_name: Optional[str],
+                 signature: Dict[str, Any]) -> CacheKey:
+    """The one `CacheKey` construction every dispatch tier uses.
+
+    Folds the entry's :func:`_key_extras_of` into the signature before
+    keying, so the client path (`lookup_or_tune`), the tuning service
+    (`resolve_one` — whose single-flight coalescing is keyed on the
+    resulting digest), and the frozen-table build all agree on which
+    records answer which questions.  Two variant sets of one logical op
+    can therefore never share a digest.  ``signature`` must already be
+    normalized.
+    """
+    extras = _key_extras_of(_REGISTRY.get(kernel_id))
+    clash = set(extras) & set(signature)
+    if clash:
+        raise ValueError(
+            f"kernel {kernel_id!r}: signature keys {sorted(clash)} "
+            f"collide with reserved cache-key extras")
+    return make_key(kernel_id, spec=spec, mode=mode,
+                    model_name=model_name, **signature, **extras)
+
 # Callbacks run by clear_dispatch_memo.  The kernel layer registers its
 # per-process dispatch state here (e.g. the once-per-kernel failure log
 # in repro.kernels.api) so tests that reset the memo reset everything,
@@ -507,6 +556,14 @@ def _build_frozen_tables(db: TuningDatabase, gen: int
         except ValueError:
             continue
         if sig.pop("model", None) != _model_for(spec).fingerprint():
+            continue
+        # Key extras ride in the stored signature but are not binder
+        # axes: pop and require an exact match with the entry's CURRENT
+        # extras (e.g. the variant-set digest).  A record ranked under a
+        # since-mutated variant set silently stays out of the frozen
+        # tier — same posture as the model check above.
+        extras = _key_extras_of(_REGISTRY.get(rec.key.kernel_id))
+        if sig.pop("variants", None) != extras.get("variants"):
             continue
         vals = binder.key(sig)
         if vals is None:
@@ -725,8 +782,8 @@ def lookup_or_tune(kernel_id: str, *,
                 memo_key = None
     model = model or _model_for(spec)
     signature = normalize_signature(kernel_id, signature)
-    key = make_key(kernel_id, spec=spec, mode=mode,
-                   model_name=model.fingerprint(), **signature)
+    key = dispatch_key(kernel_id, spec=spec, mode=mode,
+                       model_name=model.fingerprint(), signature=signature)
 
     if use_service:
         # Service tier (DESIGN.md §13): between the live memo and the

@@ -43,7 +43,7 @@ from typing import Any, Callable, Dict, Optional, Tuple
 from repro.core.hw import resolve_target
 from repro.core.target import use_target
 from repro.tuning_cache import registry as registry_mod
-from repro.tuning_cache.keys import fingerprint_spec, make_key
+from repro.tuning_cache.keys import fingerprint_spec
 from repro.tuning_cache.store import TuningDatabase, TuningRecord, now_unix
 from repro.tuning_cache.service import protocol
 from repro.tuning_cache.service.faults import (CORRUPT, DELAY, DISCONNECT,
@@ -209,8 +209,14 @@ class TuningServer:
             sig = registry_mod.normalize_signature(
                 kernel_id, dict(req.get("signature") or {}))
             model = registry_mod._model_for(spec)
-            key = make_key(kernel_id, spec=spec, mode=mode,
-                           model_name=model.fingerprint(), **sig)
+            # The shared extras-aware key builder: the digest this key
+            # yields is both the single-flight coalescing key below and
+            # the client's acceptance guard, so variant-set extras MUST
+            # ride here exactly as they do in the client's own key —
+            # two variants of one logical op never share a leader.
+            key = registry_mod.dispatch_key(
+                kernel_id, spec=spec, mode=mode,
+                model_name=model.fingerprint(), signature=sig)
         except Exception as e:
             self._count("errors")
             return {"error": f"{type(e).__name__}: {e}"}

@@ -49,6 +49,8 @@ _SIGS = {
     "matvec": dict(m=512, n=512, dtype="float32"),
     "jacobi3d": dict(z=32, y=32, x=32, dtype="float32"),
     "stencil2d": dict(y=512, x=512, dtype="float32"),
+    "rms_norm": dict(m=256, d=256, dtype="float32"),
+    "mlp_matmul": dict(m=256, d=256, f=512, act="silu", dtype="float32"),
 }
 
 
@@ -202,6 +204,36 @@ def test_invalidated_by_memo_clear_db_swap_target_change_unregister():
         assert not tuning_cache.is_frozen()
     finally:
         api.register_spec(spec)
+
+
+def test_invalidated_by_variant_register_and_unregister():
+    """Frozen tables bind each kernel's variant-set digest: removing or
+    (re-)adding a variant must thaw, and a refreeze after the variant
+    set changed excludes the now-stale records (fresh dispatch re-ranks
+    under the new digest rather than serving the old winner)."""
+    fsig = _SIGS["flash_attention"]
+    tuning_cache.lookup_or_tune("flash_attention", **fsig)
+
+    tuning_cache.freeze()
+    v = api.unregister_variant("flash_attention", "blocked")
+    try:
+        assert not tuning_cache.is_frozen()
+        # refreeze under the reduced set: the record ranked under the
+        # full set carries the old digest and must NOT be frozen in
+        tuning_cache.freeze()
+        assert tuning_cache.frozen_lookup("flash_attention", fsig) is None
+        p_reduced = tuning_cache.lookup_or_tune("flash_attention", **fsig)
+        assert p_reduced["variant"] == "flash"
+    finally:
+        api.register_variant("flash_attention", v)
+    # re-registering thawed again, and the original digest is warm in
+    # the database: dispatch serves the full-set winner without a tune
+    assert not tuning_cache.is_frozen()
+    db = tuning_cache.get_default_db()
+    tunes = db.stats.tunes
+    p_full = tuning_cache.lookup_or_tune("flash_attention", **fsig)
+    assert db.stats.tunes == tunes
+    assert p_full["variant"] in api.get_spec("flash_attention").variant_ids()
 
 
 def test_op_wrapper_picks_up_thaw_and_refreeze():

@@ -255,7 +255,7 @@ def _mega_small():
     # 40 divides nothing in 192 = 2^6*3; unroll 3 only divides bk 24/48
     spec = mega_matmul_spec(blocks=(8, 16, 24, 32, 40, 48),
                             unrolls=(1, 2, 3), orders=("mnk", "kmn"),
-                            variants=("blocked",), accs=("f32",))
+                            schemes=("blocked",), accs=("f32",))
     return spec.problem(m=192, n=192, k=192, dtype="float32")
 
 

@@ -1,0 +1,305 @@
+"""Kernel-variant dispatch tests (ISSUE 9 acceptance).
+
+Covers: numeric validation of every registered implementation of every
+multi-variant op against the pure-jnp oracles in kernels/ref.py (both
+dtypes), joint-space structure (membership constraint, pinned foreign
+axes, per-variant constraints pruning rows BEFORE feature
+construction), scalar==batch static-analysis parity over the whole
+joint lattice, launch-param filtering (pinned foreign axes never reach
+a variant's entry point), variant-set digest separation, registration
+validation errors, and end-to-end cold rank -> dispatch through the
+public ops.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+import repro.kernels  # noqa: F401  (registers dispatch problems)
+from repro import tuning_cache
+from repro.core import set_default_target
+from repro.core.search import Constraint
+from repro.kernels import api, ref
+from repro.kernels.variants import (KernelVariant, VARIANT_AXIS,
+                                    joint_space, joint_static_info,
+                                    joint_static_info_batch,
+                                    variants_fingerprint)
+from repro.tuning_cache import TuningDatabase
+
+
+@pytest.fixture(autouse=True)
+def _fresh_state():
+    set_default_target(None)
+    tuning_cache.set_default_db(TuningDatabase())
+    yield
+    tuning_cache.thaw()
+    set_default_target(None)
+    tuning_cache.reset_default_db()
+
+
+def _cols_of(rows):
+    return {name: np.array([r[name] for r in rows])
+            for name in rows[0]}
+
+
+# ---------------------------------------------------------------------------
+# Numeric validation: every variant vs. the jnp oracle
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("dtype,tol", [("float32", 2e-5),
+                                       ("bfloat16", 3e-2)])
+@pytest.mark.parametrize("causal", [True, False])
+def test_attention_variants_match_reference(dtype, tol, causal):
+    spec = api.get_spec("flash_attention")
+    assert set(spec.variant_ids()) == {"flash", "blocked"}
+    key = jax.random.PRNGKey(0)
+    q, k, v = (jax.random.normal(kk, (2, 2, 64, 32), np.dtype(dtype))
+               for kk in jax.random.split(key, 3))
+    want = np.asarray(ref.attention_ref(q, k, v, causal),
+                      dtype=np.float32)
+    launch = {"flash": dict(bq=32, bkv=32), "blocked": dict(bq=32)}
+    for vid, kw in launch.items():
+        got = np.asarray(spec._variants[vid].fn(q, k, v, causal, **kw),
+                         dtype=np.float32)
+        np.testing.assert_allclose(got, want, rtol=tol, atol=tol,
+                                   err_msg=f"variant {vid}")
+
+
+@pytest.mark.parametrize("dtype,tol", [("float32", 2e-4),
+                                       ("bfloat16", 3e-1)])
+@pytest.mark.parametrize("act", ["silu", "gelu"])
+def test_mlp_variants_match_reference(dtype, tol, act):
+    spec = api.get_spec("mlp_matmul")
+    assert set(spec.variant_ids()) == {"fused", "stream", "split"}
+    key = jax.random.PRNGKey(1)
+    kx, kg, ku = jax.random.split(key, 3)
+    x = jax.random.normal(kx, (64, 64), np.dtype(dtype))
+    wg = jax.random.normal(kg, (64, 128), np.dtype(dtype))
+    wu = jax.random.normal(ku, (64, 128), np.dtype(dtype))
+    want = np.asarray(ref.mlp_matmul_ref(x, wg, wu, act),
+                      dtype=np.float32)
+    launch = {"fused": dict(bm=32, bn=64, bk=32),
+              "stream": dict(bm=32, bn=64),
+              "split": dict(bm=32, bn=64, bk=32)}
+    for vid, kw in launch.items():
+        got = np.asarray(spec._variants[vid].fn(x, wg, wu, act, **kw),
+                         dtype=np.float32)
+        np.testing.assert_allclose(got, want, rtol=tol, atol=tol,
+                                   err_msg=f"variant {vid}")
+
+
+def test_rms_norm_matches_reference():
+    from repro.kernels import ops
+    key = jax.random.PRNGKey(2)
+    x = jax.random.normal(key, (96, 64), jnp.float32)
+    w = jax.random.normal(jax.random.split(key)[0], (64,), jnp.float32)
+    np.testing.assert_allclose(np.asarray(ops.rms_norm(x, w)),
+                               np.asarray(ref.rms_norm_ref(x, w)),
+                               rtol=2e-6, atol=2e-6)
+
+
+# ---------------------------------------------------------------------------
+# Joint-space structure
+# ---------------------------------------------------------------------------
+
+FSIG = dict(b=2, h=2, sq=128, skv=256, d=64, causal=True,
+            dtype="float32")
+MSIG = dict(m=64, d=128, f=256, act="silu", dtype="float32")
+
+
+def test_joint_space_membership_and_pinned_foreign_axes():
+    """One joint row per (variant, own-config): the 'blocked' variant
+    declares only bq, so its rows pin bkv to the first union candidate
+    — foreign axes never multiply a variant's row count."""
+    spec = api.get_spec("flash_attention")
+    space = spec.search_space(**FSIG)
+    rows = space.enumerate()
+    assert set(space.names) == {VARIANT_AXIS, "bq", "bkv"}
+    by_vid = {}
+    for r in rows:
+        by_vid.setdefault(r[VARIANT_AXIS], []).append(r)
+    bqs = (8, 16, 32, 64, 128)          # divisors of sq=128
+    bkvs = (8, 16, 32, 64, 128, 256)    # divisors of skv=256
+    assert len(by_vid["flash"]) == len(bqs) * len(bkvs)
+    assert len(by_vid["blocked"]) == len(bqs)
+    pin = bkvs[0]
+    assert all(r["bkv"] == pin for r in by_vid["blocked"])
+    # satisfies() routes scalars through the same membership predicate
+    assert space.satisfies(dict(variant="blocked", bq=32, bkv=pin))
+    assert not space.satisfies(dict(variant="blocked", bq=32, bkv=64))
+    assert space.satisfies(dict(variant="flash", bq=32, bkv=64))
+
+
+def test_dead_variant_pruned_before_feature_construction():
+    """A variant whose constraints kill every row must vanish during
+    constraint pushdown — its analyzer is never invoked."""
+    def _alive_analysis(p, *, m, dtype="float32"):
+        bm = np.asarray(p["bm"], dtype=np.int64)
+        return dict(in_blocks=[(bm, 128)], out_blocks=[(bm, 128)],
+                    in_dtypes=[dtype], out_dtypes=[dtype],
+                    flops_per_step=2.0 * bm * 128,
+                    grid_steps=m // bm)
+
+    def _boom(p, **sig):
+        raise AssertionError("dead variant's analyzer must not run")
+
+    alive = KernelVariant("alive", fn=lambda *a, **k: None,
+                          space={"bm": api.divisors("m", (8, 16))},
+                          analysis=_alive_analysis)
+    dead = KernelVariant(
+        "dead", fn=lambda *a, **k: None,
+        space={"bm": api.divisors("m", (8, 16))},
+        analysis=_boom,
+        constraints=(Constraint(
+            lambda cols: np.asarray(cols["bm"]) < 0, name="never"),))
+    variants = {"alive": alive, "dead": dead}
+    sig = dict(m=64, dtype="float32")
+    space = joint_space(variants, sig)
+    rows = space.enumerate()
+    assert rows and all(r[VARIANT_AXIS] == "alive" for r in rows)
+    info = joint_static_info_batch(variants, _cols_of(rows), sig)
+    assert len(info) == len(rows) and info.feasible.all()
+
+
+def test_unknown_variant_rows_stay_infeasible():
+    """A stale lattice row whose variant id has been unregistered can
+    never win a rank (batch: inf/infeasible; scalar: KeyError)."""
+    def _an(p, *, m, dtype="float32"):
+        bm = np.asarray(p["bm"], dtype=np.int64)
+        return dict(in_blocks=[(bm, 8)], out_blocks=[(bm, 8)],
+                    in_dtypes=[dtype], out_dtypes=[dtype],
+                    flops_per_step=1.0 * bm, grid_steps=m // bm)
+
+    alive = KernelVariant("alive", fn=lambda *a, **k: None,
+                          space={"bm": api.divisors("m", (8,))},
+                          analysis=_an)
+    sig = dict(m=64, dtype="float32")
+    cols = {VARIANT_AXIS: np.array(["alive", "ghost"]),
+            "bm": np.array([8, 8])}
+    info = joint_static_info_batch({"alive": alive}, cols, sig)
+    assert bool(info.feasible[0]) and not bool(info.feasible[1])
+    assert np.isinf(info.pipe[1])
+    with pytest.raises(KeyError):
+        joint_static_info({"alive": alive},
+                          {VARIANT_AXIS: "ghost", "bm": 8}, sig)
+
+
+def test_scalar_batch_parity_over_joint_lattice():
+    """Row i of the batched joint analysis must match both the scalar
+    probe (feasibility + pipeline floor) and a single-row batch of the
+    same params (full feature row) — rank_space and satisfies() agree
+    by construction."""
+    spec = api.get_spec("mlp_matmul")
+    space = spec.search_space(**MSIG)
+    rows = space.enumerate()
+    assert {r[VARIANT_AXIS] for r in rows} == {"fused", "stream",
+                                              "split"}
+    batch = spec.static_info_batch(_cols_of(rows), **MSIG)
+    assert len(batch) == len(rows)
+    for i in range(0, len(rows), 7):
+        r = rows[i]
+        one = spec.static_info_batch(_cols_of([r]), **MSIG)
+        np.testing.assert_array_equal(batch.F[i], one.F[0])
+        assert batch.feasible[i] == one.feasible[0]
+        np.testing.assert_allclose(batch.pipe[i], one.pipe[0])
+        scalar = spec.static_info(dict(r), **MSIG)
+        assert bool(batch.feasible[i]) == scalar.feasible()
+        pipe = (scalar.occupancy.predicted_step_time
+                * max(scalar.occupancy.grid_steps, 1))
+        np.testing.assert_allclose(batch.pipe[i], pipe)
+
+
+# ---------------------------------------------------------------------------
+# Launch filtering, digests, registration validation
+# ---------------------------------------------------------------------------
+
+
+def test_launch_filters_pinned_foreign_axes():
+    """A joint winner carries the union axes; the launch must pass a
+    variant only its OWN axes (the stream variant has no bk)."""
+    from repro.kernels.mlp_matmul import mlp_matmul_stream_pallas
+    spec = api.get_spec("mlp_matmul")
+    sig = spec.normalize(MSIG)
+    fn, launch, complete = spec._launch(
+        {VARIANT_AXIS: "stream", "bm": 32, "bn": 64, "bk": 8}, sig)
+    assert fn is mlp_matmul_stream_pallas
+    assert complete and set(launch) == {"bm", "bn"}
+    # an unregistered winner falls back to the primary implementation
+    fn, launch, complete = spec._launch(
+        {VARIANT_AXIS: "ghost", "bm": 32}, sig)
+    assert not complete and launch and VARIANT_AXIS not in launch
+
+
+def test_variant_digest_separation():
+    """key_extras carries the structural variant-set digest: any change
+    to the set (or to a variant's axis declarations) re-keys every
+    record, and restoring the set restores the digest."""
+    spec = api.get_spec("flash_attention")
+    d_full = spec.key_extras()["variants"]
+    v = api.unregister_variant("flash_attention", "blocked")
+    try:
+        d_reduced = spec.key_extras()["variants"]
+        assert d_reduced != d_full
+    finally:
+        api.register_variant("flash_attention", v)
+    assert spec.key_extras()["variants"] == d_full
+    # structural: same ids, different axis declaration -> new digest
+    a = {"x": KernelVariant("x", fn=lambda: None,
+                            space={"bm": api.divisors("m", (8, 16))},
+                            analysis=lambda p, **s: {})}
+    b = {"x": KernelVariant("x", fn=lambda: None,
+                            space={"bm": api.divisors("m", (8, 32))},
+                            analysis=lambda p, **s: {})}
+    assert variants_fingerprint(a) != variants_fingerprint(b)
+    # single-implementation kernels contribute no extras at all
+    assert api.get_spec("matmul").key_extras() == {}
+
+
+def test_variant_registration_validation():
+    spec = api.get_spec("flash_attention")
+    with pytest.raises(ValueError, match="primary"):
+        spec.remove_variant("flash")
+    with pytest.raises(KeyError):
+        spec.remove_variant("nope")
+    dup = KernelVariant("blocked", fn=lambda *a, **k: None,
+                        space={"bq": api.divisors("sq", (8,))},
+                        analysis=lambda p, **s: {})
+    with pytest.raises(ValueError, match="already registered"):
+        spec.add_variant(dup)
+    with pytest.raises(ValueError, match="reserved"):
+        KernelVariant("x", fn=lambda: None,
+                      space={VARIANT_AXIS: (1, 2)},
+                      analysis=lambda p, **s: {})
+    # a variant's analyzer must speak the primary signature schema
+    bad = KernelVariant("bad", fn=lambda *a, **k: None,
+                        space={"bq": api.divisors("sq", (8,))},
+                        analysis=lambda p, *, bogus: {})
+    with pytest.raises(ValueError, match="bogus"):
+        spec.add_variant(bad)
+
+
+# ---------------------------------------------------------------------------
+# End to end: cold rank -> dispatch through the public op
+# ---------------------------------------------------------------------------
+
+
+def test_joint_rank_and_dispatch_end_to_end():
+    set_default_target("tpu-v5e")
+    spec = api.get_spec("mlp_matmul")
+    p = tuning_cache.lookup_or_tune("mlp_matmul", **MSIG)
+    assert p[VARIANT_AXIS] in spec.variant_ids()
+    assert spec.search_space(**MSIG).satisfies(p)
+    from repro.kernels import ops
+    api.reset_dispatch_stats()          # the counters are process-global
+    key = jax.random.PRNGKey(3)
+    kx, kg, ku = jax.random.split(key, 3)
+    x = jax.random.normal(kx, (64, 128), jnp.float32)
+    wg = jax.random.normal(kg, (128, 256), jnp.float32)
+    wu = jax.random.normal(ku, (128, 256), jnp.float32)
+    np.testing.assert_allclose(
+        np.asarray(ops.mlp_matmul(x, wg, wu, "silu")),
+        np.asarray(ref.mlp_matmul_ref(x, wg, wu, "silu")),
+        rtol=2e-4, atol=2e-4)
+    st = api.dispatch_stats()
+    assert st["total"] >= 1 and st["fallback"] == 0
