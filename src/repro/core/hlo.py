@@ -199,15 +199,86 @@ def _find_close(s: str) -> int:
     return len(s)
 
 
-def _trip_count(comp: HloComputation) -> Optional[int]:
-    """Max s32[] constant in a while-condition computation."""
+_DIRECTION_RE = re.compile(r"direction=([A-Z]+)")
+
+
+def _const_value(comp: HloComputation, operand: str) -> Optional[int]:
+    ins = comp.by_name.get(operand)
+    if ins is None or ins.opcode != "constant":
+        return None
+    m = _CONST_RE.search(ins.line)
+    return int(m.group(1)) if m else None
+
+
+def _compare_bound(comp: HloComputation,
+                   ins: HloInstruction) -> Optional[int]:
+    """Trip count implied by one induction-variable compare against an
+    s32[] constant: ``iv < c`` runs c times (iv counts from 0), ``iv
+    <= c`` runs c+1, ``iv != c`` runs c; mirrored when the constant is
+    on the left.  Anything else (EQ, two constants, no direction) is
+    not statically recoverable here."""
+    if ins.opcode != "compare" or len(ins.operands) < 2:
+        return None
+    md = _DIRECTION_RE.search(ins.line)
+    if not md:
+        return None
+    d = md.group(1)
+    c = _const_value(comp, ins.operands[1])
+    if c is not None:                       # iv <dir> constant
+        return {"LT": c, "LE": c + 1, "NE": c}.get(d)
+    c = _const_value(comp, ins.operands[0])
+    if c is not None:                       # constant <dir> iv
+        return {"GT": c, "GE": c + 1, "NE": c}.get(d)
+    return None
+
+
+def _root_bound(comp: HloComputation, ins: Optional[HloInstruction],
+                depth: int = 4) -> Optional[int]:
+    """Chase the ROOT's producer chain to the compare that bounds the
+    loop (converts/copies pass through; AND runs until the *tightest*
+    clause fails, OR until the loosest)."""
+    if ins is None or depth <= 0:
+        return None
+    op = ins.opcode
+    if op == "compare":
+        return _compare_bound(comp, ins)
+    if op in ("convert", "copy", "bitcast", "get-tuple-element", "tuple"):
+        nxt = comp.by_name.get(ins.operands[0]) if ins.operands else None
+        return _root_bound(comp, nxt, depth - 1)
+    if op in ("and", "or"):
+        vals = [v for v in (_root_bound(comp, comp.by_name.get(o),
+                                        depth - 1)
+                            for o in ins.operands) if v is not None]
+        if not vals:
+            return None
+        return min(vals) if op == "and" else max(vals)
+    return None
+
+
+def _trip_count(comp: HloComputation) -> Tuple[Optional[int], bool]:
+    """(trip count, exact) of a while-condition computation.
+
+    Exact path: the bound is recovered from the compare feeding the
+    ROOT (``compare(iv, constant(16)), direction=LT`` -> 16), so an
+    unrelated larger constant elsewhere in the condition cannot
+    overcount the loop.  Fallback: the old max-s32[]-constant heuristic
+    with ``exact=False`` — callers count it in ``unknown_loops``.
+    """
+    root = None
+    for ins in comp.instructions:
+        if ins.line.lstrip().startswith("ROOT"):
+            root = ins
+    if root is not None:
+        tc = _root_bound(comp, root)
+        if tc is not None:
+            return tc, True
     best = None
     for ins in comp.instructions:
         for m in _CONST_RE.finditer(ins.line):
             v = int(m.group(1))
             if best is None or v > best:
                 best = v
-    return best
+    return best, False
 
 
 def _propagate_multipliers(mod: HloModule) -> None:
@@ -237,13 +308,17 @@ def _propagate_multipliers(mod: HloModule) -> None:
                 mcond = re.search(r"condition=%?([\w.\-]+)", ins.line)
                 if mcond:
                     cond_name = mcond.group(1)
-                tc = None
+                tc, exact = None, False
                 if cond_name and cond_name in mod.computations:
-                    tc = _trip_count(mod.computations[cond_name])
+                    tc, exact = _trip_count(mod.computations[cond_name])
                 if tc is None:
                     mod.unknown_loops += 1
                     trip = 1.0
                 else:
+                    if not exact:
+                        # heuristic bound: usable, but flagged so
+                        # consumers can see the census is approximate
+                        mod.unknown_loops += 1
                     trip = float(max(tc, 1))
             for callee in ins.callees:
                 edge = (cname, ins.name, callee)

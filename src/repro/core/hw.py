@@ -302,6 +302,18 @@ def resolve_target(target: Optional[Union[str, "ChipSpec"]] = None
         f"GPUs: {sorted(k for k in GPU_TABLE if '-' in k)}")
 
 
+def isa_family(spec: Optional[Union[str, "ChipSpec"]] = None) -> str:
+    """Stable ISA-family key for the per-family instruction tables
+    (`repro.core.isa`): GPU specs group by SASS generation (their
+    ``family`` — one latency profile per architecture, many parts), TPU
+    specs are one pipeline family per generation (their canonical
+    name).  Resolves names/None like `resolve_target`."""
+    spec = resolve_target(spec)
+    if isinstance(spec, GpuSpec):
+        return spec.family
+    return spec.name
+
+
 def require_tpu(spec: "ChipSpec", what: str) -> TpuSpec:
     """Resolve + family-check for the TPU-only layers.
 

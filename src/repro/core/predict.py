@@ -228,12 +228,28 @@ def calibrate(mixes: Sequence[InstructionMix],
     return CostModel(coeffs=coeffs, mode=mode, name=base.name + "-calibrated")
 
 
+def _avg_ranks(x: np.ndarray) -> np.ndarray:
+    """Average (fractional) ranks: tied values share the mean of the
+    ranks they span — the standard Spearman tie convention."""
+    sx = np.sort(x)
+    lo = np.searchsorted(sx, x, side="left")
+    hi = np.searchsorted(sx, x, side="right")
+    return (lo + hi - 1) / 2.0
+
+
 def spearman(a: Sequence[float], b: Sequence[float]) -> float:
-    """Spearman rank correlation (used for Fig. 5-style validation)."""
+    """Spearman rank correlation (used for Fig. 5-style validation).
+
+    Ties get average ranks.  Convention: a constant (zero-variance)
+    vector carries no ranking information, so its correlation with
+    anything — including another constant vector — is defined as 0.0
+    rather than NaN; a flat predictor must score as uninformative, not
+    poison downstream aggregation.
+    """
     a = np.asarray(a, dtype=np.float64)
     b = np.asarray(b, dtype=np.float64)
-    ra = np.argsort(np.argsort(a)).astype(np.float64)
-    rb = np.argsort(np.argsort(b)).astype(np.float64)
+    ra = _avg_ranks(a)
+    rb = _avg_ranks(b)
     ra -= ra.mean(); rb -= rb.mean()
     denom = np.sqrt((ra ** 2).sum() * (rb ** 2).sum())
     return float((ra * rb).sum() / denom) if denom else 0.0

@@ -405,6 +405,16 @@ class KernelSpec:
     reference: Optional[Callable[..., Any]] = None
     pretune: Tuple[Dict[str, Any], ...] = ()
     cuda: Optional[CudaProfile] = None
+    # Cost-model tier this kernel's default dispatch ranks under: None
+    # (the process default, see `tuning_cache.set_default_model`) or a
+    # kind from `tuning_cache.MODEL_KINDS` — "eq6" (Eq. 6 CPI-linear)
+    # or "pipeline" (latency-table scoreboard reranker, DESIGN.md §16).
+    model: Optional[str] = None
+    # Optional per-config instruction stream for the pipeline tier:
+    # ``schedule(p, **signature)`` returns (class, units[, dep]) rows
+    # (or an `repro.core.pipeline.InstructionStream`).  Omitted, the
+    # stream is synthesized from the kernel's 7-feature mix.
+    schedule: Optional[Callable[..., Any]] = None
     # Feasibility constraints over the declared axes: a sequence of
     # `repro.core.search.Constraint` (or bare columns->mask callables),
     # or a single ``(**signature) -> sequence`` factory for constraints
@@ -427,6 +437,12 @@ class KernelSpec:
         if not self.kernel_id or not isinstance(self.kernel_id, str):
             raise ValueError(f"kernel_id must be a non-empty string, "
                              f"got {self.kernel_id!r}")
+        if self.model is not None:
+            kinds = tuning_cache.MODEL_KINDS
+            if self.model not in kinds:
+                raise ValueError(
+                    f"@tuned_kernel({self.kernel_id!r}): model must be "
+                    f"one of {kinds}, got {self.model!r}")
         self.space = _coerce_space(self.kernel_id, self.space)
         if VARIANT_AXIS in self.space:
             raise ValueError(
@@ -693,7 +709,9 @@ class KernelSpec:
             space=self.search_space(**sig),
             static_info=lambda p: self.static_info(p, **sig),
             static_info_batch=lambda c: self.static_info_batch(c, **sig),
-            chunk_size=self.chunk_size)
+            chunk_size=self.chunk_size,
+            schedule=(lambda p, _sig=sig: self.schedule(p, **_sig))
+                     if self.schedule is not None else None)
 
     def _cuda_problem(self, gpu: GpuSpec,
                       sig: Dict[str, Any]) -> "tuning_cache.TuningProblem":
@@ -892,6 +910,8 @@ def tuned_kernel(kernel_id: str, *,
                  reference: Optional[Callable[..., Any]] = None,
                  pretune: Sequence[Mapping[str, Any]] = (),
                  cuda: Optional[CudaProfile] = None,
+                 model: Optional[str] = None,
+                 schedule: Optional[Callable[..., Any]] = None,
                  constraints: Any = None,
                  chunk_size: Optional[int] = None,
                  variants: Sequence[KernelVariant] = (),
@@ -910,7 +930,8 @@ def tuned_kernel(kernel_id: str, *,
                           extract_signature=signature, analysis=static_info,
                           fallback=fallback, make_inputs=make_inputs,
                           reference=reference, pretune=tuple(pretune),
-                          cuda=cuda, constraints=constraints,
+                          cuda=cuda, model=model, schedule=schedule,
+                          constraints=constraints,
                           chunk_size=chunk_size, variants=tuple(variants),
                           primary_variant=primary_variant)
         register_spec(spec)

@@ -63,6 +63,26 @@ def _matmul_analysis(p, *, m: int, n: int, k: int, dtype: str = "float32"):
     )
 
 
+def _matmul_schedule(p, *, m: int, n: int, k: int, dtype: str = "float32"):
+    """Per-K-step instruction stream for the pipeline tier (DESIGN.md
+    §16): the kernel's actual phase order — stage both operand tiles,
+    MXU-contract into the VMEM accumulator, amortized result flush —
+    rather than the synthesized class-ordered stream.  Row format:
+    ``(class, units[, dep])`` with ``dep`` an index into the stream."""
+    bm = min(int(p["bm"]), m)
+    bn = min(int(p["bn"]), n)
+    bk = min(int(p["bk"]), k)
+    eb = np.dtype(dtype).itemsize
+    return [
+        ("hbm", float((bm * bk + bk * bn) * eb)),          # 0: tile DMA in
+        ("vmem", float((bm * bk + bk * bn + bm * bn) * eb), 0),  # 1: staging
+        ("mxu", 2.0 * bm * bn * bk, 1),                    # 2: contraction
+        # result tile leaves once per (i, j) cell, i.e. every K/bk steps
+        ("hbm", float(bm * bn * eb) / max(cdiv(k, bk), 1)),
+        ("ctrl", 1.0),                                     # grid bookkeeping
+    ]
+
+
 def _matmul_inputs(key, *, m: int, n: int, k: int, dtype: str = "float32"):
     ka, kb = jax.random.split(key)
     dt = np.dtype(dtype)
@@ -78,6 +98,7 @@ def _matmul_inputs(key, *, m: int, n: int, k: int, dtype: str = "float32"):
     signature=lambda a, b, **_: dict(m=a.shape[0], n=b.shape[1],
                                      k=a.shape[1], dtype=str(a.dtype)),
     static_info=_matmul_analysis,
+    schedule=_matmul_schedule,
     make_inputs=_matmul_inputs,
     reference=matmul_ref,
     pretune=tuple(dict(m=m, n=n, k=k, dtype=dt)

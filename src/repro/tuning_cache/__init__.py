@@ -35,7 +35,9 @@ from repro.tuning_cache.service.client import ClientPolicy, ServiceClient
 from repro.tuning_cache.store import (CacheStats, DiskStore, TuningDatabase,
                                       TuningRecord)
 from repro.tuning_cache import registry
-from repro.tuning_cache.registry import (TuningProblem, clear_dispatch_memo,
+from repro.tuning_cache.registry import (ENV_MODEL, MODEL_KINDS,
+                                         TuningProblem, clear_dispatch_memo,
+                                         default_model_kind,
                                          dispatch_key, freeze, frozen_lookup,
                                          frozen_table, get_problem,
                                          invalidate_kernel, is_frozen,
@@ -43,7 +45,8 @@ from repro.tuning_cache.registry import (TuningProblem, clear_dispatch_memo,
                                          normalize_signature,
                                          on_dispatch_memo_clear, rank_space,
                                          register, register_entry,
-                                         registered, thaw, unregister)
+                                         registered, set_default_model,
+                                         thaw, unregister)
 
 __all__ = [
     "CacheKey", "MODEL_VERSION", "canonical_json", "fingerprint_spec",
@@ -52,6 +55,7 @@ __all__ = [
     "normalize_signature", "on_dispatch_memo_clear", "rank_space",
     "register", "register_entry", "registered", "unregister",
     "invalidate_kernel", "dispatch_key",
+    "ENV_MODEL", "MODEL_KINDS", "default_model_kind", "set_default_model",
     "freeze", "thaw", "is_frozen", "frozen_lookup", "frozen_table",
     "get_default_db", "set_default_db", "reset_default_db", "pretuned_dir",
     "pretuned_path", "warm_pretuned",

@@ -156,6 +156,11 @@ def main(argv: Optional[List[str]] = None) -> int:
     p_tune.add_argument("--target", default=None,
                         help="hardware target name (default: the "
                              "process-default target)")
+    p_tune.add_argument("--model", default=None,
+                        choices=("eq6", "pipeline"),
+                        help="cost-model tier to rank under (default: "
+                             "the kernel's declared kind, else the "
+                             "process default — see DESIGN.md §16)")
 
     p_pre = add_sub("pretune",
                     help="sweep the default shape grid over every "
@@ -174,10 +179,17 @@ def main(argv: Optional[List[str]] = None) -> int:
     p_pre.add_argument("--all-targets", action="store_true",
                        help=f"pretune every shipped target "
                             f"{SHIPPED_TARGETS} in one run")
+    p_pre.add_argument("--model", default=None,
+                       choices=("eq6", "pipeline"),
+                       help="cost-model tier to rank the sweep under "
+                            "(default: each kernel's declared kind, "
+                            "else the process default)")
     p_pre.add_argument("--verify", action="store_true",
                        help="regenerate and diff bit-for-bit against "
-                            "the shipped JSONL instead of writing; "
-                            "exit 1 on any mismatch")
+                            "the shipped JSONL instead of writing "
+                            "(and report which cost model produced "
+                            "each shipped record); exit 1 on any "
+                            "mismatch")
     p_pre.add_argument("--config", action="append", default=[],
                        metavar="ARCH",
                        help="graph-level pretune: enumerate every "
@@ -241,7 +253,8 @@ def main(argv: Optional[List[str]] = None) -> int:
         except (KeyError, TypeError) as e:
             raise SystemExit(f"error: {e.args[0] if e.args else e}")
         spec = resolve_target(args.target)
-        params = lookup_or_tune(args.kernel, db=db, spec=spec, **sig)
+        params = lookup_or_tune(args.kernel, db=db, spec=spec,
+                                model=args.model, **sig)
         print(f"tuned [{spec.name}] {args.kernel} {sig} -> {params} "
               f"(registered kernels: {registered()})")
     elif args.cmd == "pretune":
@@ -297,7 +310,8 @@ def main(argv: Optional[List[str]] = None) -> int:
             mem = TuningDatabase()
             t0 = time.perf_counter()
             for kernel_id, sig in cases:
-                params = lookup_or_tune(kernel_id, db=mem, spec=spec, **sig)
+                params = lookup_or_tune(kernel_id, db=mem, spec=spec,
+                                        model=args.model, **sig)
                 if not args.verify:
                     print(f"[{spec.name}] {kernel_id:<16} {sig} -> {params}")
             dt = time.perf_counter() - t0
@@ -305,9 +319,19 @@ def main(argv: Optional[List[str]] = None) -> int:
             if args.verify:
                 shipped = args.out or pretuned_path(spec)
                 ok, why = _diff_shipped(shipped, text)
+                # every record's cache key carries the fingerprint of
+                # the model that ranked it — surface the census so a
+                # shipped grid's provenance is auditable at a glance
+                census: Dict[str, int] = {}
+                for rec in mem.records():
+                    m = json.loads(rec.key.signature).get("model", "?")
+                    census[m] = census.get(m, 0) + 1
+                by_model = ", ".join(f"{m} x{c}"
+                                     for m, c in sorted(census.items()))
                 print(f"[{spec.name}] verify {len(cases)} instances in "
                       f"{dt*1e3:.0f} ms against {shipped}: "
-                      f"{'OK' if ok else 'MISMATCH (' + why + ')'}")
+                      f"{'OK' if ok else 'MISMATCH (' + why + ')'} "
+                      f"(models: {by_model})")
                 if not ok:
                     failures.append(spec.name)
                 continue

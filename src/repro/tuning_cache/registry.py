@@ -46,6 +46,7 @@ import dataclasses
 import inspect
 import json
 import math
+import os
 import threading
 from typing import Any, Callable, Dict, List, Optional, Tuple, Union
 
@@ -53,6 +54,7 @@ import numpy as np
 
 from repro.core.hw import (ChipSpec, GPU_TABLE, GpuSpec, TPU_TABLE, TpuSpec,
                            resolve_target)
+from repro.core.pipeline import PipelineModel, pipeline_model
 from repro.core.predict import CostModel, default_cuda_model, \
     default_tpu_model, static_times_batch
 from repro.core.target import (on_default_target_change, unscoped_default,
@@ -69,7 +71,17 @@ __all__ = ["TuningProblem", "register", "register_entry", "unregister",
            "get_problem", "registered", "rank_space", "lookup_or_tune",
            "clear_dispatch_memo", "on_dispatch_memo_clear", "reset_models",
            "freeze", "thaw", "is_frozen", "frozen_lookup", "frozen_table",
-           "dispatch_memo_keys"]
+           "dispatch_memo_keys",
+           "MODEL_KINDS", "ENV_MODEL", "default_model_kind",
+           "set_default_model"]
+
+# The selectable cost-model tiers (DESIGN.md §16): "eq6" is the paper's
+# CPI-linear model (the vectorized SoA path), "pipeline" the
+# scoreboard-simulation reranker layered on top of it.
+MODEL_KINDS: Tuple[str, ...] = ("eq6", "pipeline")
+
+# Environment override for the process-default model kind.
+ENV_MODEL = "REPRO_TUNING_MODEL"
 
 
 @dataclasses.dataclass
@@ -89,6 +101,11 @@ class TuningProblem:
     # preferred streaming chunk for rank_space (None: DEFAULT_CHUNK) —
     # declarations with very wide rows can lower it to cap peak memory
     chunk_size: Optional[int] = None
+    # optional per-config instruction-stream hook for the pipeline tier:
+    # ``schedule(params)`` returns what `repro.core.pipeline.as_stream`
+    # accepts (an InstructionStream or (class, units[, dep]) rows).
+    # None: the stream is synthesized from the 7-feature mix.
+    schedule: Optional[Callable[[Params], Any]] = None
 
 
 class _FactoryEntry:
@@ -247,7 +264,15 @@ def rank_space(problem: TuningProblem, model: CostModel, *,
 
     Returns ``(params, predicted seconds, rows scored)``; raises
     ``ValueError`` when constraints eliminate every configuration.
+
+    A `repro.core.pipeline.PipelineModel` routes through the two-stage
+    reranker instead: its Eq. 6 ``base`` produces the top-K shortlist
+    (same streamed scoring as above), then the scoreboard simulator
+    reranks only those K candidates.
     """
+    if isinstance(model, PipelineModel):
+        return _rank_space_pipeline(problem, model, chunk_size=chunk_size,
+                                    workers=workers)
     batch = getattr(problem, "static_info_batch", None)
     if batch is None:
         pts = problem.space.enumerate()
@@ -294,6 +319,89 @@ def rank_space(problem: TuningProblem, model: CostModel, *,
     return best[2], best[0], scored
 
 
+def _rank_space_pipeline(problem: TuningProblem, model: PipelineModel, *,
+                         chunk_size: Optional[int] = None,
+                         workers: Optional[int] = None
+                         ) -> Tuple[Params, float, int]:
+    """Two-stage rank: Eq. 6 shortlist, scoreboard rerank (DESIGN.md §16).
+
+    Stage 1 runs the *base* model over the whole space exactly like the
+    plain path, but keeps the top ``model.keep_n`` rows instead of one —
+    merged across chunks on ``(time, flat index)``, the stable-argsort
+    order of the materialized lattice, so the shortlist is bit-identical
+    for any chunk size or worker count.  Stage 2 builds the scalar
+    static info for each shortlisted config (at most K objects — the
+    SoA path stays object-free) and prices it with `simulate`; the
+    winner is the lexicographic minimum of ``(pipeline time, base time,
+    flat index)``, deterministic by the same argument.  An
+    all-infeasible space resolves to row 0 with +inf, matching the
+    plain path.
+    """
+    space = problem.space
+    base = model.base
+    cap = max(int(model.keep_n), 1)
+    batch = getattr(problem, "static_info_batch", None)
+
+    if batch is None:
+        pts = space.enumerate()
+        if not pts:
+            raise ValueError("search space has no feasible configurations")
+        infos = [problem.static_info(p) for p in pts]
+        times = np.asarray(static_times_batch(infos, base),
+                           dtype=np.float64)
+        scored = len(pts)
+        sel = np.lexsort((np.arange(scored), times))[:cap]
+        short = [(float(times[i]), int(i), pts[int(i)]) for i in sel]
+    else:
+        chunk = (chunk_size or getattr(problem, "chunk_size", None)
+                 or DEFAULT_CHUNK)
+
+        def score(lat) -> Tuple[int, Optional[np.ndarray],
+                                Optional[np.ndarray]]:
+            if lat.size == 0:
+                return 0, None, None
+            info = batch(lat.columns)
+            times = static_times_batch(None, base, F=info.F,
+                                       pipe=info.pipe,
+                                       feasible=info.feasible)
+            g = lat.offsets if lat.offsets is not None \
+                else np.arange(lat.size, dtype=np.int64)
+            sel = np.lexsort((g, times))[:cap]
+            return lat.size, times[sel], np.asarray(g)[sel]
+
+        chunks = space.iter_lattice(chunk)
+        if workers is not None and workers > 1:
+            results = _map_bounded(score, chunks, workers)
+        else:
+            results = map(score, chunks)
+        scored = 0
+        best_t = np.empty(0, dtype=np.float64)
+        best_g = np.empty(0, dtype=np.int64)
+        for n, t, g in results:
+            scored += n
+            if n == 0:
+                continue
+            t_all = np.concatenate((best_t, t))
+            g_all = np.concatenate((best_g, g))
+            sel = np.lexsort((g_all, t_all))[:cap]
+            best_t, best_g = t_all[sel], g_all[sel]
+        if scored == 0:
+            raise ValueError("search space has no feasible configurations")
+        short = [(float(tv), int(gv), space.from_flat(int(gv)))
+                 for tv, gv in zip(best_t, best_g)]
+
+    sched = getattr(problem, "schedule", None)
+    best: Optional[Tuple[float, float, int, Params]] = None
+    for base_t, g, params in short:
+        info = problem.static_info(params)
+        t = model.time_info(info, schedule=sched(params) if sched else None)
+        cand = (float(t), base_t, g, params)
+        if best is None or cand[:3] < best[:3]:
+            best = cand
+    assert best is not None    # short is non-empty by construction
+    return best[3], best[0], scored
+
+
 def _map_bounded(fn: Callable, items, workers: int):
     """`map(fn, items)` on a thread pool with at most ``2*workers``
     futures in flight (so a lazy generator is never drained eagerly),
@@ -327,18 +435,23 @@ def _map_bounded(fn: Callable, items, workers: int):
 # there would put a contended acquire on every repeat trace.
 _models_lock = threading.Lock()
 
-_DEFAULT_MODELS: Dict[str, CostModel] = {}
+# (spec fingerprint, model kind) -> CostModel | PipelineModel
+_DEFAULT_MODELS: Dict[Tuple[str, str], Any] = {}
 
 
 class _MemoShard:
     """One kernel's slice of the live warm-dispatch memo.
 
-    Entries: ``(mode, spec fingerprint, sig key) -> (db generation,
-    params dict)`` where the sig key is the entry's binder-canonical
-    value tuple (so every valid spelling of a signature shares one
-    entry), or ``("#raw", sorted items)`` for entries whose declaration
-    is not binder-compilable.  Each shard has its own insert lock —
-    concurrent dispatch of *different* kernels never contends.
+    Entries: ``(mode, spec fingerprint, sig key, model kind) ->
+    (db generation, params dict)`` where the sig key is the entry's
+    binder-canonical value tuple (so every valid spelling of a
+    signature shares one entry), or ``("#raw", sorted items)`` for
+    entries whose declaration is not binder-compilable, and the model
+    kind is the entry's effective cost-model tier (``"eq6"`` or
+    ``"pipeline"``) at insert time — a `set_default_model` switch
+    re-keys instead of re-serving the previous tier's params.  Each
+    shard has its own insert lock — concurrent dispatch of *different*
+    kernels never contends.
     """
 
     __slots__ = ("lock", "entries")
@@ -371,9 +484,9 @@ def _shard(kernel_id: str) -> _MemoShard:
 
 
 def dispatch_memo_keys() -> List[Tuple]:
-    """Flat ``(kernel_id, mode, spec_fingerprint, sig_key)`` view of
-    every live memo entry — introspection for tests and tooling; the
-    memo itself is sharded per kernel_id."""
+    """Flat ``(kernel_id, mode, spec_fingerprint, sig_key, model_kind)``
+    view of every live memo entry — introspection for tests and
+    tooling; the memo itself is sharded per kernel_id."""
     out: List[Tuple] = []
     for kid, shard in list(_DISPATCH_MEMO.items()):
         with shard.lock:
@@ -458,21 +571,75 @@ def clear_dispatch_memo() -> None:
         hook()
 
 
-def _model_for(spec: ChipSpec) -> CostModel:
-    # memoized on the full-field fingerprint: a modified spec that keeps
-    # the default name must still get its own rate coefficients.  The
-    # fast path is a lock-free probe; the build is double-checked under
-    # the module lock so concurrent cold tunes share one model instance.
-    fp = fingerprint_spec(spec)
-    model = _DEFAULT_MODELS.get(fp)
+# Resolved process-default model kind; None = not yet read from the
+# environment.  Mutated only via set_default_model (tests, CLI) — the
+# dispatch fast path reads the cached value without a lock.
+_model_kind: Optional[str] = None
+
+
+def _check_model_kind(kind: str) -> str:
+    if kind not in MODEL_KINDS:
+        raise ValueError(f"unknown tuning model {kind!r}; "
+                         f"expected one of {MODEL_KINDS}")
+    return kind
+
+
+def default_model_kind() -> str:
+    """The process-default model kind: `set_default_model`'s value, else
+    ``REPRO_TUNING_MODEL`` (read once), else ``"eq6"``."""
+    global _model_kind
+    kind = _model_kind
+    if kind is None:
+        raw = os.environ.get(ENV_MODEL, "").strip().lower()
+        kind = _check_model_kind(raw) if raw else "eq6"
+        _model_kind = kind
+    return kind
+
+
+def set_default_model(kind: Optional[str]) -> str:
+    """Set the process-default model kind (``None`` re-reads the
+    environment on next use).  Thaws the frozen dispatch tier: frozen
+    tables bake in each record's model fingerprint check, so answers
+    frozen under the old kind must not survive the switch.  Returns the
+    now-effective kind."""
+    global _model_kind
+    if kind is not None:
+        kind = _check_model_kind(str(kind).strip().lower())
+    thaw()
+    with _models_lock:
+        _model_kind = kind
+    return default_model_kind()
+
+
+def _kind_of(entry: Any) -> str:
+    """Effective model kind for one registry entry: the declaration's
+    ``model=`` when set (`KernelSpec.model`), else the process
+    default.  Duck-typed — legacy `_FactoryEntry` has no ``model``."""
+    kind = getattr(entry, "model", None)
+    return kind if kind is not None else default_model_kind()
+
+
+def _model_for(spec: ChipSpec, kind: Optional[str] = None):
+    # memoized on (full-field fingerprint, kind): a modified spec that
+    # keeps the default name must still get its own rate coefficients.
+    # The fast path is a lock-free probe; the build is double-checked
+    # under the module lock so concurrent cold tunes share one model
+    # instance.  kind=None (the historical single-argument call) means
+    # the process default.
+    if kind is None:
+        kind = default_model_kind()
+    mk = (fingerprint_spec(spec), kind)
+    model = _DEFAULT_MODELS.get(mk)
     if model is None:
         with _models_lock:
-            model = _DEFAULT_MODELS.get(fp)
+            model = _DEFAULT_MODELS.get(mk)
             if model is None:
-                model = (default_cuda_model(spec)
-                         if isinstance(spec, GpuSpec)
-                         else default_tpu_model(spec, mode="max"))
-                _DEFAULT_MODELS[fp] = model
+                base = (default_cuda_model(spec)
+                        if isinstance(spec, GpuSpec)
+                        else default_tpu_model(spec, mode="max"))
+                model = pipeline_model(spec, base=base) \
+                    if kind == "pipeline" else base
+                _DEFAULT_MODELS[mk] = model
     return model
 
 
@@ -555,7 +722,8 @@ def _build_frozen_tables(db: TuningDatabase, gen: int
             sig = json.loads(rec.key.signature)
         except ValueError:
             continue
-        if sig.pop("model", None) != _model_for(spec).fingerprint():
+        kind = _kind_of(_REGISTRY.get(rec.key.kernel_id))
+        if sig.pop("model", None) != _model_for(spec, kind).fingerprint():
             continue
         # Key extras ride in the stored signature but are not binder
         # axes: pop and require an exact match with the entry's CURRENT
@@ -583,8 +751,9 @@ def _build_frozen_tables(db: TuningDatabase, gen: int
             continue                    # raw-keyed shard: not freezable
         with shard.lock:
             entries = list(shard.entries.items())
-        for (mode, fp, vals), (g, params) in entries:
-            if g != gen:
+        cur_kind = _kind_of(_REGISTRY.get(kid))
+        for (mode, fp, vals, k), (g, params) in entries:
+            if g != gen or k != cur_kind:
                 continue
             size += insert(kid, mode, fp, vals, params)
 
@@ -707,7 +876,7 @@ _tc = None   # the repro.tuning_cache package, bound on first dispatch
 def lookup_or_tune(kernel_id: str, *,
                    spec: Union[str, ChipSpec, None] = None,
                    mode: str = "static",
-                   model: Optional[CostModel] = None,
+                   model: Union[CostModel, str, None] = None,
                    db: Optional[TuningDatabase] = None,
                    **signature: Any) -> Dict[str, Any]:
     """Resolve launch params for a kernel instance, cache-first.
@@ -727,8 +896,23 @@ def lookup_or_tune(kernel_id: str, *,
     skipping even key construction — warm dispatch is a single dict
     probe (and after :func:`freeze`, a lock-free frozen-table probe
     with no generation check at all).
+
+    ``model`` takes a `CostModel`/`PipelineModel` instance, a model
+    *kind* name from `MODEL_KINDS` (``"eq6"`` / ``"pipeline"`` — the
+    CLI ``--model`` spelling, resolved per spec like
+    ``@tuned_kernel(model=...)``), or ``None`` for the kernel's
+    declared kind under the process default.  The model's fingerprint
+    rides on the cache key, so records ranked under different tiers
+    never mix.
     """
-    if db is None and model is None:
+    kind: Optional[str] = None
+    if isinstance(model, str):
+        # a kind name is an *explicit* model request: same database
+        # semantics as passing the built model object (no memo, no
+        # service), just resolved per spec below.
+        kind = _check_model_kind(model)
+        model = None
+    if db is None and model is None and kind is None:
         fz = _FROZEN
         if fz is not None:
             probe = fz.tables.get((kernel_id, mode))
@@ -755,20 +939,26 @@ def lookup_or_tune(kernel_id: str, *,
         if spec.name not in db.warmed_targets:     # once per (db, target)
             _tc._warm_pretuned_spec(db, spec)
         # Only the all-default path consults the tuning service: an
-        # explicit model would key a digest the server (which ranks
-        # under ITS default model) can never answer.
-        use_service = model is None
-        if model is None:       # default db + default model: memo engages
+        # explicit model (or kind) would key a digest the server
+        # (which ranks under ITS default model) can never answer.
+        use_service = model is None and kind is None
+        if use_service:         # default db + default model: memo engages
             entry = _REGISTRY.get(kernel_id)
             binder = _binder_of(entry) if entry is not None else None
+            # the entry's effective model kind is part of the memo key:
+            # a set_default_model switch must re-key, not re-serve the
+            # previous tier's params
+            eff_kind = _kind_of(entry)
             try:
                 if binder is not None:
                     vals = binder.key(signature)
                     if vals is not None:   # canonical: all spellings share it
-                        memo_key = (mode, fingerprint_spec(spec), vals)
+                        memo_key = (mode, fingerprint_spec(spec), vals,
+                                    eff_kind)
                 elif entry is not None:    # not compilable: raw spelling
                     memo_key = (mode, fingerprint_spec(spec),
-                                ("#raw", tuple(sorted(signature.items()))))
+                                ("#raw", tuple(sorted(signature.items()))),
+                                eff_kind)
                 if memo_key is not None:
                     shard = _shard(kernel_id)
                     # generation read BEFORE the database consult: if a
@@ -780,7 +970,9 @@ def lookup_or_tune(kernel_id: str, *,
                         return hit[1].copy()
             except TypeError:       # unhashable signature value
                 memo_key = None
-    model = model or _model_for(spec)
+    if model is None:
+        model = _model_for(spec, kind if kind is not None
+                           else _kind_of(_REGISTRY.get(kernel_id)))
     signature = normalize_signature(kernel_id, signature)
     key = dispatch_key(kernel_id, spec=spec, mode=mode,
                        model_name=model.fingerprint(), signature=signature)

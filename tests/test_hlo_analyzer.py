@@ -27,6 +27,66 @@ def test_scan_trip_count_exact():
     assert mix.unknown_trip_loops == 0
 
 
+_COND_EXACT = """\
+HloModule trip_exact
+
+%cond (p.0: (s32[], f32[64])) -> pred[] {
+  %p.0 = (s32[], f32[64]) parameter(0)
+  %iv = s32[] get-tuple-element(%p.0), index=0
+  %limit = s32[] constant(16)
+  %junk = s32[] constant(999)
+  ROOT %lt = pred[] compare(%iv, %limit), direction=LT
+}
+
+%body (p.1: (s32[], f32[64])) -> (s32[], f32[64]) {
+  %p.1 = (s32[], f32[64]) parameter(0)
+  %iv.1 = s32[] get-tuple-element(%p.1), index=0
+  %one = s32[] constant(1)
+  %next = s32[] add(%iv.1, %one)
+  %x = f32[64] get-tuple-element(%p.1), index=1
+  %t = f32[64] tanh(%x)
+  ROOT %tup = (s32[], f32[64]) tuple(%next, %t)
+}
+
+ENTRY %main (a: f32[64]) -> f32[64] {
+  %a = f32[64] parameter(0)
+  %init = s32[] constant(0)
+  %tup.0 = (s32[], f32[64]) tuple(%init, %a)
+  %w = (s32[], f32[64]) while(%tup.0), condition=%cond, body=%body
+  ROOT %out = f32[64] get-tuple-element(%w), index=1
+}
+"""
+
+
+def test_trip_count_from_root_compare_not_max_constant():
+    # the bound is the compare feeding ROOT (16), not the larger
+    # unrelated constant(999) the old heuristic would have grabbed
+    mix = module_mix(_COND_EXACT)
+    assert mix.trans_flops == pytest.approx(16 * 64)
+    assert mix.unknown_trip_loops == 0
+
+
+def test_trip_count_fallback_flags_unknown():
+    # the compare is against a runtime value, so the exact path cannot
+    # recover a bound; the constant heuristic (5) applies but the loop
+    # is counted as unknown
+    text = _COND_EXACT.replace(
+        "ROOT %lt = pred[] compare(%iv, %limit), direction=LT",
+        "ROOT %lt = pred[] compare(%iv, %iv), direction=LT").replace(
+        "%limit = s32[] constant(16)",
+        "%limit = s32[] constant(5)").replace(
+        "%junk = s32[] constant(999)", "")
+    mix = module_mix(text)
+    assert mix.trans_flops == pytest.approx(5 * 64)
+    assert mix.unknown_trip_loops == 1
+
+
+def test_trip_count_le_direction_inclusive():
+    mix = module_mix(_COND_EXACT.replace("direction=LT", "direction=LE"))
+    assert mix.trans_flops == pytest.approx(17 * 64)
+    assert mix.unknown_trip_loops == 0
+
+
 def test_nested_scan_multiplies():
     def f(x):
         def outer(c, _):

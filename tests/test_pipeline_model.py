@@ -1,0 +1,389 @@
+"""Pipeline cost-model tier: ISA tables, scoreboard simulator, reranker.
+
+Hand-computed simulator cases use a synthetic `IsaTable` so every
+expected cycle count is derivable on paper; integration cases go
+through the real per-family tables and the registry's two-stage rank
+(DESIGN.md §16).
+"""
+import json
+import math
+
+import numpy as np
+import pytest
+
+import repro.kernels  # noqa: F401  (registers every @tuned_kernel)
+import repro.tuning_cache as tc
+from repro.core.hw import resolve_target
+from repro.core.isa import CLASSES, IsaOp, IsaTable, isa_table_for
+from repro.core.pipeline import (InstructionStream, StreamOp, as_stream,
+                                 simulate, stream_from_hlo,
+                                 synthesize_stream)
+from repro.core.predict import spearman
+from repro.core.target import use_target
+from repro.tuning_cache import (TuningDatabase, get_problem, lookup_or_tune,
+                                rank_space, registry)
+from repro.tuning_cache.cli import SHIPPED_TARGETS
+
+TPU = resolve_target("tpu-v5e")
+MM_SIG = dict(m=256, n=256, k=256, dtype="float32")
+
+
+# ---------------------------------------------------------------------------
+# ISA tables
+# ---------------------------------------------------------------------------
+
+ALL_TARGETS = SHIPPED_TARGETS + ("tpu-v4",)
+
+
+@pytest.mark.parametrize("target", ALL_TARGETS)
+def test_isa_table_complete(target):
+    table = isa_table_for(resolve_target(target))
+    assert table.clock_hz > 0
+    assert table.barrier_slots >= 1
+    assert table.provenance
+    for cls in CLASSES:
+        row = table.op(cls)
+        # never silently defaulted: every class priced with positive
+        # numbers and a documented provenance
+        assert row.work > 0, (target, cls)
+        assert row.issue > 0, (target, cls)
+        assert row.latency > 0, (target, cls)
+        assert row.provenance, (target, cls)
+
+
+def test_isa_fingerprints_distinct_and_stable():
+    fps = [isa_table_for(resolve_target(t)).fingerprint()
+           for t in ALL_TARGETS]
+    assert len(set(fps)) == len(fps)
+    for t, fp in zip(ALL_TARGETS, fps):
+        assert isa_table_for(resolve_target(t)).fingerprint() == fp
+
+
+def test_isa_unknown_class_raises():
+    with pytest.raises(KeyError, match="prices no class"):
+        isa_table_for(TPU).op("tensor-cores")
+
+
+def test_model_fingerprints_separate_tiers():
+    for target in ("tpu-v5e", "kepler-k20"):
+        spec = resolve_target(target)
+        eq6 = registry._model_for(spec, "eq6").fingerprint()
+        pipe = registry._model_for(spec, "pipeline").fingerprint()
+        assert eq6 != pipe
+        assert pipe.startswith("pipeline-")
+
+
+# ---------------------------------------------------------------------------
+# scoreboard simulator (hand-computed cases, synthetic table)
+# ---------------------------------------------------------------------------
+
+
+def _table(rows, *, barrier_slots=4):
+    ops = {cls: IsaOp(cls=cls, pipe=pipe, work=work, issue=issue,
+                      latency=lat, dual_issue=dual, yields=yields,
+                      barrier=barrier, provenance="test")
+           for cls, (pipe, work, issue, lat, dual, yields, barrier)
+           in rows.items()}
+    return IsaTable(family="test", clock_hz=1.0e9,
+                    barrier_slots=barrier_slots, ops=ops)
+
+
+def test_simulate_dependence_stall():
+    # mxu: pipe A, 1 cy issue, 10 cy latency, does NOT yield;
+    # vpu: pipe B, 1 cy issue, 2 cy latency.
+    t = _table({"mxu": ("A", 1.0, 1.0, 10.0, False, False, ""),
+                "vpu": ("B", 1.0, 1.0, 2.0, False, True, "")})
+    dep = InstructionStream((StreamOp("mxu", 4.0),
+                            StreamOp("vpu", 8.0, dep=0)), concurrency=2.0)
+    res = simulate(dep, t)
+    # producer result-ready = 3*1 + 10 = 13; consumer could issue at 4
+    # -> 9 stall cycles on pipe B, charged hard (producer doesn't
+    # yield): busy_max(8) + 9 = 17 beats t_end/c = 22/2.
+    assert res.cycles == pytest.approx(17.0)
+    assert res.stalls == {"B": pytest.approx(9.0)}
+    assert res.limiter == "B"
+    free = simulate(InstructionStream((StreamOp("mxu", 4.0),
+                                       StreamOp("vpu", 8.0)),
+                                      concurrency=2.0), t)
+    assert free.cycles == pytest.approx(8.0)
+    assert free.stalls == {}
+
+
+def test_simulate_dual_issue_pairing():
+    paired = _table({"ctrl": ("S", 1.0, 1.0, 1.0, True, False, ""),
+                     "reg": ("B", 1.0, 1.0, 1.0, True, False, "")})
+    serial = _table({"ctrl": ("S", 1.0, 1.0, 1.0, True, False, ""),
+                     "reg": ("B", 1.0, 1.0, 1.0, False, False, "")})
+    stream = InstructionStream((StreamOp("ctrl", 4.0), StreamOp("reg", 4.0)))
+    # both dual-issue on different pipes: the reg segment co-issues at
+    # the ctrl segment's start instead of after it
+    assert simulate(stream, paired).cycles == pytest.approx(4.0)
+    assert simulate(stream, serial).cycles == pytest.approx(8.0)
+
+
+def test_simulate_memory_barrier_slots():
+    rows = {"hbm": ("M", 1.0, 1.0, 100.0, False, True, "wr")}
+    stream = InstructionStream(tuple(StreamOp("hbm", 1.0)
+                                     for _ in range(3)))
+    # 2 slots: the third load waits for the oldest outstanding result
+    # (cycle 100), landing its own at 200
+    tight = simulate(stream, _table(rows, barrier_slots=2))
+    roomy = simulate(stream, _table(rows, barrier_slots=8))
+    assert tight.cycles == pytest.approx(200.0)
+    assert roomy.cycles == pytest.approx(102.0)
+    assert tight.limiter == "latency"
+
+
+def test_simulate_occupancy_interleave_and_saturation():
+    t = _table({"vpu": ("B", 1.0, 1.0, 20.0, False, True, "")})
+    stream = InstructionStream((StreamOp("vpu", 10.0),))
+    # single context: the trailing result latency is exposed
+    assert simulate(stream, t, concurrency=1).cycles == pytest.approx(29.0)
+    # 4 contexts hide it: issue-bound at 10 cycles
+    assert simulate(stream, t, concurrency=4,
+                    saturation=4).cycles == pytest.approx(10.0)
+    # below saturation, issue bandwidth stretches by c/sat (Eq. 2)
+    assert simulate(stream, t, concurrency=4,
+                    saturation=8).cycles == pytest.approx(20.0)
+    assert simulate(stream, t, concurrency=8,
+                    saturation=8).cycles == pytest.approx(10.0)
+
+
+def test_simulate_empty_stream():
+    res = simulate(InstructionStream(()), isa_table_for(TPU))
+    assert res.cycles == 0.0 and res.limiter == "empty"
+
+
+def test_simulate_iterations_scale():
+    t = _table({"vpu": ("B", 1.0, 1.0, 1.0, False, True, "")})
+    one = simulate(InstructionStream((StreamOp("vpu", 8.0),)), t)
+    many = simulate(InstructionStream((StreamOp("vpu", 8.0),),
+                                      iterations=5.0), t)
+    assert many.cycles == pytest.approx(5.0 * one.cycles)
+
+
+# ---------------------------------------------------------------------------
+# stream extraction
+# ---------------------------------------------------------------------------
+
+
+def test_synthesize_stream_deterministic_order_and_deps():
+    s = synthesize_stream({"mxu": 5.0, "hbm": 3.0, "ctrl": 1.0,
+                           "vpu": 0.0})
+    assert [op.cls for op in s.ops] == ["hbm", "mxu", "ctrl"]
+    assert s.ops[0].dep is None
+    assert s.ops[1].dep == 0          # mxu consumes the hbm stage
+    assert s.ops[2].dep is None
+
+
+def test_as_stream_validates_rows():
+    with pytest.raises(ValueError, match="unknown instruction class"):
+        as_stream([("simd", 1.0)])
+    with pytest.raises(ValueError, match="not an earlier row"):
+        as_stream([("mxu", 1.0, 0)])
+    s = as_stream([("hbm", 2.0), ("mxu", 4.0, 0)])
+    assert s.ops[1].dep == 0 and s.iterations == 1.0
+
+
+def test_matmul_schedule_hook():
+    from repro.kernels.matmul import _matmul_schedule
+    p = {"bm": 128, "bn": 128, "bk": 128}
+    rows = _matmul_schedule(p, m=512, n=512, k=512)
+    model = registry._model_for(TPU, "pipeline")
+    with use_target(TPU):
+        problem = get_problem("matmul", m=512, n=512, k=512,
+                              dtype="float32")
+        assert problem.schedule is not None
+        info = problem.static_info(p)
+    res = model.result_of(info, schedule=rows)
+    assert res is not None
+    assert math.isfinite(res.seconds) and res.seconds > 0
+    # the declared stream's contraction depends on the staged tiles
+    stream = as_stream(rows, info)
+    assert stream.iterations > 1 and stream.ops[2].dep == 1
+
+
+_WHILE_HLO = """\
+HloModule synthetic
+
+%cond (p.0: (s32[], f32[128])) -> pred[] {
+  %p.0 = (s32[], f32[128]) parameter(0)
+  %iv = s32[] get-tuple-element(%p.0), index=0
+  %limit = s32[] constant(16)
+  %junk = s32[] constant(999)
+  ROOT %lt = pred[] compare(%iv, %limit), direction=LT
+}
+
+%body (p.1: (s32[], f32[128])) -> (s32[], f32[128]) {
+  %p.1 = (s32[], f32[128]) parameter(0)
+  %iv.1 = s32[] get-tuple-element(%p.1), index=0
+  %one = s32[] constant(1)
+  %next = s32[] add(%iv.1, %one)
+  %x = f32[128] get-tuple-element(%p.1), index=1
+  %t = f32[128] tanh(%x)
+  ROOT %tup = (s32[], f32[128]) tuple(%next, %t)
+}
+
+ENTRY %main (a: f32[128]) -> f32[128] {
+  %a = f32[128] parameter(0)
+  %init = s32[] constant(0)
+  %tup.0 = (s32[], f32[128]) tuple(%init, %a)
+  %w = (s32[], f32[128]) while(%tup.0), condition=%cond, body=%body
+  ROOT %out = f32[128] get-tuple-element(%w), index=1
+}
+"""
+
+
+def test_stream_from_hlo_trip_scaled():
+    # the exact ROOT-compare bound (16) scales the body, not the
+    # distractor constant(999) the old max-constant heuristic grabbed
+    stream = stream_from_hlo(_WHILE_HLO)
+    trans = sum(op.units for op in stream.ops if op.cls == "trans")
+    assert trans == pytest.approx(16 * 128)
+
+
+# ---------------------------------------------------------------------------
+# two-stage rank: determinism + cache separation + frozen coherence
+# ---------------------------------------------------------------------------
+
+
+def test_rerank_deterministic_across_chunks_and_workers():
+    model = registry._model_for(TPU, "pipeline")
+    with use_target(TPU):
+        problem = get_problem("matmul", m=512, n=512, k=512,
+                              dtype="float32")
+        results = [rank_space(problem, model, chunk_size=cs, workers=w)
+                   for cs in (None, 7, 64) for w in (None, 4)]
+    first = results[0]
+    assert first[2] > 0
+    for other in results[1:]:
+        assert other == first
+
+
+def test_rerank_scalar_batch_parity():
+    model = registry._model_for(TPU, "pipeline")
+    with use_target(TPU):
+        problem = get_problem("matmul", **MM_SIG)
+        got = rank_space(problem, model)
+        scalar = tc.TuningProblem(space=problem.space,
+                                  static_info=problem.static_info,
+                                  schedule=problem.schedule)
+        got_scalar = rank_space(scalar, model)
+    assert got_scalar[0] == got[0]
+    assert got_scalar[1] == pytest.approx(got[1])
+
+
+def test_eq6_path_unchanged_by_pipeline_import():
+    # the plain model must still route through the one-stage SoA path
+    model = registry._model_for(TPU, "eq6")
+    with use_target(TPU):
+        problem = get_problem("matmul", **MM_SIG)
+        a = rank_space(problem, model)
+        b = rank_space(problem, model, chunk_size=11, workers=3)
+    assert a == b
+
+
+def test_cache_keys_separate_model_kinds():
+    mem = TuningDatabase()
+    p_eq6 = lookup_or_tune("matmul", db=mem, spec=TPU, **MM_SIG)
+    p_pipe = lookup_or_tune("matmul", db=mem, spec=TPU, model="pipeline",
+                            **MM_SIG)
+    assert len(mem) == 2          # distinct records, never a collision
+    fps = {json.loads(r.key.signature).get("model") for r in mem.records()}
+    assert len(fps) == 2
+    # repeat lookups are cache hits onto their own tier's record
+    assert lookup_or_tune("matmul", db=mem, spec=TPU, **MM_SIG) == p_eq6
+    assert lookup_or_tune("matmul", db=mem, spec=TPU, model="pipeline",
+                          **MM_SIG) == p_pipe
+    assert len(mem) == 2
+
+
+def test_unknown_model_kind_rejected():
+    with pytest.raises(ValueError, match="unknown tuning model"):
+        lookup_or_tune("matmul", db=TuningDatabase(), spec=TPU,
+                       model="oracle", **MM_SIG)
+
+
+def test_default_model_switch_thaws_and_rekeys():
+    tc.clear_dispatch_memo()
+    try:
+        lookup_or_tune("matmul", spec=TPU, **MM_SIG)
+        tc.freeze()
+        assert tc.is_frozen()
+        # switching the process default invalidates frozen answers
+        assert tc.set_default_model("pipeline") == "pipeline"
+        assert not tc.is_frozen()
+        lookup_or_tune("matmul", spec=TPU, **MM_SIG)
+        kinds = {k[-1] for k in registry.dispatch_memo_keys()
+                 if k[0] == "matmul"}
+        assert "pipeline" in kinds
+    finally:
+        tc.set_default_model(None)
+        tc.thaw()
+        tc.clear_dispatch_memo()
+
+
+def test_env_selects_default_kind(monkeypatch):
+    monkeypatch.setenv(tc.ENV_MODEL, "pipeline")
+    try:
+        tc.set_default_model(None)      # drop the cached read
+        assert tc.default_model_kind() == "pipeline"
+    finally:
+        monkeypatch.delenv(tc.ENV_MODEL)
+        tc.set_default_model(None)
+        assert tc.default_model_kind() == "eq6"
+
+
+def test_kernel_declared_kind(tmp_path):
+    from repro.kernels.api import divisors, tuned_kernel, unregister
+
+    @tuned_kernel("pipe_toy", space={"b": divisors("x", (8, 16, 32))},
+                  signature=lambda u, **_: dict(x=u.shape[0]),
+                  static_info=lambda p, *, x: dict(
+                      in_blocks=[(p["b"], 128)], out_blocks=[(p["b"], 128)],
+                      in_dtypes=["float32"], out_dtypes=["float32"],
+                      flops_per_step=np.asarray(p["b"],
+                                                dtype=np.float64) * 128.0,
+                      grid_steps=x // np.maximum(np.asarray(p["b"]), 1)),
+                  model="pipeline")
+    def pipe_toy(u, *, b=8):
+        return u
+
+    try:
+        mem = TuningDatabase()
+        lookup_or_tune("pipe_toy", db=mem, spec=TPU, x=64)
+        (rec,) = mem.records()
+        fp = json.loads(rec.key.signature)["model"]
+        assert fp.startswith("pipeline-")
+    finally:
+        unregister("pipe_toy")
+
+
+def test_declared_kind_validated():
+    from repro.kernels.api import divisors, tuned_kernel
+    with pytest.raises(ValueError, match="model must be one of"):
+        @tuned_kernel("bad_kind", space={"b": divisors("x", (8,))},
+                      signature=lambda u, **_: dict(x=u.shape[0]),
+                      static_info=lambda p, *, x: {},
+                      model="exact")
+        def bad(u, *, b=8):
+            return u
+
+
+# ---------------------------------------------------------------------------
+# spearman (the benchmark's scoring primitive)
+# ---------------------------------------------------------------------------
+
+
+def test_spearman_constant_vector_is_zero():
+    assert spearman([1.0, 1.0, 1.0], [1.0, 2.0, 3.0]) == 0.0
+    assert spearman([3, 1, 2], [7, 7, 7]) == 0.0
+    assert spearman([5, 5], [5, 5]) == 0.0
+
+
+def test_spearman_ties_average_ranks():
+    # scipy.stats.spearmanr([1,2,2,3],[1,2,3,4]) == 0.9486832980505138
+    assert spearman([1, 2, 2, 3], [1, 2, 3, 4]) == pytest.approx(
+        0.9486832980505138)
+    assert spearman([1, 2, 2, 3], [10, 20, 20, 30]) == pytest.approx(1.0)
+    assert spearman([1, 2, 2, 3], [30, 20, 20, 10]) == pytest.approx(-1.0)
